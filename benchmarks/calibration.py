@@ -1,0 +1,21 @@
+"""Paper Algorithm 2: greedy dynamic top-k calibration — recall vs k per
+layer and the chosen per-layer k at 99% target recall."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_toy_model
+
+
+def run():
+    cfg, params, routers, pol = get_toy_model()
+    rows = []
+    if pol.mlp_topk_blocks:
+        nb = cfg.d_ff // pol.neuron_block
+        for li, k in enumerate(pol.mlp_topk_blocks):
+            rows.append(("calibrated_topk_blocks", f"layer{li}", int(k)))
+            rows.append(("calibrated_density", f"layer{li}",
+                         round(k / nb, 3)))
+        rows.append(("calibrated_density_mean", "all",
+                     round(float(np.mean(pol.mlp_topk_blocks)) / nb, 3)))
+    return rows

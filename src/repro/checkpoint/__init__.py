@@ -1,0 +1,3 @@
+from repro.checkpoint.io import checkpoint_step, load_checkpoint, save_checkpoint
+
+__all__ = ["save_checkpoint", "load_checkpoint", "checkpoint_step"]

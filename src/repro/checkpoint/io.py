@@ -1,0 +1,46 @@
+"""Flat-key npz checkpointing for arbitrary param pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    data = np.load(path)
+    paths = jax.tree_util.tree_leaves_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        leaves.append(jnp.asarray(arr, leaf.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_step(path: str) -> int | None:
+    data = np.load(path)
+    return int(data["__step__"]) if "__step__" in data else None

@@ -1,0 +1,51 @@
+"""Arch registry: ``get_config(name)`` / ``get_smoke_config(name)``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (LayerSpec, MLAConfig, ModelConfig, MoEConfig,
+                                RWKVConfig, SSMConfig, Segment)
+from repro.configs.shapes import (LONG_CONTEXT_WINDOW, SHAPES, InputShape,
+                                  get_shape)
+
+# arch id -> module name
+_REGISTRY = {
+    "musicgen-medium":     "musicgen_medium",
+    "jamba-v0.1-52b":      "jamba_v0_1_52b",
+    "grok-1-314b":         "grok_1_314b",
+    "rwkv6-7b":            "rwkv6_7b",
+    "phi3-medium-14b":     "phi3_medium_14b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "internlm2-1.8b":      "internlm2_1_8b",
+    "deepseek-v3-671b":    "deepseek_v3_671b",
+    "qwen2-vl-7b":         "qwen2_vl_7b",
+    "llama3-8b":           "llama3_8b",
+    # the paper's own models
+    "opt-66b":             "opt_66b",
+    "opt-125m":            "opt_125m",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _REGISTRY if not k.startswith("opt-"))
+ALL_ARCHS = tuple(_REGISTRY)
+
+
+def _module(name: str):
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(f"repro.configs.{_REGISTRY[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke()
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig",
+    "LayerSpec", "Segment", "InputShape", "SHAPES", "get_shape",
+    "LONG_CONTEXT_WINDOW", "get_config", "get_smoke_config",
+    "ASSIGNED_ARCHS", "ALL_ARCHS",
+]

@@ -1,0 +1,207 @@
+"""Config system: model architecture configs and the arch registry.
+
+Every assigned architecture gets one file in this package defining
+``CONFIG`` (the exact published dims) and ``smoke()`` (a reduced variant of
+the same family for CPU tests). ``repro.configs.get_config(name)`` /
+``get_smoke_config(name)`` look them up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_ff: int                 # d_ff of each routed expert
+    num_shared: int = 0            # shared (always-on) experts
+    shared_ff: int = 0             # d_ff of the shared expert(s)
+    capacity_factor: float = 1.25
+    impl: str = "dispatch"         # "dispatch" (scatter+capacity) | "dense" (all experts, masked)
+    router_dtype: str = "float32"
+    # chunk the (E, C, d) expert GEMM over C to bound activation memory
+    # (0 = no chunking); used by large-token dry-run shapes
+    gemm_chunk: int = 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    absorb: bool = False           # absorbed decode (beyond-paper perf variant)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 style selective SSM (S6)."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0               # 0 => d_model // 16
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_size: int = 64
+    decay_lora: int = 64           # rank of the data-dependent decay LoRA
+    mix_lora: int = 32             # rank of the token-shift mix LoRA
+    gate_lora: int = 64
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One transformer layer = a sequence mixer + an FFN."""
+    mixer: str                     # "attn" | "mla" | "mamba" | "rwkv"
+    ffn: str                       # "dense" | "moe"
+
+
+@dataclass(frozen=True)
+class Segment:
+    """``cycles`` repetitions of ``pattern`` — scanned with stacked params."""
+    pattern: Tuple[LayerSpec, ...]
+    cycles: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.cycles
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                 # 0 for attention-free archs
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""               # citation ([arXiv:...] / [hf:...])
+
+    mlp_act: str = "swiglu"        # relu | gelu | swiglu | relu2
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    pos_emb: str = "rope"          # rope | mrope | learned | none
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+    logit_soft_cap: float = 0.0    # grok-style tanh soft-capping (0 = off)
+
+    # layer layout: list of segments; must sum to num_layers.
+    segments: Tuple[Segment, ...] = ()
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+
+    # modality stub: None | "audio" | "vlm".  When set, the model consumes
+    # precomputed frame/patch embeddings (B, S, d_model) from input_specs()
+    # instead of running a conv/ViT frontend (the one allowed stub).
+    embed_stub: Optional[str] = None
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # qwen2-vl M-RoPE split of head_dim//2
+
+    # runtime attention windowing (ring-buffer KV) — set for long_500k on
+    # full-attention archs; None = full causal attention.
+    sliding_window: Optional[int] = None
+
+    # deepseek-v3 multi-token prediction module (1 extra depth)
+    mtp: bool = False
+
+    # d_ff override for "dense" FFN layers when d_ff is the MoE expert size
+    # (deepseek-v3: routed experts 2048, first-3 dense layers 18432)
+    dense_ff: int = 0
+
+    # int8 KV cache (per-(b,g,slot) absmax scales) — beyond-paper feature:
+    # halves decode KV HBM traffic, multiplicative with head sparsity
+    kv_quant: bool = False
+
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if not self.segments:
+            object.__setattr__(
+                self, "segments",
+                (Segment(pattern=(LayerSpec("attn", "dense"),), cycles=self.num_layers),))
+        total = sum(s.num_layers for s in self.segments)
+        assert total == self.num_layers, (
+            f"{self.name}: segments cover {total} layers != num_layers={self.num_layers}")
+
+    # ---- derived ----
+    @property
+    def layer_specs(self) -> Tuple[LayerSpec, ...]:
+        out = []
+        for seg in self.segments:
+            for _ in range(seg.cycles):
+                out.extend(seg.pattern)
+        return tuple(out)
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    @property
+    def attn_layer_ids(self) -> Tuple[int, ...]:
+        return tuple(i for i, s in enumerate(self.layer_specs) if s.mixer in ("attn", "mla"))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included once)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += d * V
+        for spec in self.layer_specs:
+            n += 2 * d  # two norms
+            if spec.mixer == "attn":
+                n += d * self.num_heads * self.head_dim          # q
+                n += 2 * d * self.num_kv_heads * self.head_dim   # k, v
+                n += self.num_heads * self.head_dim * d          # o
+            elif spec.mixer == "mla":
+                m = self.mla
+                n += d * m.q_lora_rank + m.q_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                n += m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                n += self.num_heads * m.v_head_dim * d
+            elif spec.mixer == "mamba":
+                s = self.ssm
+                di = s.expand * d
+                dt = s.dt_rank or d // 16
+                n += d * 2 * di + di * s.d_conv + di * (dt + 2 * s.d_state) + dt * di + di * s.d_state + di + di * d
+            elif spec.mixer == "rwkv":
+                r = self.rwkv
+                n += 4 * d * d + d * d  # r,k,v,g,o
+                n += d * r.decay_lora * 2 + 5 * d * r.mix_lora * 2 + 2 * d  # loras + decay/bonus
+            if spec.ffn == "dense":
+                mats = 3 if self.mlp_act == "swiglu" else 2
+                n += mats * d * ff
+            else:
+                e = self.moe
+                mats = 3 if self.mlp_act in ("swiglu", "gelu_glu") else 2
+                n += e.num_experts * mats * d * e.expert_ff
+                n += e.num_shared * mats * d * (e.shared_ff or e.expert_ff)
+                n += d * e.num_experts  # router
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        e = self.moe
+        mats = 3 if self.mlp_act in ("swiglu", "gelu_glu") else 2
+        moe_layers = sum(1 for s in self.layer_specs if s.ffn == "moe")
+        all_e = moe_layers * e.num_experts * mats * self.d_model * e.expert_ff
+        act_e = moe_layers * e.top_k * mats * self.d_model * e.expert_ff
+        return full - all_e + act_e

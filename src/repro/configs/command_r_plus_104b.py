@@ -1,0 +1,18 @@
+"""Command R+ 104B [hf:CohereForAI/c4ai-command-r-v01] — dense GQA, no bias."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", arch_type="dense",
+    source="[hf:CohereForAI/c4ai-command-r-v01]",
+    num_layers=64, d_model=12288, num_heads=96, num_kv_heads=8, head_dim=128,
+    d_ff=33792, vocab_size=256000, mlp_act="swiglu", norm="layernorm",
+    pos_emb="rope", rope_theta=75000000.0, qkv_bias=False, mlp_bias=False,
+    tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="command-r-plus-104b-smoke", num_layers=2, d_model=384,
+        num_heads=12, num_kv_heads=2, head_dim=32, d_ff=768, vocab_size=512,
+        segments=())

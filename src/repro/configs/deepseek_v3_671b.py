@@ -1,0 +1,37 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437] — MLA, 1 shared + 256 routed top-8, MTP.
+
+d_ff=2048 is the routed-expert intermediate size; the first 3 layers use a
+dense FFN of 18432 (per the tech report).  MLA dims: q_lora 1536,
+kv_lora 512, qk_nope 128, qk_rope 64, v 128.
+"""
+from repro.configs.base import (LayerSpec, MLAConfig, ModelConfig, MoEConfig,
+                                Segment)
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", arch_type="moe", source="[arXiv:2412.19437]",
+    num_layers=61, d_model=7168, num_heads=128, num_kv_heads=128, head_dim=128,
+    d_ff=2048, dense_ff=18432, vocab_size=129280, mlp_act="swiglu",
+    norm="rmsnorm", pos_emb="rope", rope_theta=10000.0, mtp=True,
+    segments=(
+        Segment(pattern=(LayerSpec("mla", "dense"),), cycles=3),
+        Segment(pattern=(LayerSpec("mla", "moe"),), cycles=58),
+    ),
+    moe=MoEConfig(num_experts=256, top_k=8, expert_ff=2048,
+                  num_shared=1, shared_ff=2048),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="deepseek-v3-671b-smoke", num_layers=2, d_model=256, num_heads=4,
+        num_kv_heads=4, head_dim=32, d_ff=128, vocab_size=512, mtp=True,
+        segments=(
+            Segment(pattern=(LayerSpec("mla", "dense"),), cycles=1),
+            Segment(pattern=(LayerSpec("mla", "moe"),), cycles=1),
+        ),
+        moe=MoEConfig(num_experts=4, top_k=2, expert_ff=128,
+                      num_shared=1, shared_ff=128),
+        mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=32,
+                      qk_rope_head_dim=16, v_head_dim=32))

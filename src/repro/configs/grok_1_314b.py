@@ -1,0 +1,19 @@
+"""Grok-1 314B [hf:xai-org/grok-1] — MoE 8 experts top-2, GQA 48H/8kv."""
+from repro.configs.base import LayerSpec, ModelConfig, MoEConfig, Segment
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", arch_type="moe", source="[hf:xai-org/grok-1]",
+    num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab_size=131072, mlp_act="gelu_glu", norm="rmsnorm",
+    pos_emb="rope", rope_theta=10000.0, logit_soft_cap=30.0,
+    segments=(Segment(pattern=(LayerSpec("attn", "moe"),), cycles=64),),
+    moe=MoEConfig(num_experts=8, top_k=2, expert_ff=32768),
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="grok-1-314b-smoke", num_layers=2, d_model=256, num_heads=8,
+        num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512,
+        segments=(Segment(pattern=(LayerSpec("attn", "moe"),), cycles=2),),
+        moe=MoEConfig(num_experts=4, top_k=2, expert_ff=512))

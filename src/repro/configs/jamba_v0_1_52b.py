@@ -1,0 +1,33 @@
+"""Jamba-v0.1 52B [arXiv:2403.19887] — Mamba+attention 1:7, MoE 16e top-2.
+
+Layout (per the paper): blocks of 8 layers with attention at in-block index
+4, MoE replacing the dense FFN on every other layer (odd in-block indices).
+"""
+from repro.configs.base import (LayerSpec, ModelConfig, MoEConfig, SSMConfig,
+                                Segment)
+
+_PATTERN = tuple(
+    LayerSpec(mixer=("attn" if i == 4 else "mamba"),
+              ffn=("moe" if i % 2 == 1 else "dense"))
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", arch_type="hybrid", source="[arXiv:2403.19887]",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=65536, mlp_act="swiglu", norm="rmsnorm",
+    pos_emb="none",  # jamba uses no positional encoding (Mamba provides order)
+    segments=(Segment(pattern=_PATTERN, cycles=4),),
+    moe=MoEConfig(num_experts=16, top_k=2, expert_ff=14336),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+)
+
+
+def smoke() -> ModelConfig:
+    pattern = (LayerSpec("mamba", "dense"), LayerSpec("attn", "moe"))
+    return CONFIG.replace(
+        name="jamba-v0.1-52b-smoke", num_layers=2, d_model=256, num_heads=8,
+        num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512,
+        segments=(Segment(pattern=pattern, cycles=1),),
+        moe=MoEConfig(num_experts=4, top_k=2, expert_ff=512),
+        ssm=SSMConfig(d_state=8, d_conv=4, expand=2))

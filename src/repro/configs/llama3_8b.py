@@ -1,0 +1,15 @@
+"""LLaMA-3-8B [arXiv:2407.21783] — dense GQA, 128k vocab."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", arch_type="dense", source="[arXiv:2407.21783]",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=128256, mlp_act="swiglu", norm="rmsnorm",
+    pos_emb="rope", rope_theta=500000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="llama3-8b-smoke", num_layers=2, d_model=256, num_heads=8,
+        num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512, segments=())

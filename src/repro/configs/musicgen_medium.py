@@ -1,0 +1,20 @@
+"""MusicGen-medium [arXiv:2306.05284] — decoder-only over EnCodec tokens.
+
+kv=24 == num_heads ⇒ effectively MHA.  The EnCodec conv codec / mel frontend
+is the allowed stub: input_specs() provides precomputed frame embeddings.
+ReLU FFN (OPT-like) ⇒ the paper's MLP neuron sparsity applies too.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", arch_type="audio", source="[arXiv:2306.05284]",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab_size=2048, mlp_act="relu", norm="layernorm",
+    pos_emb="learned", embed_stub="audio",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="musicgen-medium-smoke", num_layers=2, d_model=192, num_heads=6,
+        num_kv_heads=6, head_dim=32, d_ff=384, vocab_size=256, segments=())

@@ -1,0 +1,16 @@
+"""OPT-125M-like toy (ReLU, MHA) — CPU-runnable model for examples/benchmarks."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-125m", arch_type="dense", source="[arXiv:2205.01068]",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab_size=2048, mlp_act="relu", norm="layernorm",
+    pos_emb="learned", qkv_bias=True, mlp_bias=True, dtype="float32",
+    param_dtype="float32",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="opt-125m-smoke", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=4, head_dim=32, d_ff=512, vocab_size=512, segments=())

@@ -1,0 +1,20 @@
+"""OPT-66B [arXiv:2205.01068] — the paper's own primary model (ReLU, MHA).
+
+Polar Sparsity's headline numbers (2.2x decode throughput, critical
+attention density 0.3) are on this model; both MLP neuron sparsity and head
+sparsity apply.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-66b", arch_type="dense", source="[arXiv:2205.01068]",
+    num_layers=64, d_model=9216, num_heads=72, num_kv_heads=72, head_dim=128,
+    d_ff=36864, vocab_size=50272, mlp_act="relu", norm="layernorm",
+    pos_emb="learned", qkv_bias=True, mlp_bias=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="opt-66b-smoke", num_layers=2, d_model=256, num_heads=8,
+        num_kv_heads=8, head_dim=32, d_ff=1024, vocab_size=512, segments=())

@@ -1,0 +1,15 @@
+"""Phi-3-medium-14B [arXiv:2404.14219] — dense, RoPE, SwiGLU, GQA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b", arch_type="dense", source="[arXiv:2404.14219]",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=10, head_dim=128,
+    d_ff=17920, vocab_size=100352, mlp_act="swiglu", norm="rmsnorm",
+    pos_emb="rope", rope_theta=10000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="phi3-medium-14b-smoke", num_layers=2, d_model=320, num_heads=10,
+        num_kv_heads=2, head_dim=32, d_ff=640, vocab_size=512, segments=())

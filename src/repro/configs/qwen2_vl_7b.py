@@ -1,0 +1,22 @@
+"""Qwen2-VL-7B [arXiv:2409.12191] — VLM backbone, M-RoPE, dynamic resolution.
+
+The vision encoder (ViT + projector) is the allowed stub: input_specs()
+provides precomputed patch embeddings (B, S, d_model) plus 3D M-RoPE
+position ids (t, h, w).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", arch_type="vlm", source="[arXiv:2409.12191]",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064, mlp_act="swiglu", norm="rmsnorm",
+    pos_emb="mrope", rope_theta=1000000.0, qkv_bias=True,
+    embed_stub="vlm", mrope_sections=(16, 24, 24),
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="qwen2-vl-7b-smoke", num_layers=2, d_model=256, num_heads=4,
+        num_kv_heads=2, head_dim=64, d_ff=512, vocab_size=512,
+        mrope_sections=(8, 12, 12), segments=())

@@ -1,0 +1,24 @@
+"""RWKV-6 (Finch) 7B [arXiv:2404.05892] — attention-free, data-dependent decay.
+
+64 time-mix heads of size 64.  Channel-mix uses squared ReLU ⇒ the paper's
+MLP neuron sparsity applies; softmax attention is absent, so SHA does not
+(DESIGN §4) — we instead offer WKV head sparsity as a beyond-paper extension.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, RWKVConfig, Segment
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", arch_type="ssm", source="[arXiv:2404.05892]",
+    num_layers=32, d_model=4096, num_heads=0, num_kv_heads=0, head_dim=64,
+    d_ff=14336, vocab_size=65536, mlp_act="relu2", norm="layernorm",
+    pos_emb="none",
+    segments=(Segment(pattern=(LayerSpec("rwkv", "dense"),), cycles=32),),
+    rwkv=RWKVConfig(head_size=64, decay_lora=64, mix_lora=32, gate_lora=64),
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="rwkv6-7b-smoke", num_layers=2, d_model=256, head_dim=32,
+        d_ff=512, vocab_size=512,
+        segments=(Segment(pattern=(LayerSpec("rwkv", "dense"),), cycles=2),),
+        rwkv=RWKVConfig(head_size=32, decay_lora=16, mix_lora=8, gate_lora=16))

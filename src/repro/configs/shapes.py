@@ -1,0 +1,27 @@
+"""Assigned input shapes and which step-fn each one lowers."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k":    InputShape("train_4k",    seq_len=4_096,   global_batch=256, kind="train"),
+    "prefill_32k": InputShape("prefill_32k", seq_len=32_768,  global_batch=32,  kind="prefill"),
+    "decode_32k":  InputShape("decode_32k",  seq_len=32_768,  global_batch=128, kind="decode"),
+    "long_500k":   InputShape("long_500k",   seq_len=524_288, global_batch=1,   kind="decode"),
+}
+
+# Ring-buffer window used by full-attention archs at long_500k (DESIGN §5).
+LONG_CONTEXT_WINDOW = 32_768
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]

@@ -1,0 +1,19 @@
+"""Polar Sparsity core: routers, selection, calibration, policy."""
+from repro.core.calibration import (calibrate_layers, greedy_topk_for_recall,
+                                    recall_at_k)
+from repro.core.policy import (CRITICAL_DENSITY, MLP_SPARSE_ARCHS, PolarPolicy,
+                               default_policy, dense_policy)
+from repro.core.routers import (apply_head_router, apply_mlp_router,
+                                init_head_router, init_mlp_router)
+from repro.core.selection import (batch_head_index, head_mask_from_logits,
+                                  true_active_blocks, union_neuron_blocks,
+                                  union_sparsity)
+
+__all__ = [
+    "PolarPolicy", "default_policy", "dense_policy", "CRITICAL_DENSITY",
+    "MLP_SPARSE_ARCHS", "init_mlp_router", "apply_mlp_router",
+    "init_head_router", "apply_head_router", "batch_head_index",
+    "head_mask_from_logits", "union_neuron_blocks", "true_active_blocks",
+    "union_sparsity", "recall_at_k", "greedy_topk_for_recall",
+    "calibrate_layers",
+]

@@ -1,0 +1,50 @@
+"""Algorithm 2 — greedy per-layer top-k selection to meet a target recall.
+
+Offline: given router logits and ground-truth activations on a calibration
+set, grow k until predicted top-k covers >= target recall of the truly
+active neurons (blocks).  The paper runs this per layer per model (99%
+recall); per-layer k's feed PolarPolicy.mlp_topk_blocks.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def recall_at_k(logits: np.ndarray, active: np.ndarray, k: int) -> float:
+    """logits (T, NB) float, active (T, NB) bool -> mean recall of top-k."""
+    T, NB = logits.shape
+    k = min(k, NB)
+    top = np.argpartition(-logits, kth=k - 1, axis=-1)[:, :k]
+    pred = np.zeros_like(active, dtype=bool)
+    pred[np.arange(T)[:, None], top] = True
+    n_act = active.sum(axis=-1)
+    hit = (pred & active).sum(axis=-1)
+    with np.errstate(invalid="ignore"):
+        r = np.where(n_act > 0, hit / np.maximum(n_act, 1), 1.0)
+    return float(r.mean())
+
+
+def greedy_topk_for_recall(logits: np.ndarray, active: np.ndarray,
+                           target_recall: float = 0.99,
+                           k0: int = 1, step: int = 1) -> int:
+    """Algorithm 2: smallest k (granularity ``step``) meeting target recall."""
+    NB = logits.shape[-1]
+    k = max(1, k0)
+    while k <= NB:
+        if recall_at_k(logits, active, k) >= target_recall:
+            return k
+        k += step
+    return NB
+
+
+def calibrate_layers(per_layer_logits: Sequence[np.ndarray],
+                     per_layer_active: Sequence[np.ndarray],
+                     target_recall: float = 0.99,
+                     step: int = 1) -> list[int]:
+    """Per-layer greedy calibration (dynamic layer-wise top-k, paper §4.1)."""
+    ks = []
+    for lg, ac in zip(per_layer_logits, per_layer_active):
+        ks.append(greedy_topk_for_recall(lg, ac, target_recall, step=step))
+    return ks

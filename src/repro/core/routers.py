@@ -1,0 +1,58 @@
+"""Sparsity predictors (paper §4.1/§4.2, Appendix C).
+
+* MLP router: two-layer FFN with a 1024 bottleneck, one per transformer
+  layer; predicts per-neuron(-block) activation logits from the layer's
+  input hidden state.  Trained as a binary classifier (BCE).
+* Attention head router: single fully-connected layer predicting per-head
+  (per-group for GQA) logits; supervision = top-k heads by attention-output
+  L2 norm.
+
+Routers are deliberately tiny and kept in float32 (they are replicated
+under the mesh).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    # local copy of models.common.dense_init (avoids a package import cycle)
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_mlp_router(key, d_model: int, out_dim: int, hidden: int = 1024):
+    k1, k2 = jax.random.split(key)
+    hidden = min(hidden, max(32, d_model))
+    return {
+        "w1": dense_init(k1, (d_model, hidden), jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": dense_init(k2, (hidden, out_dim), jnp.float32),
+        "b2": jnp.zeros((out_dim,), jnp.float32),
+    }
+
+
+def apply_mlp_router(p, x):
+    """x (..., d) -> logits (..., out_dim)."""
+    h = jax.nn.relu(x.astype(jnp.float32) @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def init_head_router(key, d_model: int, num_groups: int):
+    return {
+        "w": dense_init(key, (d_model, num_groups), jnp.float32),
+        "b": jnp.zeros((num_groups,), jnp.float32),
+    }
+
+
+def apply_head_router(p, x):
+    """x (..., d) -> logits (..., num_groups)."""
+    return x.astype(jnp.float32) @ p["w"] + p["b"]
+
+
+def router_param_count(p) -> int:
+    return sum(int(v.size) for v in jax.tree_util.tree_leaves(p))

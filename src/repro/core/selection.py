@@ -1,0 +1,60 @@
+"""Selection tensors: batch head index (SHA) and union neuron-block index
+(Selective GEMM) — paper §4.1/§4.2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_head_index(logits, k: int):
+    """Per-sequence top-k head/group ids.
+
+    logits (B, G) -> idx (B, k) int32, sorted for locality.  Head sparsity
+    is batch-invariant: each row is selected independently (paper §3.2).
+    """
+    _, idx = jax.lax.top_k(logits, k)
+    return jnp.sort(idx, axis=-1).astype(jnp.int32)
+
+
+def head_mask_from_logits(logits, k: int):
+    """Per-token 0/1 mask of the top-k heads.  logits (..., G) -> (..., G)."""
+    G = logits.shape[-1]
+    kth = jnp.sort(logits, axis=-1)[..., G - k][..., None]
+    return (logits >= kth).astype(jnp.float32)
+
+
+def union_neuron_blocks(logits, k_blocks: int):
+    """Union top-k neuron-block selection across the batch (paper §4.1).
+
+    logits (B, T, NB) or (B, NB) router outputs -> block_idx (k_blocks,).
+    Aggregates predicted activation probabilities over all sequences in the
+    batch, then takes a single top-k — one neuron index tensor per batch.
+    """
+    probs = jax.nn.sigmoid(logits.astype(jnp.float32))
+    flat = probs.reshape(-1, probs.shape[-1])
+    agg = flat.sum(axis=0)                      # (NB,)
+    _, idx = jax.lax.top_k(agg, k_blocks)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+def true_active_blocks(pre_act, neuron_block: int):
+    """Ground-truth block activity from dense pre-activations.
+
+    pre_act (..., D) -> bool (..., D//neuron_block): block active iff any
+    neuron in it is positive (ReLU semantics).
+    """
+    D = pre_act.shape[-1]
+    nb = D // neuron_block
+    blocks = pre_act[..., :nb * neuron_block].reshape(*pre_act.shape[:-1], nb, neuron_block)
+    return (blocks > 0).any(axis=-1)
+
+
+def union_sparsity(active_bool):
+    """Fraction of neurons/blocks in the batch-union (paper Fig 1b metric).
+
+    active_bool (B, ..., NB) -> scalar in [0, 1]: |union over batch| / NB.
+    """
+    flat = active_bool.reshape(-1, active_bool.shape[-1])
+    union = flat.any(axis=0)
+    return union.mean(axis=-1)

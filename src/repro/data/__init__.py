@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, lm_batches, token_stream
+
+__all__ = ["DataConfig", "token_stream", "lm_batches"]

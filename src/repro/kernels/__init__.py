@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's two compute hot-spots:
+
+* sha — Selective Head/Group FlashAttention decode (paper Alg. 1)
+* select_gemm — fused Selective GEMM MLP (paper Alg. 3 + fused 2nd GEMM)
+
+Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper) and
+ref.py (pure-jnp oracle).  Validated in interpret=True on CPU; on TPU set
+interpret=False.
+"""
+from repro.kernels.select_gemm import select_gemm_ref, selective_mlp
+from repro.kernels.sha import select_group_attention, select_head_attention, sha_ref
+
+__all__ = ["selective_mlp", "select_gemm_ref", "select_head_attention",
+           "select_group_attention", "sha_ref"]

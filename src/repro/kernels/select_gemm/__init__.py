@@ -1,0 +1,4 @@
+from repro.kernels.select_gemm.ops import selective_mlp
+from repro.kernels.select_gemm.ref import select_gemm_ref
+
+__all__ = ["selective_mlp", "select_gemm_ref"]

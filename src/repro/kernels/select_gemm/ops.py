@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the fused Selective GEMM MLP."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.select_gemm.kernel import select_gemm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "act", "block_m", "interpret"))
+def selective_mlp(x, w1, w2, block_idx, *, block_n: int, act: str = "relu",
+                  w3=None, block_m: int = 128, interpret: bool = True):
+    """Paper Alg. 3 (+ fused second GEMM): sparse FFN over the union-active
+    neuron blocks.  x (M, d) or (B, S, d); returns the same leading shape."""
+    shp = x.shape
+    if x.ndim == 3:
+        x = x.reshape(-1, shp[-1])
+    out = select_gemm_pallas(x, w1, w2, block_idx, block_n=block_n, act=act,
+                             w3=w3, block_m=block_m, interpret=interpret)
+    return out.reshape(shp[:-1] + (shp[-1],))

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused Selective GEMM MLP (paper Algorithm 3,
+block granularity per DESIGN §3).
+
+  x (M, d); w1 (d, D); w2 (D, d); optional w3 (d, D) for GLU
+  block_idx (n_sel,) int32 — selected neuron blocks of size ``block_n``
+  y = act(x @ W1[:, sel]) @ W2[sel, :]      (relu / relu2 / gelu)
+  y = (silu(x @ W1[:, sel]) * (x @ W3[:, sel])) @ W2[sel, :]   (swiglu)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(h, name):
+    if name == "relu":
+        return jax.nn.relu(h)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    if name == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(name)
+
+
+def select_gemm_ref(x, w1, w2, block_idx, *, block_n: int, act: str = "relu",
+                    w3=None):
+    d, D = w1.shape
+    nb = D // block_n
+    w1b = w1.reshape(d, nb, block_n)
+    w2b = w2.reshape(nb, block_n, d)
+    w1s = jnp.take(w1b, block_idx, 1).reshape(d, -1)
+    w2s = jnp.take(w2b, block_idx, 0).reshape(-1, d)
+    h = (x.astype(jnp.float32) @ w1s.astype(jnp.float32))
+    if act == "swiglu":
+        w3s = jnp.take(w3.reshape(d, nb, block_n), block_idx, 1).reshape(d, -1)
+        h = jax.nn.silu(h) * (x.astype(jnp.float32) @ w3s.astype(jnp.float32))
+    else:
+        h = _act(h, act)
+    return (h @ w2s.astype(jnp.float32)).astype(x.dtype)

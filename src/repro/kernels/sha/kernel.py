@@ -1,0 +1,97 @@
+"""Selective Head/Group FlashAttention decode kernel (paper Algorithm 1),
+TPU-native via Pallas.
+
+TPU adaptation (DESIGN §3): the per-sequence ``batch_head_index`` is a
+scalar-prefetch operand; it drives the K/V BlockSpec index_maps, so ONLY
+active groups' KV blocks are streamed HBM->VMEM — the paper's I/O saving.
+Grid = (B, k_sel, W // block_w) with online-softmax accumulation in VMEM
+scratch across the innermost (kv) grid dimension.  Output is written
+compact (B, k_sel, qpg, dh); the wrapper scatters to (B, G, qpg, dh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, block_w: int, scale: float):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+    n_w = pl.num_programs(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                  # (qpg, dh)
+    k = k_ref[0, :, 0]                               # (block_w, dh)
+    v = v_ref[0, :, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    length = len_ref[b]
+    kv_pos = w * block_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kv_pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (qpg, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # (qpg, block_w)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(w == n_w - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def sha_pallas_compact(q, k, v, bhi, lengths, *, block_w: int = 256,
+                       interpret: bool = True):
+    """q (B,G,qpg,dh), k/v (B,W,G,dh), bhi (B,k_sel), lengths (B,)
+    -> compact O (B, k_sel, qpg, dh)."""
+    B, G, qpg, dh = q.shape
+    W = k.shape[1]
+    k_sel = bhi.shape[1]
+    block_w = min(block_w, W)
+    assert W % block_w == 0, (W, block_w)
+    grid = (B, k_sel, W // block_w)
+    scale = dh ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qpg, dh),
+                         lambda b, j, w, bhi, ln: (b, bhi[b, j], 0, 0)),
+            pl.BlockSpec((1, block_w, 1, dh),
+                         lambda b, j, w, bhi, ln: (b, w, bhi[b, j], 0)),
+            pl.BlockSpec((1, block_w, 1, dh),
+                         lambda b, j, w, bhi, ln: (b, w, bhi[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpg, dh),
+                               lambda b, j, w, bhi, ln: (b, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qpg, dh), jnp.float32),
+            pltpu.VMEM((qpg, 1), jnp.float32),
+            pltpu.VMEM((qpg, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_sha_kernel, block_w=block_w, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, k_sel, qpg, dh), q.dtype),
+        interpret=interpret,
+    )(bhi, lengths, q, k, v)

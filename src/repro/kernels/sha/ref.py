@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for Selective Head/Group FlashAttention (decode).
+
+Semantics (paper Algorithm 1, group-generalized):
+  q   (B, G, qpg, dh)   query heads grouped by KV head/group
+  k,v (B, W, G, dh)     KV cache (W slots)
+  bhi (B, k_sel) int32  active group ids per sequence (batch head index)
+  lengths (B,) int32    valid cache length per sequence (slots [0, len))
+returns O (B, G, qpg, dh) with inactive groups zeroed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sha_ref(q, k, v, bhi, lengths):
+    B, G, qpg, dh = q.shape
+    W = k.shape[1]
+    scale = dh ** -0.5
+    kt = k.transpose(0, 2, 1, 3)                       # (B, G, W, dh)
+    vt = v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bgqd,bgwd->bgqw", q, kt).astype(jnp.float32) * scale
+    valid = jnp.arange(W)[None, :] < lengths[:, None]  # (B, W)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bgqw,bgwd->bgqd", p, vt)           # (B, G, qpg, dh)
+    act = jnp.zeros((B, G), bool).at[jnp.arange(B)[:, None], bhi].set(True)
+    return o * act[:, :, None, None].astype(o.dtype)

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_BASE_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo on
+# placeholder devices, record memory/cost analysis + roofline terms.
+#
+# MUST be run as its own process (the XLA_FLAGS line above executes before
+# any jax import — device count is locked at first jax init):
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+#         --shape decode_32k --mesh single --mode polar
+#     PYTHONPATH=src python -m repro.launch.dryrun --all
+#
+# Results land in results/dryrun/*.json (roofline table reads them).
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.configs import (ASSIGNED_ARCHS, LONG_CONTEXT_WINDOW, get_config,
+                           get_shape)
+from repro.core.policy import PolarPolicy, default_policy
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_pspec, cache_shardings,
+                                   params_shardings, replicated)
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          init_routers, prepare_model_config)
+from repro.models.model import lm_head_weights
+from repro.training.losses import xent_chunked
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def is_recurrent(cfg) -> bool:
+    return any(s.mixer in ("mamba", "rwkv") for s in cfg.layer_specs)
+
+
+def runtime_config(arch: str, shape_name: str, *, mode: str,
+                   mla_absorb: bool = False, moe_chunk: int = 0,
+                   moe_ep: bool = False, data_size: int = 16,
+                   moe_cf: float = 0.0):
+    """Arch config adjusted for the given input shape (DESIGN §5)."""
+    cfg = get_config(arch)
+    shp = get_shape(shape_name)
+    if shp.kind == "decode" and shp.seq_len > 100_000 and not is_recurrent(cfg):
+        # long_500k on full-attention archs: ring-buffer sliding window
+        cfg = cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    if cfg.moe is not None:
+        chunk = moe_chunk
+        if chunk == 0 and shp.kind in ("train", "prefill"):
+            chunk = 4096  # bound (E, C, d) expert activation memory
+        impl = cfg.moe.impl
+        if moe_ep and cfg.moe.num_experts % data_size == 0:
+            impl = "ep"
+        cf = moe_cf or cfg.moe.capacity_factor
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, gemm_chunk=chunk, impl=impl, capacity_factor=cf))
+    if cfg.mla is not None and mla_absorb:
+        cfg = cfg.replace(mla=dataclasses.replace(cfg.mla, absorb=True))
+    if os.environ.get("DRYRUN_KV_QUANT") and cfg.num_heads > 0:
+        cfg = cfg.replace(kv_quant=True)  # int8 KV (beyond-paper)
+    if shp.kind == "train" and arch == "deepseek-v3-671b":
+        pass  # MTP stays on (part of the architecture)
+    return cfg, shp
+
+
+def cache_width(cfg, shp) -> int:
+    w = shp.seq_len
+    if cfg.sliding_window:
+        w = min(w, cfg.sliding_window)
+    return w
+
+
+def input_specs(cfg, shp):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    specs = {}
+    if shp.kind == "train":
+        if cfg.embed_stub:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, d), bf16)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shp.kind == "prefill":
+        if cfg.embed_stub:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, d), bf16)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((B,), i32)
+    return specs
+
+
+def build_dryrun(arch: str, shape_name: str, mesh, mode: str,
+                 mla_absorb: bool = False, moe_chunk: int = 0,
+                 donate_cache: bool = False, moe_ep: bool = False,
+                 moe_cf: float = 0.0):
+    """Returns (jitted_fn, arg_specs list) ready to .lower(*specs)."""
+    cfg, shp = runtime_config(arch, shape_name, mode=mode,
+                              mla_absorb=mla_absorb, moe_chunk=moe_chunk,
+                              moe_ep=moe_ep, data_size=mesh.shape["data"],
+                              moe_cf=moe_cf)
+    policy: Optional[PolarPolicy] = None
+    routers_shapes = None
+    if mode == "polar" and shp.kind == "decode":
+        policy = default_policy(cfg, impl="gather")
+        if os.environ.get("DRYRUN_WKV_SPARSE"):  # beyond-paper RWKV ext.
+            policy = dataclasses.replace(policy, wkv_sparse=True,
+                                         attn_density=0.5)
+        if not (policy.attn_sparse or policy.mlp_sparse or policy.wkv_sparse):
+            policy = None
+    cfg = prepare_model_config(cfg, policy)
+
+    B, S = shp.global_batch, shp.seq_len
+    W = cache_width(cfg, shp)
+    max_seq = S if cfg.pos_emb == "learned" else None
+
+    params_shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, max_seq_len=max_seq), jax.random.PRNGKey(0))
+    p_shard = params_shardings(params_shapes, mesh)
+    specs = input_specs(cfg, shp)
+    bs = lambda extra: jax.sharding.NamedSharding(mesh, batch_pspec(mesh, B, extra))
+
+    if shp.kind == "train":
+        opt_cfg = AdamWConfig(lr=1e-4, moment_dtype="bfloat16", clip_norm=0.0)
+        opt_shapes = jax.eval_shape(
+            lambda p: adamw_init(p, opt_cfg.moment_dtype), params_shapes)
+        o_shard = {"m": p_shard, "v": p_shard,
+                   "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                out = forward(p, cfg, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"),
+                              remat=True, return_hidden=True)
+                head_w = lm_head_weights(p, cfg)
+                loss = xent_chunked(out["hidden"], head_w, batch["labels"],
+                                    soft_cap=cfg.logit_soft_cap)
+                if out["moe_aux"] is not None:
+                    loss = loss + 0.01 * out["moe_aux"]
+                if out.get("mtp_hidden") is not None:
+                    loss = loss + 0.3 * xent_chunked(
+                        out["mtp_hidden"], head_w, batch["labels"][:, 1:],
+                        soft_cap=cfg.logit_soft_cap)
+                return loss
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, loss
+
+        batch_spec = {k: v for k, v in specs.items()}
+        b_shard = {k: bs(v.ndim - 1) for k, v in batch_spec.items()}
+        fn = jax.jit(train_step, in_shardings=(p_shard, o_shard, b_shard))
+        args = (params_shapes, opt_shapes, batch_spec)
+
+    elif shp.kind == "prefill":
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, W))
+        c_shard = cache_shardings(cache_shapes, mesh, B)
+
+        def prefill_step(params, batch, cache):
+            out = forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), cache=cache,
+                          return_hidden=True)
+            # serve-style: next-token logits for the last position only
+            h_last = out["hidden"][:, -1]
+            logits = jnp.einsum("bd,dv->bv", h_last.astype(jnp.float32),
+                                lm_head_weights(params, cfg).astype(jnp.float32))
+            return logits, out["cache"]
+
+        b_shard = {k: bs(v.ndim - 1) for k, v in specs.items()}
+        fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard, c_shard))
+        args = (params_shapes, specs, cache_shapes)
+
+    else:  # decode
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, W))
+        # pretend the cache is full (pos = W-1) for a steady-state step
+        c_shard = cache_shardings(cache_shapes, mesh, B)
+        tok_shard = bs(0)
+        if policy is not None:
+            routers_shapes = jax.eval_shape(
+                lambda k: init_routers(k, cfg, policy), jax.random.PRNGKey(1))
+            r_shard = replicated(routers_shapes, mesh)
+
+            def serve_step(params, routers, tokens, cache):
+                return decode_step(params, cfg, tokens=tokens, cache=cache,
+                                   routers=routers, policy=policy)
+            fn = jax.jit(serve_step,
+                         in_shardings=(p_shard, r_shard, tok_shard, c_shard),
+                         donate_argnums=(3,) if donate_cache else ())
+            args = (params_shapes, routers_shapes, specs["tokens"], cache_shapes)
+        else:
+            def serve_step(params, tokens, cache):
+                return decode_step(params, cfg, tokens=tokens, cache=cache)
+            fn = jax.jit(serve_step, in_shardings=(p_shard, tok_shard, c_shard),
+                         donate_argnums=(2,) if donate_cache else ())
+            args = (params_shapes, specs["tokens"], cache_shapes)
+
+    return fn, args, cfg, shp
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, mode: str,
+            out_dir: str, *, mla_absorb: bool = False, moe_chunk: int = 0,
+            donate_cache: bool = False, moe_ep: bool = False,
+            moe_cf: float = 0.0, tag: str = "") -> dict:
+    t0 = time.time()
+    override = os.environ.get("DRYRUN_MESH_OVERRIDE")
+    if override:  # e.g. "2,4" — reduced mesh for CI-speed subprocess tests
+        shape = tuple(int(x) for x in override.split(","))
+        axes = ("pod", "data", "model")[-len(shape):]
+        mesh = jax.make_mesh(shape, axes, devices=jax.devices()[:int(
+            __import__("numpy").prod(shape))])
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    runtime.set_mesh(mesh)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
+           "tag": tag, "status": "ok"}
+    try:
+        fn, args, cfg, shp = build_dryrun(arch, shape_name, mesh, mode,
+                                          mla_absorb=mla_absorb,
+                                          moe_chunk=moe_chunk,
+                                          donate_cache=donate_cache,
+                                          moe_ep=moe_ep, moe_cf=moe_cf)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        chips = mesh.devices.size
+        mf = rl.model_flops_estimate(cfg, shp.kind, shp.global_batch, shp.seq_len)
+        roof = rl.analyze(compiled, arch=arch, shape=shape_name,
+                          mesh_name=mesh_name, mode=mode, chips=chips,
+                          model_flops=mf)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")}
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis"] = {"error": str(e)}
+        rec["roofline"] = roof.to_dict()
+        rec["lower_s"] = round(t1 - t0, 1)
+        rec["compile_s"] = round(t2 - t1, 1)
+        rec["params"] = int(cfg.param_count())
+        rec["active_params"] = int(cfg.active_param_count())
+        if shp.kind == "decode":
+            # Analytic decode-step HBM traffic (the SHA kernel's contract):
+            # weights once + KV read scaled by attention density.  The XLA
+            # gather path materializes a selected-KV copy, which inflates
+            # the HLO memory term; on TPU the Pallas SHA kernel streams
+            # only active heads' KV (see repro/kernels/sha).
+            W = cache_width(cfg, shp)
+            B = shp.global_batch
+            kv = 0
+            for s in cfg.layer_specs:
+                if s.mixer == "attn":
+                    kv += 2 * B * cfg.num_kv_heads * W * cfg.head_dim * 2
+                elif s.mixer == "mla":
+                    kv += B * W * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * 2
+            wb = cfg.active_param_count() * 2
+            dens = default_policy(cfg).attn_density
+            rec["analytic"] = {
+                "kv_bytes_global": kv,
+                "weight_bytes_global": wb,
+                "attn_density": dens,
+                "memory_s_dense": (kv + wb) / chips / rl.HBM_BW,
+                "memory_s_polar": (dens * kv + wb) / chips / rl.HBM_BW,
+            }
+        print(f"[dryrun] {arch} {shape_name} {mesh_name} {mode}{tag}: OK "
+              f"compile {rec['compile_s']}s bottleneck={roof.bottleneck} "
+              f"compute={roof.compute_s:.2e}s memory={roof.memory_s:.2e}s "
+              f"collective={roof.collective_s:.2e}s")
+        print("  memory_analysis:", rec["memory_analysis"])
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=20)
+        print(f"[dryrun] {arch} {shape_name} {mesh_name} {mode}{tag}: FAIL {rec['error']}")
+    finally:
+        runtime.set_mesh(None)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}_{mode}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--mode", default="polar", choices=["polar", "dense"])
+    ap.add_argument("--all", action="store_true", help="full assigned grid")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--donate-cache", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="expert-parallel shard_map MoE dispatch")
+    ap.add_argument("--moe-chunk", type=int, default=0)
+    ap.add_argument("--moe-cf", type=float, default=0.0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    if args.all:
+        fails = 0
+        for arch in ASSIGNED_ARCHS:
+            for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                rec = run_one(arch, shape, args.mesh, args.mode, args.out_dir)
+                fails += rec["status"] != "ok"
+        print(f"[dryrun] grid done, {fails} failures")
+        raise SystemExit(1 if fails else 0)
+
+    rec = run_one(args.arch, args.shape, args.mesh, args.mode, args.out_dir,
+                  mla_absorb=args.mla_absorb, moe_chunk=args.moe_chunk,
+                  donate_cache=args.donate_cache, moe_ep=args.moe_ep,
+                  moe_cf=args.moe_cf, tag=args.tag)
+    raise SystemExit(0 if rec["status"] == "ok" else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Dry-run 'profiler': attribute per-chip HLO bytes to op kinds.
+
+No wall-clock exists on placeholder devices; this is the §Perf profile —
+where the memory term comes from, op by op (post-fusion HLO).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.launch.roofline import _DTYPE_BYTES, _SHAPE_RE
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (.+?) ([\w\-]+)\(")
+
+
+def _bytes_of(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def bytes_by_op(hlo_text: str, top: int = 15):
+    """Sum result bytes per op kind + the single largest instructions."""
+    per_kind = defaultdict(int)
+    biggest = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.groups()
+        if kind == "fusion" and "calls=%wrapped_convert" in line:
+            kind = "convert"  # XLA:CPU bf16->f32 dot-operand conversions
+        b = _bytes_of(shape_str)
+        per_kind[kind] += b
+        if b > 16 * 2 ** 20:
+            biggest.append((b, kind, line.strip()[:160]))
+    biggest.sort(reverse=True)
+    return dict(sorted(per_kind.items(), key=lambda kv: -kv[1])), biggest[:top]
+
+
+def report(compiled, top: int = 15) -> str:
+    kinds, biggest = bytes_by_op(compiled.as_text(), top)
+    lines = ["bytes by op kind (result sizes, per chip):"]
+    for k, v in list(kinds.items())[:20]:
+        lines.append(f"  {k:<28} {v / 2**30:8.2f} GiB")
+    lines.append("largest instructions:")
+    for b, kind, txt in biggest:
+        lines.append(f"  {b / 2**30:8.2f} GiB  {txt}")
+    return "\n".join(lines)

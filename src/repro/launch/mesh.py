@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is an extra (slower, DCN-connected) data-parallel axis.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — run "
+            "under launch/dryrun.py which forces 512 host platform devices")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for tests (run with --xla_force_host_platform_device_count)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,149 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+memory term     = HLO_bytes   / (chips * HBM_BW)
+collective term = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(); collective bytes
+are parsed from the compiled HLO text (result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z]+[0-9a-z]*)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind (whole-program, all shards
+    combined once — HLO is SPMD so shapes are per-shard; multiply by chips
+    happens in the caller if desired.  We report per-shard bytes)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":      # avoid double counting start/done pairs
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str                  # dense | polar
+    chips: int
+    hlo_flops: float           # PER-CHIP (cost_analysis is on the SPMD module)
+    hlo_bytes: float           # per-chip bytes accessed
+    coll_bytes_per_chip: float
+    model_flops: float         # 6ND / 2ND analytic, GLOBAL
+    peak_bytes_per_chip: float # memory_analysis
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    # CPU-backend artifact accounting: XLA:CPU lowers bf16 dots via f32,
+    # inserting convert ops a TPU (bf16-native MXU) never materializes.
+    convert_bytes: float = 0.0
+    memory_s_tpu_est: float = 0.0
+
+    def finalize(self):
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.coll_bytes_per_chip / ICI_BW
+        # convert ops touch input+output (~1.5x result bytes for bf16->f32)
+        adj = max(0.0, self.hlo_bytes - 2.5 * self.convert_bytes)
+        self.memory_s_tpu_est = adj / HBM_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo = self.hlo_flops * self.chips
+        self.useful_ratio = self.model_flops / total_hlo if total_hlo else 0.0
+        return self
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(compiled, *, arch, shape, mesh_name, mode, chips,
+            model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: prefer explicit key; fall back to summing operand keys
+    byts = float(cost.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in cost.items()
+                   if k.startswith("bytes accessed"))
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    from repro.launch.hlo_profile import bytes_by_op
+    kinds, _ = bytes_by_op(hlo_text, top=0)
+    conv = float(kinds.get("convert", 0)) + sum(
+        v for k, v in kinds.items() if k.startswith("wrapped_convert"))
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[k] = getattr(ma, k, 0)
+    except Exception:
+        pass
+    peak = float(mem.get("argument_size_in_bytes", 0) +
+                 mem.get("temp_size_in_bytes", 0))
+    r = Roofline(arch=arch, shape=shape, mesh=mesh_name, mode=mode,
+                 chips=chips, hlo_flops=flops, hlo_bytes=byts,
+                 coll_bytes_per_chip=float(coll["total"]),
+                 model_flops=model_flops, peak_bytes_per_chip=peak,
+                 convert_bytes=conv)
+    r.finalize()
+    return r
+
+
+def model_flops_estimate(cfg, shape_kind: str, batch: int, seq: int) -> float:
+    """Analytic useful FLOPs: 6·N_active·D (train) / 2·N_active·D (inference),
+    D = tokens processed this step (decode: batch, one token each)."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * batch * seq
+    if shape_kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch  # decode: one token per sequence

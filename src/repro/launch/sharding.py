@@ -1,0 +1,201 @@
+"""Logical sharding rules -> PartitionSpecs, with divisibility fallback.
+
+Baseline scheme (DESIGN §6):
+* weights: d_model-ish rows -> "data" (FSDP-style storage shard), heads/d_ff/
+  vocab cols -> "model" (tensor parallel); MoE experts -> "data", expert
+  d_ff -> "model" (expert parallelism); "pod" replicates weights.
+* activations: batch -> ("pod","data") when divisible; otherwise the KV
+  cache shards its sequence dim over "data" (long_500k, batch=1).
+* routers: replicated (tiny, float32).
+
+Any dim that does not divide its mesh axes is silently replicated — the
+fallback that makes e.g. musicgen's 24 heads lower on a 16-way model axis
+(24*64 columns divide; the head axis itself never has to).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# name -> logical spec for the leaf's trailing dims (per base ndim if dict)
+_RULES = {
+    "tok": ("model", None),
+    "pos": ("data", None),
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "wg": ("data", "model"), "wr": ("data", "model"),
+    "wo": ("model", "data"),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # MoE 3D weights: prefer experts over "data" (expert parallelism); when
+    # E doesn't divide (grok: 8 experts, 16-way data) fall back to sharding
+    # d_model rows over "data" (fully-sharded storage, gathered per layer).
+    "w1": {2: ("data", "model"),
+           3: [("data", None, "model"), (None, "data", "model")]},
+    "w3": {2: ("data", "model"),
+           3: [("data", None, "model"), (None, "data", "model")]},
+    "w2": {2: ("model", "data"),
+           3: [("data", "model", None), (None, "model", "data")]},
+    "b1": ("model",), "b2": (None,),
+    "lm_head": (None, "model"),
+    "wq_a": ("data", None), "wq_b": (None, "model"),
+    "wkv_a": ("data", None), "wkv_b": (None, "model"),
+    "in_proj": ("data", "model"), "conv_w": (None, "model"), "conv_b": ("model",),
+    "x_proj": ("model", None), "dt_proj": (None, "model"), "dt_bias": ("model",),
+    "A_log": ("model", None), "D": ("model",),
+    "out_proj": ("model", "data"),
+    "mix_a": ("data", None), "decay_a": ("data", None),
+    "u": ("model", None), "ln_scale": ("model", None), "ln_bias": ("model", None),
+    "proj": ("data", None),
+}
+
+_CACHE_RULES = {
+    # name -> (dims after the leading (cycles, batch) prefix); k/v/ckv/krope
+    # are handled by _kv_tail (sequence-sharded distributed softmax).
+    "conv":  (None, "model"),         # (c-1, di)
+    "ssm":   ("model", None),         # (di, N)
+    "state": ("model", None, None),   # (H, dh, dh)
+    "shift": (None,),
+    "shift_cm": (None,),
+}
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh, shape, logical):
+    """Drop logical axes that don't divide their dim."""
+    out = []
+    for dim, ax in zip(shape, logical):
+        out.append(ax if ax is not None and dim % _axes_size(mesh, ax) == 0 else None)
+    return tuple(out)
+
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+
+
+def param_pspec(path, leaf, mesh) -> P:
+    import os
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = _leaf_name(path)
+    rule = _RULES.get(name)
+    if rule is None:
+        return P()
+    if os.environ.get("DRYRUN_NO_FSDP"):
+        # replicate weights over "data" (tensor-parallel only) — perf
+        # variant for small archs where per-layer weight all-gathers
+        # dominate the collective term
+        strip = lambda r: tuple(None if a == "data" else a for a in r)
+        rule = ({k: ([strip(c) for c in v] if isinstance(v, list) else strip(v))
+                 for k, v in rule.items()} if isinstance(rule, dict)
+                else ([strip(c) for c in rule] if isinstance(rule, list)
+                      else strip(rule)))
+    stacked = any(k.startswith("seg") for k in keys)
+    nd = leaf.ndim - (1 if stacked else 0)
+    if isinstance(rule, dict):
+        rule = rule.get(nd)
+        if rule is None:
+            return P()
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    candidates = rule if isinstance(rule, list) else [rule]
+    spec = None
+    for cand in candidates:
+        if len(cand) != nd:
+            continue
+        if all(a is None or dim % _axes_size(mesh, a) == 0
+               for dim, a in zip(shape, cand)):
+            spec = cand
+            break
+    if spec is None:
+        cand = candidates[0]
+        if len(cand) != nd:
+            return P()
+        spec = _fit(mesh, shape, cand)
+    return P(*(((None,) + spec) if stacked else spec))
+
+
+def params_shardings(params_shapes, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_pspec(p, x, mesh)), params_shapes)
+
+
+def replicated(tree, mesh):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_pspec(mesh, batch: int, extra_dims: int = 0) -> P:
+    """(B, ...) activations: batch over ("pod","data") when divisible."""
+    ax = batch_axes(mesh)
+    if batch % _axes_size(mesh, ax) == 0:
+        return P(ax, *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+def _kv_tail(mesh, name, shape_tail, batch_sharded: bool):
+    """KV cache sharding: groups over "model" if they divide, else the
+    sequence (W) over "model" — the decode softmax then reduces over the
+    sharded axis (distributed flash-decoding).  With an unsharded batch
+    (long_500k), W additionally takes "data"."""
+    msz = mesh.shape["model"]
+    w_axes = []
+    if not batch_sharded:
+        w_axes.append("data")
+    if name in ("k", "v", "k_scale", "v_scale"):
+        G, W = shape_tail[0], shape_tail[1]
+        g_ax = "model" if G % msz == 0 else None
+        if g_ax is None:
+            w_axes.append("model")
+        w_ax = tuple(w_axes) if (w_axes and W % _axes_size(mesh, tuple(w_axes)) == 0) else None
+        if name.endswith("_scale"):
+            return (g_ax, w_ax)
+        return (g_ax, w_ax, None)
+    # ckv / krope (W, r): no group dim; W over (data?, model)
+    W = shape_tail[0]
+    w_axes.append("model")
+    w_ax = tuple(w_axes) if W % _axes_size(mesh, tuple(w_axes)) == 0 else None
+    return (w_ax, None)
+
+
+def cache_pspec(path, leaf, mesh, batch_sharded: bool) -> P:
+    name = _leaf_name(path)
+    if name in ("slot_pos", "pos"):
+        return P()
+    b_ax = batch_axes(mesh) if batch_sharded else None
+    if name in ("k", "v", "k_scale", "v_scale", "ckv", "krope"):
+        tail = _kv_tail(mesh, name, leaf.shape[2:], batch_sharded)
+        return P(None, b_ax, *tail)
+    rule = _CACHE_RULES.get(name)
+    if rule is None or leaf.ndim != 2 + len(rule):
+        return P()
+    tail = _fit(mesh, leaf.shape[2:], rule)
+    return P(None, b_ax, *tail)
+
+
+def cache_shardings(cache_shapes, mesh, batch: int):
+    ax = batch_axes(mesh)
+    batch_sharded = batch % _axes_size(mesh, ax) == 0
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, cache_pspec(p, x, mesh, batch_sharded)),
+        cache_shapes)
+
+
+def opt_state_shardings(opt_shapes, params_shardings_tree, mesh):
+    """AdamW moments shard like their params; step is replicated."""
+    rep = NamedSharding(mesh, P())
+    return {
+        "m": params_shardings_tree,
+        "v": params_shardings_tree,
+        "step": rep,
+    }

@@ -1,0 +1,66 @@
+"""Training launcher: train any --arch (smoke variant on CPU) on the
+synthetic pipeline; optionally continue with the router offline phase.
+
+    PYTHONPATH=src python -m repro.launch.train --arch opt-125m --steps 100 \
+        [--routers]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.core import default_policy
+from repro.data import DataConfig, lm_batches
+from repro.models import prepare_model_config
+from repro.training import AdamWConfig, train, train_routers
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-125m", choices=list(ALL_ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--routers", action="store_true",
+                    help="run the Polar offline phase after LM training")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    policy = default_policy(cfg, impl="gather") if args.routers else None
+    cfg = prepare_model_config(cfg, policy)
+    if cfg.embed_stub:
+        raise SystemExit(f"{args.arch} is a modality-stub arch; use "
+                         "examples/serve_batched.py-style embedding inputs")
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps")
+    params, hist = train(cfg, lm_batches(dc, args.steps),
+                         opt_cfg=AdamWConfig(lr=args.lr),
+                         log_every=max(1, args.steps // 10),
+                         max_seq_len=args.seq * 2)
+    for h in hist:
+        print(f"  step {h['step']:>5}  loss {h['loss']:.4f}  "
+              f"({h['wall_s']:.0f}s)")
+
+    if args.routers:
+        cal = [b[0] for b in lm_batches(
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       batch_size=args.batch, seed=99), 3)]
+        routers, policy2, report = train_routers(params, cfg, policy, cal,
+                                                 epochs=8)
+        for layer, entry in sorted(report.items()):
+            print(f"  {layer}:", {k: (round(v, 3) if isinstance(v, float) else v)
+                                  for k, v in entry.items()})
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

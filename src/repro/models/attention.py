@@ -1,0 +1,446 @@
+"""Attention mixers: dense GQA/MHA and DeepSeek MLA, with Polar head/group
+sparsity hooks.
+
+Conventions
+-----------
+* full mode (train/prefill): x (B, S, d).  Causal (+ optional sliding
+  window) mask.  Optionally writes a KV cache of width W >= S.
+* decode mode: x (B, 1, d), ring-buffer KV cache of width W; ``pos`` is the
+  scalar current position, ``slot_pos`` (W,) holds the absolute position
+  stored in each cache slot (-1 = empty).  K is cached post-RoPE.
+* head_select: None | ("mask", m) | ("gather", idx)
+    - mask  m   (B, G) float 0/1 multiplier on group outputs (eval path,
+      works in both modes);
+    - gather idx (B, k_sel) int group ids (decode-only perf path) — only the
+      selected groups' KV is read: this is the paper's SHA/SGA semantics
+      expressed in XLA (the Pallas kernel in repro/kernels/sha is the
+      TPU-kernel counterpart).
+
+The QKV and output projections are ALWAYS dense (paper §2: retaining dense
+QKV keeps the KV cache consistent for future steps).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- init ----
+def init_attention(key, cfg, dtype):
+    d, H, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * dh), dtype),
+        "wk": dense_init(ks[1], (d, Hkv * dh), dtype),
+        "wv": dense_init(ks[2], (d, Hkv * dh), dtype),
+        "wo": dense_init(ks[3], (H * dh, d), dtype, fan_in=H * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), dtype)
+    return p
+
+
+def init_mla(key, cfg, dtype):
+    m, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dtype)},
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H * qk), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dtype)},
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim)), dtype),
+        "wo": dense_init(ks[4], (H * m.v_head_dim, d), dtype, fan_in=H * m.v_head_dim),
+    }
+
+
+def init_kv_cache(cfg, batch: int, width: int, dtype, kind: str):
+    if kind == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, width, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, width, m.qk_rope_head_dim), dtype)}
+    # head-major (B, G, W, dh) — matches paper Alg. 1's K,V in R^{BxHxNxd}
+    # and keeps the SHA group-gather a local op under sharding.
+    dh, Hkv = cfg.head_dim, cfg.num_kv_heads
+    if cfg.kv_quant:  # int8 + per-(b,g,slot) absmax scale (beyond-paper)
+        return {"k": jnp.zeros((batch, Hkv, width, dh), jnp.int8),
+                "v": jnp.zeros((batch, Hkv, width, dh), jnp.int8),
+                "k_scale": jnp.zeros((batch, Hkv, width), jnp.float32),
+                "v_scale": jnp.zeros((batch, Hkv, width), jnp.float32)}
+    return {"k": jnp.zeros((batch, Hkv, width, dh), dtype),
+            "v": jnp.zeros((batch, Hkv, width, dh), dtype)}
+
+
+def _kv_quantize(x):
+    """x (..., dh) -> (int8 codes, f32 scale (...,)) with deq = codes*scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-12
+    codes = jnp.round(xf / scale[..., None]).astype(jnp.int8)
+    return codes, scale
+
+
+# ------------------------------------------------------------- helpers ----
+def _rms(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * (jnp.mean(xf * xf, -1, keepdims=True) + eps) ** -0.5
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _causal_mask(S: int, window: Optional[int], row0: int = 0, rows: Optional[int] = None):
+    rows = S if rows is None else rows
+    i = row0 + jnp.arange(rows)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    return m  # (rows, S) bool
+
+
+# query-chunk size for full-sequence attention; bounds the (.., Cq, T)
+# score tile so 32k prefills never materialize S x T (flash-style, with
+# per-chunk remat so backward recomputes instead of storing probs)
+Q_CHUNK = 512
+
+
+def _chunked_rows(S: int, body):
+    """Run body(row0, rows) -> (B, rows, ...) over query chunks via lax.map
+    and reassemble to (B, S, ...).  Chunk divides S by construction."""
+    chunk = Q_CHUNK
+    while S % chunk:
+        chunk //= 2
+    if chunk <= 1 or S <= chunk:
+        return body(0, S)
+    n = S // chunk
+
+    @jax.checkpoint
+    def one(i):
+        return body(i * chunk, chunk)
+
+    outs = jax.lax.map(one, jnp.arange(n))           # (n, B, chunk, ...)
+    outs = jnp.moveaxis(outs, 0, 1)                  # (B, n, chunk, ...)
+    return outs.reshape(outs.shape[:1] + (S,) + outs.shape[3:])
+
+
+def _apply_group_mask(out_grouped, head_select):
+    """out_grouped (B, G, q, dh) * mask (B, G)."""
+    if head_select is None:
+        return out_grouped
+    kind, val = head_select
+    if kind == "mask":
+        return out_grouped * val[:, :, None, None].astype(out_grouped.dtype)
+    raise ValueError(f"head_select {kind} unsupported in this path")
+
+
+def _full_mode_select(out, head_select, B, S, G, qpg):
+    """Apply head selection to full-mode output (B, S, G, qpg, dh).
+
+    ("mask", m) with m (B,G) or (B,S,G): multiply group outputs.
+    ("oracle_topk", k): paper Fig 2a — keep top-k *heads* per token ranked
+    by output L2 norm, zero the rest.
+    """
+    if head_select is None:
+        return out
+    kind, val = head_select
+    if kind == "mask":
+        m = val if val.ndim == 3 else jnp.broadcast_to(val[:, None], (B, S, G))
+        return out * m[..., None, None].astype(out.dtype)
+    if kind == "oracle_topk":
+        k = int(val)
+        norms = jnp.linalg.norm(out.astype(jnp.float32), axis=-1)  # (B,S,G,qpg)
+        flat = norms.reshape(B, S, G * qpg)
+        kth = jnp.sort(flat, -1)[..., G * qpg - k][..., None]
+        m = (flat >= kth).reshape(B, S, G, qpg)
+        return out * m[..., None].astype(out.dtype)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------- dense GQA/MHA ----
+def attn_full(p, x, cfg, *, cos, sin, cache=None, head_select=None,
+              collect: bool = False) -> Tuple[jnp.ndarray, Optional[dict], Optional[jnp.ndarray]]:
+    """Full-sequence causal attention.  Returns (out, new_cache, head_norms)."""
+    B, S, d = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qpg = H // Hkv
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, dh)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, Hkv, dh)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, Hkv, dh)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        W = cache["k"].shape[2]
+        pad = W - S
+        assert pad >= 0, f"prefill length {S} exceeds cache width {W}"
+        kT, vT = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        pad4 = ((0, 0), (0, 0), (0, pad), (0, 0))
+        if cfg.kv_quant:
+            kq, ks_ = _kv_quantize(kT)
+            vq, vs_ = _kv_quantize(vT)
+            pad3 = ((0, 0), (0, 0), (0, pad))
+            new_cache = {"k": jnp.pad(kq, pad4), "v": jnp.pad(vq, pad4),
+                         "k_scale": jnp.pad(ks_, pad3),
+                         "v_scale": jnp.pad(vs_, pad3)}
+        else:
+            new_cache = {"k": jnp.pad(kT, pad4).astype(cache["k"].dtype),
+                         "v": jnp.pad(vT, pad4).astype(cache["v"].dtype)}
+
+    qg = q.reshape(B, S, Hkv, qpg, dh)
+
+    def rows(row0, nrows):
+        qc = jax.lax.dynamic_slice_in_dim(qg, row0, nrows, axis=1)
+        s = jnp.einsum("bsgqd,btgd->bgqst", qc, k).astype(jnp.float32) / (dh ** 0.5)
+        s = _softcap(s, cfg.logit_soft_cap)
+        mask = _causal_mask(S, cfg.sliding_window, row0, nrows)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return jnp.einsum("bgqst,btgd->bsgqd", pr, v)
+
+    out = _chunked_rows(S, rows)                       # (B, S, G, qpg, dh)
+
+    head_norms = None
+    if collect:  # per-head output L2 norms, supervision for head routers
+        head_norms = jnp.linalg.norm(
+            out.reshape(B, S, H, dh).astype(jnp.float32), axis=-1)
+
+    out = _full_mode_select(out, head_select, B, S, Hkv, qpg)
+    out = out.reshape(B, S, H * dh)
+    return linear(out, p["wo"]), new_cache, head_norms
+
+
+def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
+                head_select=None) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode over a ring-buffer KV cache.
+
+    x (B, 1, d); cache k/v (B, Hkv, W, dh) head-major; slot_pos (W,)
+    absolute positions (-1 empty); pos scalar int (new token position).
+    """
+    B, _, d = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qpg = H // Hkv
+    W = cache["k"].shape[2]
+
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, 1, H, dh)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, 1, Hkv, dh)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, 1, Hkv, dh)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    slot = jnp.mod(pos, W)
+    kT, vT = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    if cfg.kv_quant:
+        kq, ks_ = _kv_quantize(kT)
+        vq, vs_ = _kv_quantize(vT)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2)
+        ksc = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks_, slot, axis=2)
+        vsc = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs_, slot, axis=2)
+        new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kT.astype(cache["k"].dtype), slot, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vT.astype(cache["v"].dtype), slot, axis=2)
+        ksc = vsc = None
+        new_cache = {"k": kc, "v": vc}
+    valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)  # (W,)
+
+    qg = q.reshape(B, Hkv, qpg, dh)  # (B, G, q, dh)
+    if cfg.kv_quant:
+        # dequantize at use; int8 codes halve the HBM read (the gather path
+        # below moves only active groups' codes + scales)
+        deq = lambda c, s: c.astype(q.dtype) * s[..., None].astype(q.dtype)
+        kt, vt = (kc, ksc), (vc, vsc)
+    else:
+        kt, vt = kc, vc
+
+    if head_select is not None and head_select[0] == "gather":
+        idx = head_select[1]  # (B, k_sel) group ids
+        idxe = idx[:, :, None, None]
+        # take_along_axis keeps batch/W sharding local under GSPMD
+        qs = jnp.take_along_axis(qg, idxe, axis=1)            # (B, k_sel, q, dh)
+        if cfg.kv_quant:
+            ks = deq(jnp.take_along_axis(kt[0], idxe, axis=1),
+                     jnp.take_along_axis(kt[1], idx[:, :, None], axis=1))
+            vs = deq(jnp.take_along_axis(vt[0], idxe, axis=1),
+                     jnp.take_along_axis(vt[1], idx[:, :, None], axis=1))
+        else:
+            ks = jnp.take_along_axis(kt, idxe, axis=1)        # (B, k_sel, W, dh)
+            vs = jnp.take_along_axis(vt, idxe, axis=1)
+        o_sel = _sdpa_decode(qs, ks, vs, valid, cfg)          # (B, k_sel, q, dh)
+        onehot = jax.nn.one_hot(idx, Hkv, dtype=o_sel.dtype)  # (B, k_sel, G)
+        out = jnp.einsum("bkg,bkqd->bgqd", onehot, o_sel)
+    else:
+        if cfg.kv_quant:
+            kt, vt = deq(*kt), deq(*vt)
+        out = _sdpa_decode(qg, kt, vt, valid, cfg)            # (B, G, q, dh)
+        out = _apply_group_mask(out, head_select)
+    out = out.reshape(B, 1, H * dh)
+    return linear(out, p["wo"]), new_cache
+
+
+def _sdpa_decode(qg, kt, vt, valid, cfg):
+    dh = qg.shape[-1]
+    scores = jnp.einsum("bgqd,bgwd->bgqw", qg, kt).astype(jnp.float32) / (dh ** 0.5)
+    scores = _softcap(scores, cfg.logit_soft_cap)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    return jnp.einsum("bgqw,bgwd->bgqd", probs, vt)
+
+
+# ----------------------------------------------------------------- MLA ----
+def mla_full(p, x, cfg, *, cos, sin, cache=None, head_select=None,
+             collect: bool = False):
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = linear(_rms(p["q_norm"], linear(x, p["wq_a"])), p["wq_b"])
+    q = q.reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = linear(x, p["wkv_a"])
+    ckv = _rms(p["kv_norm"], kv_a[..., :m.kv_lora_rank])          # (B,S,r)
+    k_rope = kv_a[..., m.kv_lora_rank:]                            # (B,S,rope_d)
+    if cos is not None:  # trig computed at qk_rope_head_dim by the caller
+        q_rope = apply_rope(q_rope, cos, sin)
+        k_rope = apply_rope(k_rope, cos, sin, head_axis=False)
+
+    new_cache = None
+    if cache is not None:
+        W = cache["ckv"].shape[1]
+        new_cache = {
+            "ckv": jnp.pad(ckv, ((0, 0), (0, W - S), (0, 0))).astype(cache["ckv"].dtype),
+            "krope": jnp.pad(k_rope, ((0, 0), (0, W - S), (0, 0))).astype(cache["krope"].dtype),
+        }
+
+    kv = linear(ckv, p["wkv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    def rows(row0, nrows):
+        qn = jax.lax.dynamic_slice_in_dim(q_nope, row0, nrows, axis=1)
+        qr = jax.lax.dynamic_slice_in_dim(q_rope, row0, nrows, axis=1)
+        s = (jnp.einsum("bshd,bthd->bsht", qn, k_nope)
+             + jnp.einsum("bshd,btd->bsht", qr, k_rope)).astype(jnp.float32)
+        s = s / ((nope + rope_d) ** 0.5)
+        mask = _causal_mask(S, cfg.sliding_window, row0, nrows)
+        s = jnp.where(mask[None, :, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, -1).astype(x.dtype)
+        return jnp.einsum("bsht,bthd->bshd", pr, v)
+
+    out = _chunked_rows(S, rows)                                   # (B,S,H,vd)
+
+    head_norms = None
+    if collect:
+        head_norms = jnp.linalg.norm(out.astype(jnp.float32), axis=-1)
+    # MLA has qpg == 1: reuse the generic full-mode selection on (B,S,H,1,vd)
+    out = _full_mode_select(out[..., None, :], head_select, B, S, H, 1)[..., 0, :]
+    return linear(out.reshape(B, S, H * vd), p["wo"]), new_cache, head_norms
+
+
+def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None):
+    """MLA decode.  cfg.mla.absorb selects the absorbed (low-rank) variant:
+    naive re-expands k_nope/v for all W cached positions each step
+    (paper-faithful port of the reference impl); absorbed folds wkv_b into
+    the query/output — the beyond-paper optimization measured in §Perf.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+    scale = (nope + rope_d) ** -0.5
+
+    q = linear(_rms(p["q_norm"], linear(x, p["wq_a"])), p["wq_b"]).reshape(B, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = linear(x, p["wkv_a"])[:, 0]                              # (B, r+rope)
+    ckv = _rms(p["kv_norm"], kv_a[..., :r])
+    k_rope = kv_a[..., r:]
+    if cos is not None:  # cos/sin (1, rope_d//2) from the caller
+        q_rope = apply_rope(q_rope, cos, sin)
+        k_rope = apply_rope(k_rope, cos, sin, head_axis=False)
+
+    W = cache["ckv"].shape[1]
+    slot = jnp.mod(pos, W)
+    ckv_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv[:, None].astype(cache["ckv"].dtype), slot, axis=1)
+    krope_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), slot, axis=1)
+    new_cache = {"ckv": ckv_c, "krope": krope_c}
+    valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)
+
+    wkv_b = p["wkv_b"].reshape(r, H, nope + vd)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]               # (r,H,nope),(r,H,vd)
+
+    gather = head_select is not None and head_select[0] == "gather"
+    onehot = None
+    if gather:
+        idx = head_select[1]                                        # (B,k_sel)
+        # GSPMD-friendly selection: take_along_axis on activations, one-hot
+        # contraction (tiny) for the per-batch weight gather.
+        q_nope = jnp.take_along_axis(q_nope, idx[:, :, None], axis=1)
+        q_rope_h = jnp.take_along_axis(q_rope, idx[:, :, None], axis=1)
+        onehot = jax.nn.one_hot(idx, H, dtype=jnp.dtype(cfg.dtype))  # (B,k,H)
+        w_uk_s = jnp.einsum("bkh,rhn->brkn", onehot, w_uk.astype(onehot.dtype))
+        w_uv_s = jnp.einsum("bkh,rhv->brkv", onehot, w_uv.astype(onehot.dtype))
+    else:
+        q_rope_h = q_rope
+
+    if m.absorb:
+        # scores = (q_nope W_uk^T) . ckv  +  q_rope . k_rope
+        if gather:
+            q_abs = jnp.einsum("bhn,brhn->bhr", q_nope, w_uk_s.astype(q_nope.dtype))
+        else:
+            q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk.astype(q_nope.dtype))
+        scores = (jnp.einsum("bhr,bwr->bhw", q_abs, ckv_c.astype(q_abs.dtype))
+                  + jnp.einsum("bhd,bwd->bhw", q_rope_h, krope_c.astype(q_rope_h.dtype)))
+        scores = scores.astype(jnp.float32) * scale
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+        ctx = jnp.einsum("bhw,bwr->bhr", probs, ckv_c.astype(probs.dtype))
+        if gather:
+            o_sel = jnp.einsum("bhr,brhv->bhv", ctx, w_uv_s.astype(ctx.dtype))
+        else:
+            out_h = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(ctx.dtype))
+    else:
+        # naive: re-expand k_nope / v for every cached slot each step
+        if gather:
+            k_nope_c = jnp.einsum("bwr,brhn->bhwn", ckv_c, w_uk_s.astype(ckv_c.dtype))
+            v_c = jnp.einsum("bwr,brhv->bhwv", ckv_c, w_uv_s.astype(ckv_c.dtype))
+        else:
+            k_nope_c = jnp.einsum("bwr,rhn->bhwn", ckv_c, w_uk.astype(ckv_c.dtype))
+            v_c = jnp.einsum("bwr,rhv->bhwv", ckv_c, w_uv.astype(ckv_c.dtype))
+        scores = (jnp.einsum("bhn,bhwn->bhw", q_nope, k_nope_c)
+                  + jnp.einsum("bhd,bwd->bhw", q_rope_h, krope_c.astype(q_rope_h.dtype)))
+        scores = scores.astype(jnp.float32) * scale
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+        o = jnp.einsum("bhw,bhwv->bhv", probs, v_c)
+        if gather:
+            o_sel = o
+        else:
+            out_h = o
+
+    if gather:
+        out_h = jnp.einsum("bkh,bkv->bhv", onehot.astype(o_sel.dtype), o_sel)
+    elif head_select is not None:  # mask
+        out_h = out_h * head_select[1][..., None].astype(out_h.dtype)
+    return linear(out_h.reshape(B, 1, H * vd), p["wo"]), new_cache

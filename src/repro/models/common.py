@@ -1,0 +1,67 @@
+"""Shared helpers for the pure-JAX model substrate (no flax)."""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, shape: Sequence[int], dtype, fan_in: int | None = None):
+    """Truncated-normal-ish init scaled by 1/sqrt(fan_in)."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_init(init_fn, key, cycles: int):
+    """Init ``cycles`` copies of a param tree and stack leaves on axis 0."""
+    keys = jax.random.split(key, cycles)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *trees)
+
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def act_fn(name: str):
+    if name == "relu":
+        return jax.nn.relu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def assert_no_nan(tree, what: str = "tree"):
+    for p, x in jax.tree_util.tree_leaves_with_path(tree):
+        if not bool(jnp.all(jnp.isfinite(x.astype(jnp.float32)))):
+            raise AssertionError(f"non-finite values in {what} at {jax.tree_util.keystr(p)}")

@@ -1,0 +1,127 @@
+"""Mamba-1 selective SSM (S6) mixer — used by jamba's 7-of-8 layers.
+
+full mode runs the selective scan over time with ``lax.scan`` (default) or
+``jax.lax.associative_scan`` (parallel prefix — the beyond-paper scan
+parallelization evaluated in §Perf).  Decode keeps O(1) state:
+(conv_state (B, d_conv-1, di), ssm_state (B, di, N)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear
+
+SCAN_IMPL = "scan"  # "scan" | "associative" (module-level switch for perf runs)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dtr = s.dt_rank or cfg.d_model // 16
+    return s, di, dtr
+
+
+def init_mamba(key, cfg, dtype):
+    s, di, dtr = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, s.d_state))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, di), dtype, fan_in=s.d_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * s.d_state), dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    s, di, _ = _dims(cfg)
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32)}
+
+
+def _ssm_params(p, x_c, cfg):
+    s, di, dtr = _dims(cfg)
+    proj = linear(x_c, p["x_proj"])
+    dt_in, B_ssm, C_ssm = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(linear(dt_in, p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))          # (..., di)
+    A = -jnp.exp(p["A_log"])                                           # (di, N)
+    dA = jnp.exp(dt[..., None] * A)                                    # (..., di, N)
+    dBx = (dt * x_c.astype(jnp.float32))[..., None] * B_ssm.astype(jnp.float32)[..., None, :]
+    return dA, dBx, C_ssm.astype(jnp.float32)
+
+
+def mamba_full(p, x, cfg, cache=None):
+    """x (B, S, d) -> (out, new_cache)."""
+    s, di, _ = _dims(cfg)
+    B, S, d = x.shape
+    xz = linear(x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                                # (B,S,di)
+
+    # causal depthwise conv over time
+    pad = jnp.zeros((B, s.d_conv - 1, di), x_in.dtype)
+    xp = jnp.concatenate([pad, x_in], axis=1)                          # (B,S+c-1,di)
+    conv = sum(xp[:, j:j + S] * p["conv_w"][j].astype(x_in.dtype)
+               for j in range(s.d_conv))
+    x_c = jax.nn.silu(conv + p["conv_b"].astype(conv.dtype))
+
+    dA, dBx, C_ssm = _ssm_params(p, x_c, cfg)                          # (B,S,di,N)
+
+    if SCAN_IMPL == "associative":
+        def combine(a, b):
+            (Aa, Ba), (Ab, Bb) = a, b
+            return Ab * Aa, Ab * Ba + Bb
+        As, Bs = jax.lax.associative_scan(
+            combine, (dA.swapaxes(0, 1), dBx.swapaxes(0, 1)), axis=0)
+        hs = Bs  # initial state is zero
+        ys = jnp.einsum("sbdn,bsn->bsd", hs, C_ssm)
+    else:
+        def step(h, inp):
+            dA_t, dBx_t, C_t = inp
+            h = dA_t * h + dBx_t                                       # (B,di,N)
+            y = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y
+        h0 = jnp.zeros((B, di, s.d_state), jnp.float32)
+        hT, ys = jax.lax.scan(
+            step, h0, (dA.swapaxes(0, 1), dBx.swapaxes(0, 1), C_ssm.swapaxes(0, 1)))
+        ys = ys.swapaxes(0, 1)                                         # (B,S,di)
+
+    y = ys.astype(x.dtype) + (p["D"].astype(x.dtype) * x_c)
+    y = y * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+
+    new_cache = None
+    if cache is not None:
+        conv_state = jax.lax.dynamic_slice_in_dim(xp, S, s.d_conv - 1, axis=1)
+        if SCAN_IMPL == "associative":
+            hT = hs[-1]
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "ssm": hT}
+    return out, new_cache
+
+
+def mamba_decode(p, x, cfg, cache):
+    """x (B, 1, d); O(1) state update."""
+    s, di, _ = _dims(cfg)
+    B = x.shape[0]
+    xz = linear(x[:, 0], p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                                # (B,di)
+
+    window = jnp.concatenate([cache["conv"], x_in[:, None]], axis=1)   # (B,c,di)
+    conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"].astype(window.dtype))
+    x_c = jax.nn.silu(conv + p["conv_b"].astype(conv.dtype))
+
+    dA, dBx, C_ssm = _ssm_params(p, x_c, cfg)                          # (B,di,N)
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm).astype(x.dtype)
+    y = y + p["D"].astype(x.dtype) * x_c
+    y = y * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])[:, None]
+    new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype), "ssm": h}
+    return out, new_cache

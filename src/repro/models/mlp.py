@@ -1,0 +1,75 @@
+"""FFN blocks: dense (ReLU/GELU/SwiGLU/ReLU^2) + the Polar block-sparse path.
+
+The sparse path mirrors the paper's Selective GEMM at TPU-friendly
+neuron-block granularity (DESIGN §3): given a union block-index tensor
+(n_sel,), only those blocks of W1/W2 are touched.  ``repro/kernels/
+select_gemm`` is the Pallas twin of ``sparse_mlp_apply``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init, linear
+
+GLU_ACTS = ("swiglu", "gelu_glu")
+
+
+def init_mlp(key, cfg, dtype, d_ff: int | None = None):
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, ff), dtype),
+         "w2": dense_init(ks[1], (ff, d), dtype, fan_in=ff)}
+    if cfg.mlp_act in GLU_ACTS:
+        p["w3"] = dense_init(ks[2], (d, ff), dtype)
+    if cfg.mlp_bias:
+        p["b1"] = jnp.zeros((ff,), dtype)
+        p["b2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_apply(p, x, cfg, collect: bool = False):
+    """Dense FFN.  Returns (out, pre_activation or None)."""
+    h = linear(x, p["w1"], p.get("b1"))
+    pre = h if collect else None
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(h) * linear(x, p["w3"])
+    elif cfg.mlp_act == "gelu_glu":
+        h = jax.nn.gelu(h) * linear(x, p["w3"])
+    else:
+        h = act_fn(cfg.mlp_act)(h)
+    return linear(h, p["w2"], p.get("b2")), pre
+
+
+def sparse_mlp_apply(p, x, cfg, block_idx, neuron_block: int):
+    """Selective FFN over union-active neuron blocks.
+
+    block_idx (n_sel,) int32 — indices into the D//neuron_block blocks;
+    computes act(x @ W1[:, sel]) @ W2[sel, :] touching only selected blocks.
+    """
+    d = p["w1"].shape[0]
+    ff = p["w1"].shape[1]
+    nb = ff // neuron_block
+    n_sel = block_idx.shape[0]
+
+    w1b = p["w1"].reshape(d, nb, neuron_block)
+    w2b = p["w2"].reshape(nb, neuron_block, d)
+    w1s = jnp.take(w1b, block_idx, axis=1).reshape(d, n_sel * neuron_block)
+    w2s = jnp.take(w2b, block_idx, axis=0).reshape(n_sel * neuron_block, d)
+
+    h = linear(x, w1s)
+    if "b1" in p:
+        b1s = jnp.take(p["b1"].reshape(nb, neuron_block), block_idx, 0).reshape(-1)
+        h = h + b1s.astype(h.dtype)
+    if cfg.mlp_act in GLU_ACTS:
+        w3b = p["w3"].reshape(d, nb, neuron_block)
+        w3s = jnp.take(w3b, block_idx, axis=1).reshape(d, n_sel * neuron_block)
+        g = jax.nn.silu(h) if cfg.mlp_act == "swiglu" else jax.nn.gelu(h)
+        h = g * linear(x, w3s)
+    else:
+        h = act_fn(cfg.mlp_act)(h)
+    out = linear(h, w2s)
+    if "b2" in p:
+        out = out + p["b2"].astype(out.dtype)
+    return out

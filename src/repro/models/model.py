@@ -1,0 +1,553 @@
+"""Model assembly: scan-over-stacked-layers transformer for every assigned
+architecture, with Polar Sparsity integrated as a first-class feature.
+
+Layer layout comes from ``cfg.segments``: each Segment is ``cycles``
+repetitions of a ``pattern`` of LayerSpecs; per-segment params stack each
+pattern position's layer params on a leading ``cycles`` axis and the whole
+segment runs under one ``lax.scan`` (MaxText-style, keeps HLO size O(1) in
+depth — essential for 61-layer dry-run compiles on one CPU core).
+
+Public entry points:
+  init_params / init_routers / init_cache
+  forward(...)       -- train / prefill (full sequence)
+  decode_step(...)   -- one token against the ring-buffer cache
+  prepare_model_config(cfg, policy) -- splits the first attention layer into
+      its own segment so the paper's "layer 0 dense" rule is static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.configs.base import LayerSpec, ModelConfig, Segment
+from repro.core import policy as policy_lib
+from repro.core.routers import (apply_head_router, apply_mlp_router,
+                                init_head_router, init_mlp_router)
+from repro.core.selection import (batch_head_index, head_mask_from_logits,
+                                  true_active_blocks, union_neuron_blocks)
+from repro.models import attention as attn
+from repro.models import mamba as mamba_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.common import dense_init, linear, stack_init
+from repro.models.mlp import init_mlp, mlp_apply, sparse_mlp_apply
+from repro.models.moe import init_moe, moe_apply
+from repro.models.norms import apply_norm, init_norm
+from repro.models.rope import mrope_cos_sin, rope_cos_sin
+
+PolarPolicy = policy_lib.PolarPolicy
+
+
+# ------------------------------------------------------------------ cfg ---
+def prepare_model_config(cfg: ModelConfig, policy: Optional[PolarPolicy]) -> ModelConfig:
+    """Split the first attention layer into a singleton segment so the
+    paper's layer-0-dense rule (Fig 2b) is expressible statically."""
+    if policy is None or not policy.attn_sparse or not policy.layer0_dense:
+        return cfg
+    specs = cfg.layer_specs
+    first = next((i for i, s in enumerate(specs) if s.mixer in ("attn", "mla")), None)
+    if first is None:
+        return cfg
+    new_segments = []
+    off = 0
+    for seg in cfg.segments:
+        n = seg.num_layers
+        if not (off <= first < off + n):
+            new_segments.append(seg)
+        else:
+            p = len(seg.pattern)
+            cyc = (first - off) // p
+            if cyc > 0:
+                new_segments.append(Segment(seg.pattern, cyc))
+            for spec in seg.pattern:           # unroll the cycle containing it
+                new_segments.append(Segment((spec,), 1))
+            if seg.cycles - cyc - 1 > 0:
+                new_segments.append(Segment(seg.pattern, seg.cycles - cyc - 1))
+        off += n
+    return cfg.replace(segments=tuple(new_segments))
+
+
+def first_attn_layer_id(cfg: ModelConfig) -> Optional[int]:
+    ids = cfg.attn_layer_ids
+    return ids[0] if ids else None
+
+
+def _segment_layer_offsets(cfg: ModelConfig):
+    """Per segment: global layer id of its first layer."""
+    offs, off = [], 0
+    for seg in cfg.segments:
+        offs.append(off)
+        off += seg.num_layers
+    return offs
+
+
+def _num_groups(cfg: ModelConfig, spec: LayerSpec) -> int:
+    if spec.mixer == "attn":
+        return cfg.num_kv_heads
+    if spec.mixer == "mla":
+        return cfg.num_heads
+    if spec.mixer == "rwkv":
+        return cfg.d_model // cfg.rwkv.head_size
+    return 0
+
+
+def _dense_ff(cfg: ModelConfig) -> int:
+    return cfg.dense_ff or cfg.d_ff
+
+
+def _rope_dim(cfg: ModelConfig) -> int:
+    if any(s.mixer == "mla" for s in cfg.layer_specs):
+        return cfg.mla.qk_rope_head_dim
+    return cfg.head_dim
+
+
+# ----------------------------------------------------------------- init ---
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+        "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if spec.mixer == "attn":
+        p["mixer"] = attn.init_attention(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = attn.init_mla(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_lib.init_mamba(ks[0], cfg, dtype)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rwkv_lib.init_rwkv(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        if spec.mixer == "rwkv":
+            p["ffn"] = rwkv_lib.init_channel_mix(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg, dtype, d_ff=_dense_ff(cfg))
+    elif spec.ffn == "moe":
+        p["ffn"] = init_moe(ks[1], cfg, dtype)
+    else:
+        raise ValueError(spec.ffn)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, max_seq_len: Optional[int] = None):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, len(cfg.segments) + 4)
+    params: Dict[str, Any] = {}
+    params["embed"] = {"tok": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype)}
+    if cfg.pos_emb == "learned":
+        L = max_seq_len or 4096
+        params["embed"]["pos"] = dense_init(ks[1], (L, cfg.d_model), dtype)
+    for i, seg in enumerate(cfg.segments):
+        seg_keys = jax.random.split(ks[2 + i], len(seg.pattern))
+        params[f"seg{i}"] = {
+            f"pos{j}": stack_init(lambda k, s=spec: _init_layer(k, cfg, s, dtype),
+                                  seg_keys[j], seg.cycles)
+            for j, spec in enumerate(seg.pattern)
+        }
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[-2], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.mtp:
+        mk = jax.random.split(ks[-1], 3)
+        mtp_spec = next(s for s in cfg.layer_specs if s.mixer in ("attn", "mla"))
+        params["mtp"] = {
+            "norm_h": init_norm(cfg.norm, cfg.d_model, dtype),
+            "norm_e": init_norm(cfg.norm, cfg.d_model, dtype),
+            "proj": dense_init(mk[0], (2 * cfg.d_model, cfg.d_model), dtype),
+            "layer": _init_layer(mk[1], cfg, dataclasses.replace(mtp_spec, ffn="dense"), dtype),
+        }
+    return params
+
+
+def init_routers(key, cfg: ModelConfig, policy: PolarPolicy):
+    """Stacked router params mirroring the segment structure."""
+    routers: Dict[str, Any] = {}
+    ks = jax.random.split(key, len(cfg.segments))
+    for i, seg in enumerate(cfg.segments):
+        seg_r: Dict[str, Any] = {}
+        seg_keys = jax.random.split(ks[i], len(seg.pattern))
+        for j, spec in enumerate(seg.pattern):
+            pk = jax.random.split(seg_keys[j], 2)
+            r: Dict[str, Any] = {}
+            G = _num_groups(cfg, spec)
+            if G and (spec.mixer in ("attn", "mla") or policy.wkv_sparse):
+                r["head"] = stack_init(
+                    lambda k: init_head_router(k, cfg.d_model, G), pk[0], seg.cycles)
+            if spec.ffn == "dense" and policy.mlp_sparse:
+                ff = _dense_ff(cfg)
+                nb = ff // policy.neuron_block
+                r["mlp"] = stack_init(
+                    lambda k: init_mlp_router(k, cfg.d_model, nb), pk[1], seg.cycles)
+            seg_r[f"pos{j}"] = r
+        routers[f"seg{i}"] = seg_r
+    return routers
+
+
+def init_cache(cfg: ModelConfig, batch: int, width: int):
+    """Ring-buffer KV cache / recurrent state for every layer."""
+    dtype = jnp.dtype(cfg.dtype)
+    layers: Dict[str, Any] = {}
+    for i, seg in enumerate(cfg.segments):
+        seg_c = {}
+        for j, spec in enumerate(seg.pattern):
+            if spec.mixer in ("attn", "mla"):
+                one = lambda s=spec: attn.init_kv_cache(cfg, batch, width, dtype,
+                                                        "mla" if s.mixer == "mla" else "kv")
+            elif spec.mixer == "mamba":
+                one = lambda: mamba_lib.init_mamba_cache(cfg, batch, dtype)
+            else:
+                one = lambda: rwkv_lib.init_rwkv_cache(cfg, batch, dtype)
+            base = one()
+            seg_c[f"pos{j}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (seg.cycles,) + x.shape), base)
+            if spec.mixer == "rwkv":
+                seg_c[f"pos{j}"]["shift_cm"] = jnp.zeros(
+                    (seg.cycles, batch, cfg.d_model), dtype)
+        layers[f"seg{i}"] = seg_c
+    return {
+        "layers": layers,
+        "slot_pos": jnp.full((width,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------ selection ---
+def _head_selection(spec, cfg, policy, router_p, h, mode, force_dense):
+    """Compute head_select for one layer.  h: (B,S,d) full / (B,1,d) decode."""
+    if policy is None or force_dense:
+        return None
+    if spec.mixer in ("attn", "mla"):
+        if not policy.attn_sparse:
+            return None
+    elif spec.mixer == "rwkv":
+        if not policy.wkv_sparse:
+            return None
+    else:
+        return None
+    G = _num_groups(cfg, spec)
+    if policy.selector == "oracle":
+        if mode == "full":
+            H = cfg.num_heads if spec.mixer != "rwkv" else G
+            return ("oracle_topk", policy.attn_k(H))
+        return None  # oracle is an eval-only selector
+    k = policy.attn_k(G)
+    if k >= G:
+        return None
+    if router_p is None or "head" not in router_p:
+        return None  # no routers supplied (e.g. ground-truth collection runs)
+    logits = apply_head_router(router_p["head"], h)        # (B,S,G)/(B,1,G)
+    if mode == "decode" and policy.impl == "gather":
+        return ("gather", batch_head_index(logits[:, 0], k))
+    m = head_mask_from_logits(logits, k)
+    return ("mask", m[:, 0] if mode == "decode" else m)
+
+
+def _mlp_block_idx(cfg, policy, router_p, h, k_blocks):
+    """Union neuron-block index across the batch (decode/serve path)."""
+    logits = apply_mlp_router(router_p["mlp"], h)          # (B,1,NB)
+    return union_neuron_blocks(logits, k_blocks)
+
+
+# --------------------------------------------------------------- layers ---
+def _layer_full(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
+                collect, force_dense):
+    """One layer, full-sequence mode.  Returns (x, new_cache, aux)."""
+    aux: Dict[str, Any] = {}
+    h = apply_norm(lp["norm1"], x, cfg.norm)
+    if collect:
+        aux["h_attn_in"] = h
+    sel = _head_selection(spec, cfg, policy, router_p, h, "full", force_dense)
+
+    if spec.mixer == "attn":
+        out, new_c, norms = attn.attn_full(lp["mixer"], h, cfg, cos=cos, sin=sin,
+                                           cache=cache, head_select=sel, collect=collect)
+        if collect:
+            aux["head_norms"] = norms
+    elif spec.mixer == "mla":
+        out, new_c, norms = attn.mla_full(lp["mixer"], h, cfg, cos=cos, sin=sin,
+                                          cache=cache, head_select=sel, collect=collect)
+        if collect:
+            aux["head_norms"] = norms
+    elif spec.mixer == "mamba":
+        out, new_c = mamba_lib.mamba_full(lp["mixer"], h, cfg, cache=cache)
+    else:  # rwkv
+        cm_shift = None
+        if cache is not None:
+            cache = dict(cache)
+            cm_shift = cache.pop("shift_cm", None)
+        out, new_c = rwkv_lib.rwkv_full(lp["mixer"], h, cfg, cache=cache,
+                                        head_select=sel if sel and sel[0] == "mask" else None)
+    x = x + out
+
+    h2 = apply_norm(lp["norm2"], x, cfg.norm)
+    if collect:
+        aux["h_mlp_in"] = h2
+    if spec.ffn == "moe":
+        out2, moe_aux = moe_apply(lp["ffn"], h2, cfg)
+        aux["moe_aux"] = moe_aux
+    elif spec.mixer == "rwkv":
+        B, S, d = h2.shape
+        h2_prev = jnp.concatenate([jnp.zeros((B, 1, d), h2.dtype), h2[:, :-1]], 1)
+        out2, pre = rwkv_lib.channel_mix(lp["ffn"], h2, h2_prev, cfg, collect=collect)
+        if new_c is not None:
+            new_c = dict(new_c)
+            new_c["shift_cm"] = h2[:, -1].astype(jnp.dtype(cfg.dtype))
+        if collect and pre is not None:
+            aux["mlp_active"] = true_active_blocks(pre, policy.neuron_block if policy else 16)
+    else:
+        ffcfg = cfg if not cfg.dense_ff else cfg.replace(d_ff=cfg.dense_ff)
+        out2, pre = mlp_apply(lp["ffn"], h2, ffcfg, collect=collect)
+        if collect and pre is not None:
+            aux["mlp_active"] = true_active_blocks(pre, policy.neuron_block if policy else 16)
+    x = x + out2
+    if spec.ffn == "moe" and "moe_aux" not in aux:
+        aux["moe_aux"] = jnp.zeros((), jnp.float32)
+    return x, new_c, aux
+
+
+def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
+                  slot_pos, pos, k_blocks, force_dense):
+    h = apply_norm(lp["norm1"], x, cfg.norm)
+    sel = _head_selection(spec, cfg, policy, router_p, h, "decode", force_dense)
+
+    if spec.mixer == "attn":
+        out, new_c = attn.attn_decode(lp["mixer"], h, cfg, cos=cos, sin=sin,
+                                      cache=cache, slot_pos=slot_pos, pos=pos,
+                                      head_select=sel)
+    elif spec.mixer == "mla":
+        out, new_c = attn.mla_decode(lp["mixer"], h, cfg, cos=cos, sin=sin,
+                                     cache=cache, slot_pos=slot_pos, pos=pos,
+                                     head_select=sel)
+    elif spec.mixer == "mamba":
+        out, new_c = mamba_lib.mamba_decode(lp["mixer"], h, cfg, cache)
+    else:
+        cache = dict(cache)
+        cm_shift = cache.pop("shift_cm")
+        out, new_c = rwkv_lib.rwkv_decode(lp["mixer"], h, cfg, cache, head_select=sel)
+    x = x + out
+
+    h2 = apply_norm(lp["norm2"], x, cfg.norm)
+    use_sparse = (policy is not None and policy.mlp_sparse and spec.ffn == "dense"
+                  and not force_dense and router_p is not None and "mlp" in router_p)
+    if spec.ffn == "moe":
+        out2, _ = moe_apply(lp["ffn"], h2, cfg)
+    elif spec.mixer == "rwkv":
+        block_idx = None
+        if use_sparse:
+            block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks)
+        out2, _ = rwkv_lib.channel_mix(lp["ffn"], h2, cm_shift[:, None].astype(h2.dtype),
+                                       cfg, block_idx=block_idx,
+                                       neuron_block=policy.neuron_block if policy else 16)
+        new_c = dict(new_c)
+        new_c["shift_cm"] = h2[:, 0].astype(jnp.dtype(cfg.dtype))
+    elif use_sparse:
+        block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks)
+        ffcfg = cfg if not cfg.dense_ff else cfg.replace(d_ff=cfg.dense_ff)
+        out2 = sparse_mlp_apply(lp["ffn"], h2, ffcfg, block_idx, policy.neuron_block)
+    else:
+        ffcfg = cfg if not cfg.dense_ff else cfg.replace(d_ff=cfg.dense_ff)
+        out2, _ = mlp_apply(lp["ffn"], h2, ffcfg)
+    return x + out2, new_c
+
+
+# ------------------------------------------------------------- segments ---
+def _segment_force_dense(cfg, policy):
+    """Per-segment: True if the paper's layer-0-dense rule silences sparsity."""
+    if policy is None or not policy.layer0_dense:
+        return [False] * len(cfg.segments)
+    fid = first_attn_layer_id(cfg)
+    out = []
+    for seg, off in zip(cfg.segments, _segment_layer_offsets(cfg)):
+        out.append(fid is not None and off <= fid < off + seg.num_layers
+                   and seg.num_layers == 1)
+    return out
+
+
+def _segment_mlp_k(cfg, policy, seg_idx):
+    if policy is None or not policy.mlp_sparse:
+        return None
+    off = _segment_layer_offsets(cfg)[seg_idx]
+    seg = cfg.segments[seg_idx]
+    ks = [policy.mlp_k_blocks(_dense_ff(cfg), off + l) for l in range(seg.num_layers)]
+    return max(ks)
+
+
+def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
+                  slot_pos, pos, collect, remat=False):
+    """Apply all segments via lax.scan.  Returns (x, new_layer_caches, aux)."""
+    force_dense = _segment_force_dense(cfg, policy)
+    new_caches: Dict[str, Any] = {}
+    collected: Dict[str, Any] = {}
+    moe_aux_total = jnp.zeros((), jnp.float32)
+
+    for i, seg in enumerate(cfg.segments):
+        seg_name = f"seg{i}"
+        k_blocks = _segment_mlp_k(cfg, policy, i)
+        xs: Dict[str, Any] = {"layers": params[seg_name]}
+        if cache is not None:
+            xs["cache"] = cache["layers"][seg_name]
+        if routers is not None:
+            xs["routers"] = routers.get(seg_name)
+
+        def body(carry, sliced, seg=seg, fd=force_dense[i], kb=k_blocks):
+            x_c = carry
+            new_c: Dict[str, Any] = {}
+            aux_out: Dict[str, Any] = {}
+            for j, spec in enumerate(seg.pattern):
+                lp = sliced["layers"][f"pos{j}"]
+                lc = sliced.get("cache", {}).get(f"pos{j}") if "cache" in sliced else None
+                rp = sliced.get("routers", {}).get(f"pos{j}") if "routers" in sliced else None
+                if mode == "decode":
+                    x_c, nc = _layer_decode(lp, spec, x_c, cfg=cfg, policy=policy,
+                                            router_p=rp, cos=cos, sin=sin, cache=lc,
+                                            slot_pos=slot_pos, pos=pos, k_blocks=kb,
+                                            force_dense=fd)
+                else:
+                    x_c, nc, aux = _layer_full(lp, spec, x_c, cfg=cfg, policy=policy,
+                                               router_p=rp, cos=cos, sin=sin, cache=lc,
+                                               collect=collect, force_dense=fd)
+                    for k, v in aux.items():
+                        aux_out[f"pos{j}/{k}"] = v
+                if nc is not None:
+                    new_c[f"pos{j}"] = nc
+            return x_c, (new_c, aux_out)
+
+        x, (seg_caches, seg_aux) = jax.lax.scan(
+            jax.checkpoint(body) if remat else body, x, xs)
+        if cache is not None:
+            new_caches[seg_name] = seg_caches
+        for k, v in seg_aux.items():
+            if k.endswith("moe_aux"):
+                moe_aux_total = moe_aux_total + v.sum()
+            elif collect:
+                collected[f"{seg_name}/{k}"] = v
+    return x, new_caches, collected, moe_aux_total
+
+
+# ------------------------------------------------------------- forward ----
+def _embed(params, cfg, tokens, embeds, positions):
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.pos_emb == "learned":
+        pe = jnp.take(params["embed"]["pos"], positions, axis=0)
+        x = x + pe.astype(x.dtype)
+    return x
+
+
+def _trig(cfg, positions, pos_ids):
+    if cfg.pos_emb == "rope":
+        return rope_cos_sin(positions, _rope_dim(cfg), cfg.rope_theta)
+    if cfg.pos_emb == "mrope":
+        return mrope_cos_sin(pos_ids, _rope_dim(cfg), cfg.rope_theta, cfg.mrope_sections)
+    return None, None
+
+
+def _lm_head(params, cfg, x):
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    w = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32), w.astype(jnp.float32))
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits
+
+
+def lm_head_weights(params, cfg):
+    return params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, pos_ids=None,
+            cache=None, routers=None, policy: Optional[PolarPolicy] = None,
+            collect: bool = False, remat: bool = False,
+            return_hidden: bool = False):
+    """Full-sequence forward (train / prefill).
+
+    Returns dict(logits, cache, collected, moe_aux, mtp_logits).  With
+    return_hidden=True, skips the LM head and instead returns post-final-
+    norm "hidden" (+ "mtp_hidden") for chunked-vocab loss computation.
+    """
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    positions = jnp.arange(S)
+    if cfg.pos_emb == "mrope" and pos_ids is None:
+        pos_ids = jnp.broadcast_to(positions[None, None], (3, B, S))
+    cos, sin = _trig(cfg, positions, pos_ids)
+    x = _embed(params, cfg, tokens, embeds, positions)
+    x = runtime.wsc(x, runtime.batch_axes(), None, None)
+
+    x, new_caches, collected, moe_aux = _run_segments(
+        params, cfg, x, mode="full", policy=policy, routers=routers,
+        cache=cache, cos=cos, sin=sin, slot_pos=None, pos=None,
+        collect=collect, remat=remat)
+
+    logits = None if return_hidden else _lm_head(params, cfg, x)
+
+    mtp_logits = None
+    mtp_hidden = None
+    if cfg.mtp and "mtp" in params and tokens is not None and S > 1:
+        emb_next = jnp.take(params["embed"]["tok"], tokens[:, 1:], 0).astype(x.dtype)
+        hin = jnp.concatenate([
+            apply_norm(params["mtp"]["norm_h"], x[:, :-1], cfg.norm),
+            apply_norm(params["mtp"]["norm_e"], emb_next, cfg.norm)], -1)
+        hm = linear(hin, params["mtp"]["proj"])
+        spec = next(s for s in cfg.layer_specs if s.mixer in ("attn", "mla"))
+        hm, _, _ = _layer_full(params["mtp"]["layer"], dataclasses.replace(spec, ffn="dense"),
+                               hm, cfg=cfg, policy=None, router_p=None,
+                               cos=cos[:-1] if cos is not None else None,
+                               sin=sin[:-1] if sin is not None else None,
+                               cache=None, collect=False, force_dense=True)
+        if return_hidden:
+            mtp_hidden = apply_norm(params["final_norm"], hm, cfg.norm)
+        else:
+            mtp_logits = _lm_head(params, cfg, hm)
+
+    out_cache = None
+    if cache is not None:
+        W = cache["slot_pos"].shape[0]
+        out_cache = {
+            "layers": new_caches,
+            "slot_pos": jnp.where(jnp.arange(W) < S, jnp.arange(W), -1).astype(jnp.int32),
+            "pos": jnp.asarray(S, jnp.int32),
+        }
+    out = {"logits": logits, "cache": out_cache, "collected": collected,
+           "moe_aux": moe_aux, "mtp_logits": mtp_logits}
+    if return_hidden:
+        out["hidden"] = apply_norm(params["final_norm"], x, cfg.norm)
+        out["mtp_hidden"] = mtp_hidden
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+                cache, pos_ids=None, routers=None,
+                policy: Optional[PolarPolicy] = None):
+    """One-token decode.  tokens (B,) int32 or embeds (B,1,d).
+
+    Returns (logits (B, V), new_cache)."""
+    pos = cache["pos"]
+    slot_pos = cache["slot_pos"]
+    positions = jnp.reshape(pos, (1,))
+    if cfg.pos_emb == "mrope":
+        if pos_ids is None:
+            B = tokens.shape[0] if tokens is not None else embeds.shape[0]
+            pos_ids = jnp.broadcast_to(positions[None, None], (3, B, 1))
+    cos, sin = _trig(cfg, positions, pos_ids)
+    if tokens is not None and tokens.ndim == 1:
+        tokens = tokens[:, None]
+    x = _embed(params, cfg, tokens, embeds, positions)
+
+    x, new_caches, _, _ = _run_segments(
+        params, cfg, x, mode="decode", policy=policy, routers=routers,
+        cache=cache, cos=cos, sin=sin, slot_pos=slot_pos, pos=pos, collect=False)
+
+    logits = _lm_head(params, cfg, x)[:, 0]
+    W = slot_pos.shape[0]
+    new_cache = {
+        "layers": new_caches,
+        "slot_pos": slot_pos.at[jnp.mod(pos, W)].set(pos),
+        "pos": pos + 1,
+    }
+    return logits, new_cache

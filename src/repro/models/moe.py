@@ -1,0 +1,211 @@
+"""Mixture-of-Experts FFN (routed top-k + optional shared experts).
+
+Two implementations, selectable via ``MoEConfig.impl``:
+
+* ``"dispatch"`` — capacity-based scatter dispatch (production path):
+  tokens are ranked within their routed expert via an argsort, scattered
+  into an (E*C+1, d) buffer (row E*C collects capacity drops), the expert
+  GEMMs run batched over E, and results are gathered back weighted by the
+  router gates.  Under the mesh this shards experts over "data" and the
+  expert d_ff over "model" (expert parallelism via GSPMD).
+* ``"dense"`` — every expert computes every token, masked combine.  Exact
+  (no capacity drops); used as the correctness oracle for dispatch and as
+  the robust-lowering fallback.
+
+The router load-balance auxiliary loss (Switch-style) is returned for
+training.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.mlp import GLU_ACTS, init_mlp, mlp_apply
+from repro.models.common import act_fn
+
+
+def init_moe(key, cfg, dtype):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    glu = cfg.mlp_act in GLU_ACTS
+    p = {
+        "router": dense_init(ks[0], (d, e.num_experts), jnp.float32),
+        "w1": dense_init(ks[1], (e.num_experts, d, e.expert_ff), dtype),
+        "w2": dense_init(ks[2], (e.num_experts, e.expert_ff, d), dtype, fan_in=e.expert_ff),
+    }
+    if glu:
+        p["w3"] = dense_init(ks[3], (e.num_experts, d, e.expert_ff), dtype)
+    if e.num_shared:
+        shared_cfg = cfg.replace(d_ff=e.shared_ff or e.expert_ff)
+        p["shared"] = init_mlp(ks[4], shared_cfg, dtype, d_ff=e.shared_ff or e.expert_ff)
+    return p
+
+
+def _expert_ffn(p, xb, cfg):
+    """xb (E, C, d) -> (E, C, d) with per-expert weights."""
+    h = jnp.einsum("ecd,edf->ecf", xb, p["w1"].astype(xb.dtype))
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xb, p["w3"].astype(xb.dtype))
+    elif cfg.mlp_act == "gelu_glu":
+        h = jax.nn.gelu(h) * jnp.einsum("ecd,edf->ecf", xb, p["w3"].astype(xb.dtype))
+    else:
+        h = act_fn(cfg.mlp_act)(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(xb.dtype))
+
+
+def _route(p, xf, e) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (gates (T,k), idx (T,k), aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, e.top_k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss
+    E = e.num_experts
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.mean(
+        (jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1)), axis=0)
+    aux = E * jnp.sum(me * ce) / e.top_k
+    return gates.astype(xf.dtype), idx, aux
+
+
+def moe_apply(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out, aux_loss)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    gates, idx, aux = _route(p, xf, e)
+
+    if e.impl == "dense":
+        yb = _expert_ffn(p, jnp.broadcast_to(xf[None], (e.num_experts, B * S, d)), cfg)
+        comb = jnp.zeros((B * S, e.num_experts), x.dtype)
+        comb = comb.at[jnp.arange(B * S)[:, None], idx].add(gates)
+        out = jnp.einsum("etd,te->td", yb, comb)
+    elif e.impl == "ep":
+        out = _dispatch_moe_ep(p, xf, gates, idx, cfg)
+    else:
+        out = _dispatch_moe(p, xf, gates, idx, cfg)
+
+    if e.num_shared:
+        shared_cfg = cfg.replace(d_ff=e.shared_ff or e.expert_ff)
+        out = out + mlp_apply(p["shared"], xf, shared_cfg)[0]
+    return out.reshape(B, S, d), aux
+
+
+def _dispatch_moe(p, xf, gates, idx, cfg):
+    from repro import runtime  # late import: mesh context (no-op without mesh)
+    e = cfg.moe
+    T, d = xf.shape
+    k, E = e.top_k, e.num_experts
+    C = max(1, math.ceil(T * k * e.capacity_factor / E))
+
+    e_flat = idx.reshape(-1)                                       # (T*k,)
+    tok_flat = jnp.repeat(jnp.arange(T), k)
+    # rank of each (token, expert) pair within its expert, via stable argsort
+    order = jnp.argsort(e_flat, stable=True)
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts                           # (E,)
+    rank_sorted = jnp.arange(T * k) - starts[e_flat[order]]
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+    keep = rank < C
+    slot = jnp.where(keep, e_flat * C + rank, E * C)               # drops -> row E*C
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[slot].set(xf[tok_flat])
+    buf = runtime.wsc(buf, "data", "model")
+    xb = buf[:E * C].reshape(E, C, d)
+    if e.gemm_chunk and C > e.gemm_chunk and C % e.gemm_chunk == 0:
+        nch = C // e.gemm_chunk
+        xc = xb.reshape(E, nch, e.gemm_chunk, d).transpose(1, 0, 2, 3)
+        yc = jax.lax.map(lambda xx: _expert_ffn(p, xx, cfg), xc)
+        yb = yc.transpose(1, 0, 2, 3).reshape(E, C, d)
+    else:
+        yb = _expert_ffn(p, xb, cfg)
+    yb = runtime.wsc(yb.reshape(E * C, d), "data", "model")
+    y_pair = jnp.concatenate([yb, jnp.zeros((1, d), yb.dtype)], 0)[slot]
+    y = (y_pair * gates.reshape(-1)[:, None]).reshape(T, k, d).sum(1)
+    return y
+
+
+def _local_dispatch(xf, gates, idx, E, k, cf):
+    """Token->capacity-slot assignment (pure, per-shard)."""
+    T, d = xf.shape
+    C = max(1, math.ceil(T * k * cf / E))
+    e_flat = idx.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(e_flat, stable=True)
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(T * k) - starts[e_flat[order]]
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    slot = jnp.where(keep, e_flat * C + rank, E * C)
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[slot].set(xf[tok_flat])
+    return buf[:E * C].reshape(E, C, d), slot, C
+
+
+def _dispatch_moe_ep(p, xf, gates, idx, cfg):
+    """Expert-parallel dispatch: shard_map with explicit all-to-all.
+
+    Beyond-paper optimization (EXPERIMENTS §Perf): GSPMD cannot shard the
+    scatter dispatch — it all-gathers the (E*C, d) update buffer and
+    all-reduces expert outputs (O(100 GiB)/step for jamba-52b train).  Here
+    each "data" shard dispatches its OWN tokens locally, a single
+    all-to-all moves exactly tokens*top_k*d bytes to the expert owners,
+    the expert GEMM runs with "model"-sharded d_ff (psum), and a reverse
+    all-to-all returns results.  Requires E % mesh["data"] == 0.
+    """
+    from repro import runtime
+    from jax.sharding import PartitionSpec as P
+    mesh = runtime.MESH
+    e = cfg.moe
+    dsz = mesh.shape["data"]
+    assert e.num_experts % dsz == 0, (e.num_experts, dsz)
+    bax = runtime.batch_axes()
+    glu = cfg.mlp_act in GLU_ACTS
+    E, k = e.num_experts, e.top_k
+
+    def body(x_loc, g_loc, i_loc, w1, w2, w3):
+        # x_loc (T_loc, d_loc) — hidden stays "model"-sharded through the
+        # dispatch + all-to-all (16x less scatter/convert traffic than a
+        # replicated-d dispatch; see EXPERIMENTS §Perf iteration log).
+        # w1/w3 local (E/dsz, d, ff/msz); w2 local (E/dsz, ff/msz, d).
+        buf, slot, C = _local_dispatch(x_loc, g_loc, i_loc, E, k,
+                                       e.capacity_factor)
+        E_loc = E // dsz
+        d_loc = x_loc.shape[-1]
+        # tiled all_to_all: (E, C, d) -> (E_loc, dsz*C, d); its AD transpose
+        # is the symmetric reverse call (the untiled form mis-transposes
+        # when E_loc > 1)
+        recv = jax.lax.all_to_all(buf, "data", split_axis=0, concat_axis=1,
+                                  tiled=True)           # (E_loc, dsz*C, d_loc)
+        # gather full d only at the MXU boundary
+        recv = jax.lax.all_gather(recv, "model", axis=2, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", recv, w1.astype(recv.dtype))
+        if glu:
+            g = jnp.einsum("ecd,edf->ecf", recv, w3.astype(recv.dtype))
+            h = (jax.nn.silu(h) * g if cfg.mlp_act == "swiglu"
+                 else jax.nn.gelu(h) * g)
+        else:
+            h = act_fn(cfg.mlp_act)(h)
+        y = jnp.einsum("ecf,efd->ecd", h, w2.astype(h.dtype))  # (E_loc, dszC, d)
+        # keep only this chip's d-shard: reduce-scatter over "model"
+        y = jax.lax.psum_scatter(y, "model", scatter_dimension=2, tiled=True)
+        back = jax.lax.all_to_all(y, "data", split_axis=1, concat_axis=0,
+                                  tiled=True)           # (E, C, d_loc)
+        y_flat = back.reshape(E * C, d_loc)
+        y_flat = jnp.concatenate([y_flat, jnp.zeros((1, d_loc), y_flat.dtype)], 0)
+        y_pair = y_flat[slot] * g_loc.reshape(-1)[:, None]
+        return y_pair.reshape(x_loc.shape[0], k, -1).sum(1)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bax, "model"), P(bax, None), P(bax, None),
+                  P("data", None, "model"), P("data", "model", None),
+                  P("data", None, "model")),
+        out_specs=P(bax, "model"), check_vma=False)
+    w3 = p.get("w3", p["w1"])  # dummy for non-GLU (unused in body)
+    return fn(xf, gates, idx, p["w1"], p["w2"], w3)

@@ -1,0 +1,35 @@
+"""RMSNorm / LayerNorm / GroupNorm, functional."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_norm(kind: str, dim: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * (jnp.mean(xf * xf, -1, keepdims=True) + eps) ** -0.5
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * (var + eps) ** -0.5
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    raise ValueError(kind)
+
+
+def group_norm_heads(x, scale, bias, eps: float = 1e-5):
+    """GroupNorm over the last dim of (..., H, dh) per head (RWKV wkv output)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,46 @@
+"""Rotary embeddings: standard RoPE and Qwen2-VL M-RoPE (3D sections)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions (..., S) int -> cos/sin (..., S, head_dim//2) float32."""
+    ang = positions[..., None].astype(jnp.float32) * _freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(pos_ids, head_dim: int, theta: float, sections):
+    """Qwen2-VL M-RoPE.
+
+    pos_ids: (3, B, S) int — temporal / height / width position components.
+    sections: per-component count of rotary freq pairs, sum == head_dim//2.
+    Returns cos/sin (B, S, head_dim//2): frequency slot i uses the position
+    component that owns slot i.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    cos, sin = rope_cos_sin(pos_ids, head_dim, theta)  # (3, B, S, hd/2)
+    parts_c, parts_s = [], []
+    off = 0
+    for comp, width in enumerate(sections):
+        parts_c.append(cos[comp, ..., off:off + width])
+        parts_s.append(sin[comp, ..., off:off + width])
+        off += width
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def apply_rope(x, cos, sin, head_axis=True):
+    """x (..., [H,] dh); cos/sin trailing-dim broadcastable to x minus the
+    (optional) head axis, i.e. shapes like (S, dh//2), (1, dh//2) for decode
+    or (B, S, dh//2) for M-RoPE all work."""
+    if head_axis:
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], -1).astype(x.dtype)

@@ -1,0 +1,196 @@
+"""RWKV-6 "Finch" mixer [arXiv:2404.05892]: token-shift with LoRA dynamic
+mixing, data-dependent per-channel decay, matrix-valued WKV state.
+
+Time-mix recurrence per head (state S in R^{dh x dh}):
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora_w(x_t))) data-dependent.
+
+Channel-mix uses squared-ReLU (naturally sparse -> Polar MLP sparsity
+applies; handled by the generic FFN in blocks.py — this module is the
+sequence mixer only).
+
+Beyond-paper extension (DESIGN §4): ``head_select`` masks/gathers WKV heads
+with the same router machinery the paper uses for softmax attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear
+from repro.models.norms import group_norm_heads
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def _dims(cfg):
+    r = cfg.rwkv
+    H = cfg.d_model // r.head_size
+    return r, H, r.head_size
+
+
+def init_rwkv(key, cfg, dtype):
+    r, H, dh = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "mix_a": dense_init(ks[0], (d, 5 * r.mix_lora), dtype),
+        "mix_b": dense_init(ks[1], (5, r.mix_lora, d), dtype, fan_in=r.mix_lora),
+        "wr": dense_init(ks[2], (d, d), dtype),
+        "wk": dense_init(ks[3], (d, d), dtype),
+        "wv": dense_init(ks[4], (d, d), dtype),
+        "wg": dense_init(ks[5], (d, d), dtype),
+        "wo": dense_init(ks[6], (d, d), dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "decay_a": dense_init(ks[7], (d, r.decay_lora), dtype),
+        "decay_b": dense_init(ks[8], (r.decay_lora, d), dtype, fan_in=r.decay_lora),
+        "u": dense_init(ks[9], (H, dh), jnp.float32),
+        "ln_scale": jnp.ones((H, dh), dtype),
+        "ln_bias": jnp.zeros((H, dh), dtype),
+    }
+    return p
+
+
+def init_rwkv_cache(cfg, batch: int, dtype):
+    r, H, dh = _dims(cfg)
+    return {"state": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "shift": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+# ------------------------------------------------------- channel mix ------
+def init_channel_mix(key, cfg, dtype):
+    """RWKV-6 channel mix: k = relu(xs W1)^2 (squared-ReLU -> Polar MLP
+    sparsity applies), out = sigmoid(xr Wr) * (k W2).  Token-shifted input."""
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (d, ff), dtype),
+        "w2": dense_init(ks[1], (ff, d), dtype, fan_in=ff),
+        "wr": dense_init(ks[2], (d, d), dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+    }
+
+
+def channel_mix(p, x, x_prev, cfg, block_idx=None, neuron_block: int = 16,
+                collect: bool = False):
+    """x, x_prev (..., d).  block_idx (n_sel,) selects W1/W2 neuron blocks
+    (the paper's Selective GEMM path applied to RWKV channel-mix)."""
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    r = jax.nn.sigmoid(linear(xr, p["wr"]))
+    if block_idx is None:
+        h = linear(xk, p["w1"])
+        pre = h if collect else None
+        out = linear(jnp.square(jax.nn.relu(h)), p["w2"])
+    else:
+        d, ff = p["w1"].shape
+        nb = ff // neuron_block
+        w1s = jnp.take(p["w1"].reshape(d, nb, neuron_block), block_idx, 1)
+        w2s = jnp.take(p["w2"].reshape(nb, neuron_block, d), block_idx, 0)
+        n_sel = block_idx.shape[0]
+        h = linear(xk, w1s.reshape(d, n_sel * neuron_block))
+        pre = None
+        out = linear(jnp.square(jax.nn.relu(h)),
+                     w2s.reshape(n_sel * neuron_block, d))
+    return r * out, pre
+
+
+def _mixed_inputs(p, x, x_prev):
+    """Token shift + LoRA dynamic lerp.  x, x_prev (..., d) -> 5 x (..., d)."""
+    xx = x_prev - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(linear(xxx, p["mix_a"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, p["mix_b"].shape[1])
+    deltas = jnp.einsum("...nl,nld->...nd", lora, p["mix_b"].astype(x.dtype))
+    outs = []
+    for i in range(5):
+        mu_i = p["mu"][i].astype(x.dtype) + deltas[..., i, :]
+        outs.append(x + xx * mu_i)
+    return outs  # xr, xk, xv, xw, xg
+
+
+def _rkvwg(p, cfg, xr, xk, xv, xw, xg):
+    r, H, dh = _dims(cfg)
+    shp = xr.shape[:-1]
+    rr = linear(xr, p["wr"]).reshape(*shp, H, dh).astype(jnp.float32)
+    kk = linear(xk, p["wk"]).reshape(*shp, H, dh).astype(jnp.float32)
+    vv = linear(xv, p["wv"]).reshape(*shp, H, dh).astype(jnp.float32)
+    ww = p["w0"] + jnp.tanh(linear(xw, p["decay_a"]).astype(jnp.float32)) @ p["decay_b"].astype(jnp.float32)
+    ww = jnp.exp(-jnp.exp(ww)).reshape(*shp, H, dh)                  # decay in (0,1)
+    gg = jax.nn.silu(linear(xg, p["wg"]))
+    return rr, kk, vv, ww, gg
+
+
+def _finalize(p, cfg, y, gg, head_select):
+    r, H, dh = _dims(cfg)
+    y = group_norm_heads(y, p["ln_scale"], p["ln_bias"])              # (B,S,H,dh)
+    if head_select is not None:
+        kind, val = head_select                                       # val (B,H)
+        if kind == "mask":
+            y = y * val[:, None, :, None].astype(y.dtype)
+    y = y.reshape(*y.shape[:-2], H * dh).astype(gg.dtype) * gg
+    return linear(y, p["wo"])
+
+
+def rwkv_full(p, x, cfg, cache=None, head_select=None):
+    """x (B, S, d) -> (out, new_cache)."""
+    r, H, dh = _dims(cfg)
+    B, S, d = x.shape
+    x_prev = jnp.concatenate([jnp.zeros((B, 1, d), x.dtype), x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _mixed_inputs(p, x, x_prev)
+    rr, kk, vv, ww, gg = _rkvwg(p, cfg, xr, xk, xv, xw, xg)           # (B,S,H,dh)
+    u = p["u"]                                                        # (H,dh)
+
+    def step(S_h, inp):
+        r_t, k_t, v_t, w_t = inp                                      # (B,H,dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]                    # (B,H,dh,dh)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_h + u[..., :, None] * kv)
+        S_h = w_t[..., :, None] * S_h + kv
+        return S_h, y
+
+    S0 = cache["state"] if cache is not None else jnp.zeros((B, H, dh, dh), jnp.float32)
+    ST, ys = jax.lax.scan(step, S0, (rr.swapaxes(0, 1), kk.swapaxes(0, 1),
+                                     vv.swapaxes(0, 1), ww.swapaxes(0, 1)))
+    ys = ys.swapaxes(0, 1)                                            # (B,S,H,dh)
+    out = _finalize(p, cfg, ys, gg, head_select)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": ST, "shift": x[:, -1].astype(cache["shift"].dtype)}
+    return out, new_cache
+
+
+def rwkv_decode(p, x, cfg, cache, head_select=None):
+    """x (B, 1, d); O(1) state update."""
+    r, H, dh = _dims(cfg)
+    B, _, d = x.shape
+    xt = x[:, 0]
+    xr, xk, xv, xw, xg = _mixed_inputs(p, xt, cache["shift"].astype(xt.dtype))
+    rr, kk, vv, ww, gg = _rkvwg(p, cfg, xr, xk, xv, xw, xg)           # (B,H,dh)
+    u = p["u"]
+
+    if head_select is not None and head_select[0] == "gather":
+        idx = head_select[1]                                          # (B,k_sel)
+        kv = kk[..., :, None] * vv[..., None, :]                      # (B,H,dh,dh)
+        S_sel = jnp.take_along_axis(cache["state"], idx[:, :, None, None], axis=1)
+        kv_sel = jnp.take_along_axis(kv, idx[:, :, None, None], axis=1)
+        r_sel = jnp.take_along_axis(rr, idx[:, :, None], axis=1)
+        u_sel = jnp.take(u, idx, axis=0)                              # (B,k,dh)
+        y_sel = jnp.einsum("bhk,bhkv->bhv", r_sel,
+                           S_sel + u_sel[..., :, None] * kv_sel)
+        onehot = jax.nn.one_hot(idx, H, dtype=y_sel.dtype)            # (B,k,H)
+        y = jnp.einsum("bkh,bkv->bhv", onehot, y_sel)
+        # state still updated densely (decay + kv) to stay exact for future
+        S_new = ww[..., :, None] * cache["state"] + kv
+        head_select = None
+    else:
+        kv = kk[..., :, None] * vv[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rr, cache["state"] + u[..., :, None] * kv)
+        S_new = ww[..., :, None] * cache["state"] + kv
+    out = _finalize(p, cfg, y[:, None] if y.ndim == 3 else y, gg[:, None] if gg.ndim == 2 else gg, head_select)
+    new_cache = {"state": S_new, "shift": xt.astype(cache["shift"].dtype)}
+    return out.reshape(B, 1, d), new_cache

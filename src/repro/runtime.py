@@ -1,0 +1,61 @@
+"""Process-global mesh context.
+
+Launchers (dryrun / serve / train) set ``MESH`` so that model-internal
+sharding constraints (``wsc``) can be applied without threading the mesh
+through every call.  When no mesh is set (unit tests, CPU examples) all
+helpers are no-ops.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global MESH
+    MESH = mesh
+
+
+def batch_axes():
+    if MESH is None:
+        return None
+    return ("pod", "data") if "pod" in MESH.axis_names else ("data",)
+
+
+def _filter(spec):
+    """Drop axes not present in the mesh."""
+    names = MESH.axis_names
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, tuple):
+            t = tuple(a for a in s if a in names)
+            out.append(t if t else None)
+        else:
+            out.append(s if s in names else None)
+    return tuple(out)
+
+
+def wsc(x, *spec):
+    """with_sharding_constraint if a mesh is active; else identity.
+    Axes whose size doesn't divide the dim are dropped."""
+    if MESH is None:
+        return x
+    spec = _filter(spec)
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else s
+        n = 1
+        for a in axes:
+            n *= MESH.shape[a]
+        fixed.append(s if dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(MESH, P(*fixed)))

@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine, EngineStats, build_engine
+from repro.serving import sampling
+
+__all__ = ["Engine", "EngineStats", "build_engine", "sampling"]

@@ -1,0 +1,110 @@
+"""Batched serving engine: prefill + autoregressive decode with Polar
+Sparsity integrated (head/group routers every sparse layer, MLP union
+routing for ReLU-family FFNs).
+
+The engine owns the jitted step functions and the ring-buffer cache.  It is
+deliberately synchronous-batch (the paper's evaluation setting: fixed batch,
+fixed sequence length, measure decode throughput).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PolarPolicy
+from repro.models import (decode_step, forward, init_cache,
+                          prepare_model_config)
+from repro.serving import sampling
+
+
+@dataclass
+class EngineStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_decoded: int = 0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_decoded / self.decode_s if self.decode_s else 0.0
+
+
+class Engine:
+    """serve(cfg, params) with optional (routers, policy)."""
+
+    def __init__(self, cfg, params, *, routers=None,
+                 policy: Optional[PolarPolicy] = None,
+                 cache_width: int = 2048,
+                 sampler: Callable = sampling.greedy):
+        # NOTE: cfg must already be prepare_model_config(cfg, policy)'d if
+        # params were initialized with the split layout.
+        self.cfg = cfg
+        self.params = params
+        self.routers = routers
+        self.policy = policy
+        self.cache_width = cache_width
+        self.sampler = sampler
+        self.stats = EngineStats()
+
+        def _prefill(params, tokens, embeds, cache):
+            return forward(params, cfg, tokens=tokens, embeds=embeds,
+                           cache=cache)
+
+        def _decode(params, routers, tokens, cache):
+            logits, cache = decode_step(params, cfg, tokens=tokens, cache=cache,
+                                        routers=routers, policy=policy)
+            return logits, cache
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+        self.cache = None
+
+    def prefill(self, tokens=None, embeds=None):
+        B = tokens.shape[0] if tokens is not None else embeds.shape[0]
+        cache = init_cache(self.cfg, B, self.cache_width)
+        t0 = time.perf_counter()
+        out = self._prefill(self.params, tokens, embeds, cache)
+        out["logits"].block_until_ready()
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.cache = out["cache"]
+        return out["logits"][:, -1]
+
+    def generate(self, num_tokens: int, *, first_logits=None, key=None):
+        """Decode ``num_tokens`` greedily (or with the configured sampler)."""
+        assert self.cache is not None, "prefill first"
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits = first_logits
+        toks = []
+        t0 = time.perf_counter()
+        cur = self.sampler(logits, key) if logits is not None else None
+        for i in range(num_tokens):
+            if cur is None:
+                cur = jnp.zeros((self._batch(),), jnp.int32)
+            logits, self.cache = self._decode(self.params, self.routers,
+                                              cur, self.cache)
+            key, sub = jax.random.split(key)
+            cur = self.sampler(logits, sub)
+            toks.append(cur)
+        jax.block_until_ready(self.cache)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.tokens_decoded += num_tokens * self._batch()
+        return jnp.stack(toks, axis=1)
+
+    def _batch(self) -> int:
+        return jax.tree_util.tree_leaves(self.cache["layers"])[0].shape[1]
+
+
+def build_engine(cfg, params_key, *, policy=None, routers_key=None,
+                 cache_width: int = 2048, max_seq_len=None):
+    """Convenience: prepared config + fresh params (+ routers)."""
+    from repro.models import init_params, init_routers
+    cfg = prepare_model_config(cfg, policy)
+    params = init_params(params_key, cfg, max_seq_len=max_seq_len or cache_width)
+    routers = None
+    if policy is not None and (policy.attn_sparse or policy.mlp_sparse):
+        routers = init_routers(routers_key or jax.random.PRNGKey(7), cfg, policy)
+    return Engine(cfg, params, routers=routers, policy=policy,
+                  cache_width=cache_width), cfg, params

@@ -1,0 +1,17 @@
+"""Token samplers for the decode loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, key=None):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    logits = logits / max(temp, 1e-6)
+    if top_k:
+        kth = jnp.sort(logits, -1)[..., -top_k][..., None]
+        logits = jnp.where(logits >= kth, logits, -1e30)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

@@ -1,0 +1,8 @@
+from repro.training.losses import bce_with_logits, lm_loss, xent
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+from repro.training.router_train import collect_router_data, train_routers
+from repro.training.train_loop import make_train_step, train
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "xent", "lm_loss",
+           "bce_with_logits", "make_train_step", "train", "train_routers",
+           "collect_router_data"]

@@ -1,0 +1,71 @@
+"""Loss functions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xent(logits, labels):
+    """Mean next-token cross entropy.  logits (B,S,V) f32, labels (B,S)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def lm_loss(out, labels, *, moe_aux_weight: float = 0.01,
+            mtp_weight: float = 0.3):
+    """Total training loss from a model forward() output dict."""
+    loss = xent(out["logits"], labels)
+    metrics = {"xent": loss}
+    if out.get("moe_aux") is not None:
+        loss = loss + moe_aux_weight * out["moe_aux"]
+        metrics["moe_aux"] = out["moe_aux"]
+    if out.get("mtp_logits") is not None:
+        # MTP head predicts token t+2 from (h_t, emb_{t+1}): with labels
+        # y[t] = x[t+1], mtp_logits[:, t] targets y[:, t+1].
+        mtp = xent(out["mtp_logits"], labels[:, 1:])
+        loss = loss + mtp_weight * mtp
+        metrics["mtp_xent"] = mtp
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def xent_chunked(hidden, head_w, labels, num_chunks: int = 32,
+                 soft_cap: float = 0.0):
+    """Next-token xent without materializing (B, S, V) logits.
+
+    hidden (B, S, d) final hidden states; head_w (d, V); labels (B, S).
+    The sequence is split into ``num_chunks`` chunks; each chunk's logits
+    are computed inside a rematerialized scan body, so only per-chunk
+    logits ever exist (forward AND backward) — required for 100k+ vocabs
+    at global batch 256 x 4k (full f32 logits would be ~0.5 TB).
+    """
+    B, S, d = hidden.shape
+    num_chunks = min(num_chunks, S)
+    while S % num_chunks:
+        num_chunks -= 1
+    C = S // num_chunks
+    hc = hidden.reshape(B, num_chunks, C, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, num_chunks, C).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        h, y = xs
+        logits = jnp.einsum("bcd,dv->bcv", h.astype(jnp.bfloat16),
+                            head_w.astype(jnp.bfloat16)).astype(jnp.float32)
+        if soft_cap:
+            logits = soft_cap * jnp.tanh(logits / soft_cap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return carry - ll.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)
+
+
+def bce_with_logits(logits, targets):
+    """Binary cross entropy (router training, paper App. C)."""
+    logits = logits.astype(jnp.float32)
+    t = targets.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * t +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))

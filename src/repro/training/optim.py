@@ -1,0 +1,65 @@
+"""AdamW optimizer (pure JAX, no optax) + global-norm clipping."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    # moment dtype: float32 default; bfloat16 halves optimizer HBM (used by
+    # the multi-pod dry-run configs, where f32 moments wouldn't fit v5e)
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, moment_dtype: str = "float32") -> dict:
+    md = jnp.dtype(moment_dtype)
+    zeros = lambda p: jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, md), p)
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig) -> Tuple[Any, dict]:
+    step = state["step"] + 1
+    if cfg.clip_norm:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    def upd(g, m, v, p):
+        mdt = m.dtype
+        g = g.astype(jnp.float32)
+        m, v = m.astype(jnp.float32), v.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** step)
+        vh = v / (1 - cfg.b2 ** step)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_); new_m.append(nm); new_v.append(nv)
+    return (treedef.unflatten(new_p),
+            {"m": treedef.unflatten(new_m), "v": treedef.unflatten(new_v), "step": step})

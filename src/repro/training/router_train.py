@@ -1,0 +1,170 @@
+"""Router training + calibration — the paper's offline phase (App. C).
+
+1. Run the dense model with ``collect=True`` over a calibration set,
+   gathering per-layer (hidden-state, supervision) pairs:
+     head routers: top-k heads by attention-output L2 norm (group-reduced
+     for GQA);
+     MLP routers: ground-truth active neuron blocks (ReLU semantics).
+2. Train each router as a binary classifier (BCE, AdamW, batch 64,
+   lr 1e-4, early stopping, <= 20 epochs) with the LLM frozen.
+3. Calibrate per-layer MLP top-k with Algorithm 2 (greedy to 99% recall).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import greedy_topk_for_recall, recall_at_k
+from repro.core.policy import PolarPolicy
+from repro.core.routers import (apply_head_router, apply_mlp_router,
+                                init_head_router, init_mlp_router)
+from repro.models import forward, init_routers
+from repro.models.model import _num_groups  # noqa: internal reuse
+from repro.training.losses import bce_with_logits
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# ----------------------------------------------------------- collection ---
+def collect_router_data(params, cfg, batches, policy: PolarPolicy,
+                        embeds_batches=None):
+    """Returns {layer_key: {"h_attn", "head_norms", "h_mlp", "mlp_active"}}
+    with layer_key = (seg, pos, cycle); arrays stacked over all batches."""
+    fwd = jax.jit(lambda p, t, e: forward(p, cfg, tokens=t, embeds=e,
+                                          policy=policy, collect=True)["collected"])
+    store: Dict[Tuple[int, int, int], Dict[str, List[np.ndarray]]] = {}
+    for bi, tokens in enumerate(batches):
+        embeds = None if embeds_batches is None else embeds_batches[bi]
+        col = fwd(params, jnp.asarray(tokens) if tokens is not None else None,
+                  None if embeds is None else jnp.asarray(embeds))
+        for key, val in col.items():
+            seg, pos, name = key.split("/")
+            si, pj = int(seg[3:]), int(pos[3:])
+            arr = np.asarray(val)                 # (cycles, B, S, ...)
+            for c in range(arr.shape[0]):
+                k = (si, pj, c)
+                store.setdefault(k, {}).setdefault(name, []).append(
+                    arr[c].reshape(-1, arr.shape[-1]))
+    return {k: {n: np.concatenate(v, 0) for n, v in d.items()}
+            for k, d in store.items()}
+
+
+def _group_norms(head_norms: np.ndarray, G: int) -> np.ndarray:
+    """(N, H) per-head L2 norms -> (N, G) group norms (GQA reduction)."""
+    N, H = head_norms.shape
+    if H == G:
+        return head_norms
+    qpg = H // G
+    return np.sqrt((head_norms.reshape(N, G, qpg) ** 2).sum(-1))
+
+
+# -------------------------------------------------------------- trainer ---
+def _train_binary(key, params, apply_fn, X: np.ndarray, Y: np.ndarray,
+                  epochs: int = 20, bs: int = 64, lr: float = 1e-4,
+                  patience: int = 3, max_samples: int = 20000):
+    """BCE training with early stopping.  Returns (params, val_loss)."""
+    if X.shape[0] > max_samples:
+        sel = np.random.default_rng(0).choice(X.shape[0], max_samples, replace=False)
+        X, Y = X[sel], Y[sel]
+    n_val = max(1, X.shape[0] // 10)
+    Xv, Yv = jnp.asarray(X[:n_val]), jnp.asarray(Y[:n_val])
+    Xt, Yt = X[n_val:], Y[n_val:]
+    opt_cfg = AdamWConfig(lr=lr, clip_norm=0.0)
+    opt_state = adamw_init(params)
+
+    @jax.jit
+    def step(p, s, x, y):
+        loss, g = jax.value_and_grad(lambda pp: bce_with_logits(apply_fn(pp, x), y))(p)
+        p, s = adamw_update(g, s, p, opt_cfg)
+        return p, s, loss
+
+    val_loss = jax.jit(lambda p: bce_with_logits(apply_fn(p, Xv), Yv))
+    best, best_p, bad = np.inf, params, 0
+    rng = np.random.default_rng(0)
+    steps_per_epoch = max(1, len(Xt) // bs)
+    for _ in range(epochs):
+        order = rng.permutation(len(Xt))
+        for i in range(steps_per_epoch):
+            idx = order[i * bs:(i + 1) * bs]
+            params, opt_state, _ = step(params, opt_state,
+                                        jnp.asarray(Xt[idx]), jnp.asarray(Yt[idx]))
+        vl = float(val_loss(params))
+        if vl < best - 1e-5:
+            best, best_p, bad = vl, params, 0
+        else:
+            bad += 1
+            if bad >= patience:
+                break
+    return best_p, best
+
+
+def train_routers(model_params, cfg, policy: PolarPolicy, batches, *,
+                  seed: int = 0, epochs: int = 20,
+                  embeds_batches=None, recall_target: float = 0.99):
+    """Full offline phase.  Returns (routers_tree, calibrated_policy, report)."""
+    key = jax.random.PRNGKey(seed)
+    routers = init_routers(key, cfg, policy)
+    data = collect_router_data(model_params, cfg, batches, policy,
+                               embeds_batches=embeds_batches)
+    report: Dict[str, dict] = {}
+    mlp_ks: Dict[int, int] = {}
+    layer_offsets = []
+    off = 0
+    for seg in cfg.segments:
+        layer_offsets.append(off)
+        off += seg.num_layers
+
+    for (si, pj, c), d in sorted(data.items()):
+        seg = cfg.segments[si]
+        spec = seg.pattern[pj]
+        layer_id = layer_offsets[si] + c * len(seg.pattern) + pj
+        rkey = jax.random.fold_in(key, layer_id)
+        entry: Dict[str, float] = {}
+
+        if "head_norms" in d and "head" in routers[f"seg{si}"][f"pos{pj}"]:
+            G = _num_groups(cfg, spec)
+            gn = _group_norms(d["head_norms"], G)
+            k = policy.attn_k(G)
+            kth = np.sort(gn, -1)[:, G - k][:, None]
+            Y = (gn >= kth).astype(np.float32)
+            p0 = jax.tree_util.tree_map(
+                lambda x: x[c], routers[f"seg{si}"][f"pos{pj}"]["head"])
+            p1, vl = _train_binary(rkey, p0, apply_head_router,
+                                   d["h_attn_in"], Y, epochs=epochs)
+            logits = np.asarray(apply_head_router(p1, jnp.asarray(d["h_attn_in"][:2048])))
+            entry["head_recall@k"] = recall_at_k(logits, Y[:2048].astype(bool), k)
+            entry["head_val_bce"] = vl
+            routers[f"seg{si}"][f"pos{pj}"]["head"] = jax.tree_util.tree_map(
+                lambda full, new: full.at[c].set(new),
+                routers[f"seg{si}"][f"pos{pj}"]["head"], p1)
+
+        if "mlp_active" in d and "mlp" in routers[f"seg{si}"][f"pos{pj}"]:
+            Y = d["mlp_active"].astype(np.float32)
+            p0 = jax.tree_util.tree_map(
+                lambda x: x[c], routers[f"seg{si}"][f"pos{pj}"]["mlp"])
+            p1, vl = _train_binary(rkey, p0, apply_mlp_router,
+                                   d["h_mlp_in"], Y, epochs=epochs)
+            logits = np.asarray(apply_mlp_router(p1, jnp.asarray(d["h_mlp_in"][:2048])))
+            kk = greedy_topk_for_recall(logits, Y[:2048].astype(bool),
+                                        target_recall=recall_target,
+                                        k0=max(1, int(0.05 * Y.shape[-1])),
+                                        step=max(1, Y.shape[-1] // 64))
+            mlp_ks[layer_id] = kk
+            entry["mlp_topk_blocks"] = kk
+            entry["mlp_recall@k"] = recall_at_k(logits, Y[:2048].astype(bool), kk)
+            entry["mlp_val_bce"] = vl
+            routers[f"seg{si}"][f"pos{pj}"]["mlp"] = jax.tree_util.tree_map(
+                lambda full, new: full.at[c].set(new),
+                routers[f"seg{si}"][f"pos{pj}"]["mlp"], p1)
+        report[f"layer{layer_id}"] = entry
+
+    new_policy = policy
+    if mlp_ks:
+        ks = tuple(mlp_ks.get(l, policy.mlp_k_blocks(cfg.d_ff, l))
+                   for l in range(cfg.num_layers))
+        new_policy = dataclasses.replace(policy, mlp_topk_blocks=ks)
+    return routers, new_policy, report

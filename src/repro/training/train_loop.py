@@ -1,0 +1,50 @@
+"""LM training loop: train_step factory + a simple host-side driver."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_params
+from repro.training.losses import lm_loss
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, donate: bool = True):
+    """Returns jit-able train_step(params, opt_state, tokens, labels)."""
+
+    def loss_fn(params, tokens, labels, embeds):
+        out = forward(params, cfg, tokens=tokens, embeds=embeds)
+        return lm_loss(out, labels)
+
+    def train_step(params, opt_state, tokens, labels, embeds=None):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, labels, embeds)
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg, batches, *, opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+          log_every: int = 10, params=None, max_seq_len: Optional[int] = None):
+    """Host driver: train over a finite list of (tokens, labels) batches."""
+    opt_cfg = opt_cfg or AdamWConfig(lr=3e-4)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = init_params(key, cfg, max_seq_len=max_seq_len or batches[0][0].shape[1])
+    opt_state = adamw_init(params, opt_cfg.moment_dtype)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history = []
+    t0 = time.time()
+    for i, (tokens, labels) in enumerate(batches):
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             jnp.asarray(tokens), jnp.asarray(labels))
+        if i % log_every == 0 or i == len(batches) - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+    return params, history

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run on the single real CPU device; only the dry-run subprocess
+# forces 512 placeholder devices (per the system design).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

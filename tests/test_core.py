@@ -1,0 +1,161 @@
+"""Unit + property tests for the Polar Sparsity core (routers, selection,
+calibration) — hypothesis drives the system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PolarPolicy, batch_head_index, calibrate_layers,
+                        default_policy, greedy_topk_for_recall,
+                        head_mask_from_logits, recall_at_k,
+                        true_active_blocks, union_neuron_blocks,
+                        union_sparsity)
+from repro.core.routers import (apply_head_router, apply_mlp_router,
+                                init_head_router, init_mlp_router)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ selection ---
+@given(st.integers(1, 6), st.integers(2, 24), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_batch_head_index_props(B, G, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (B, G))
+    for k in (1, max(1, G // 2), G):
+        idx = np.asarray(batch_head_index(logits, k))
+        assert idx.shape == (B, k)
+        assert (idx >= 0).all() and (idx < G).all()
+        for b in range(B):
+            assert len(set(idx[b].tolist())) == k          # distinct heads
+            top = set(np.argsort(-np.asarray(logits[b]))[:k].tolist())
+            assert set(idx[b].tolist()) == top             # truly the top-k
+
+
+@given(st.integers(1, 5), st.integers(4, 32), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_head_mask_matches_index(B, G, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (B, G))
+    k = max(1, G // 3)
+    m = np.asarray(head_mask_from_logits(logits, k))
+    idx = np.asarray(batch_head_index(logits, k))
+    assert m.sum(-1).max() >= k                             # >=k kept (ties)
+    for b in range(B):
+        assert m[b, idx[b]].all()
+
+
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(2, 16),
+       st.integers(0, 500))
+@settings(max_examples=25, deadline=None)
+def test_union_grows_with_batch(B, T, NB, seed):
+    """Paper Fig 1b invariant: union activation is monotone in batch size."""
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (B, T, NB)) * 3
+    active = logits > 0.5
+    fracs = [float(union_sparsity(np.asarray(active[:b + 1])))
+             for b in range(B)]
+    assert all(b >= a - 1e-9 for a, b in zip(fracs, fracs[1:]))
+
+
+@given(st.integers(2, 6), st.integers(4, 16), st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_union_neuron_blocks_covers_strong_activations(B, NB, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (B, 1, NB))
+    idx = np.asarray(union_neuron_blocks(logits, NB))       # k == NB: all
+    assert sorted(idx.tolist()) == list(range(NB))
+    idx2 = np.asarray(union_neuron_blocks(logits, NB // 2))
+    assert len(idx2) == NB // 2 and len(set(idx2.tolist())) == NB // 2
+    assert (np.diff(idx2) > 0).all()                        # sorted
+
+
+def test_true_active_blocks():
+    pre = jnp.array([[-1.0, -1, 0.5, -1, -1, -1, -1, -1]])  # block size 4
+    blk = np.asarray(true_active_blocks(pre, 4))
+    assert blk.tolist() == [[True, False]]
+
+
+# ----------------------------------------------------------- calibration --
+@given(st.integers(8, 64), st.integers(20, 200), st.integers(0, 99),
+       st.floats(0.5, 0.99))
+@settings(max_examples=20, deadline=None)
+def test_greedy_topk_meets_recall(NB, T, seed, target):
+    """Algorithm 2 postcondition: returned k achieves >= target recall, and
+    (k - step) does not."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(T, NB))
+    active = rng.normal(size=(T, NB)) + 0.3 * logits > 0.8  # router partially informative
+    k = greedy_topk_for_recall(logits, active, target_recall=target, step=1)
+    assert recall_at_k(logits, active, k) >= target
+    if k > 1:
+        assert recall_at_k(logits, active, k - 1) < target
+
+
+def test_recall_monotone_in_k():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(50, 32))
+    active = rng.random((50, 32)) > 0.7
+    rs = [recall_at_k(logits, active, k) for k in range(1, 33)]
+    assert all(b >= a - 1e-9 for a, b in zip(rs, rs[1:]))
+    assert rs[-1] == 1.0                                    # k == NB: perfect
+
+
+def test_calibrate_layers_perfect_router():
+    """A router that IS the activation pattern calibrates to ~true k."""
+    rng = np.random.default_rng(1)
+    per_layer = []
+    for density in (0.1, 0.5):
+        act = rng.random((100, 64)) < density
+        per_layer.append((act.astype(np.float64), act))
+    ks = calibrate_layers([l for l, _ in per_layer], [a for _, a in per_layer],
+                          target_recall=0.99)
+    # layer with 10% density needs fewer neurons than the 50% one
+    assert ks[0] < ks[1] <= 64
+
+
+# --------------------------------------------------------------- policy ---
+def test_default_policy_per_arch():
+    from repro.configs import get_config
+    p = default_policy(get_config("opt-66b"))
+    assert p.attn_density == 0.30 and p.mlp_sparse and p.attn_sparse
+    p = default_policy(get_config("llama3-8b"))
+    assert p.attn_density == 0.625 and not p.mlp_sparse
+    p = default_policy(get_config("rwkv6-7b"))
+    assert not p.attn_sparse and p.mlp_sparse      # attention-free
+    p = default_policy(get_config("musicgen-medium"))
+    assert p.mlp_sparse and p.attn_density == 0.5  # ReLU + MHA
+
+
+def test_policy_attn_k():
+    p = PolarPolicy(attn_density=0.3)
+    assert p.attn_k(72) == 22                      # OPT-66b: ceil(0.3*72)
+    assert p.attn_k(8) == 3
+    p = PolarPolicy(attn_density=0.625)
+    assert p.attn_k(8) == 5
+
+
+# --------------------------------------------------------------- routers --
+def test_router_shapes():
+    rp = init_mlp_router(KEY, 64, 128)
+    out = apply_mlp_router(rp, jnp.zeros((3, 5, 64)))
+    assert out.shape == (3, 5, 128)
+    hp = init_head_router(KEY, 64, 8)
+    out = apply_head_router(hp, jnp.zeros((3, 64)))
+    assert out.shape == (3, 8)
+
+
+def test_router_trainable_to_high_recall():
+    """BCE training improves recall on a linearly-predictable pattern."""
+    from repro.training.router_train import _train_binary
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(32, 16))
+    X = rng.normal(size=(4000, 32)).astype(np.float32)
+    Y = (X @ W > 0.0).astype(np.float32)           # linearly separable
+    p0 = init_head_router(KEY, 32, 16)
+    logits0 = np.asarray(apply_head_router(p0, jnp.asarray(X[:500])))
+    r0 = recall_at_k(logits0, Y[:500].astype(bool), 8)
+    p1, _ = _train_binary(KEY, p0, apply_head_router, X, Y, epochs=20,
+                          lr=3e-3, patience=5)
+    logits = np.asarray(apply_head_router(p1, jnp.asarray(X[:500])))
+    r = recall_at_k(logits, Y[:500].astype(bool), 8)
+    assert r > max(0.85, r0 + 0.2), (r0, r)

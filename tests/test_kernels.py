@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against ref.py oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.select_gemm import select_gemm_ref, selective_mlp
+from repro.kernels.sha import select_head_attention, sha_ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rand_bhi(key, B, G, k):
+    rows = [jax.random.permutation(kk, G)[:k] for kk in jax.random.split(key, B)]
+    return jnp.sort(jnp.stack(rows), -1).astype(jnp.int32)
+
+
+# ------------------------------------------------------------------ SHA ---
+@pytest.mark.parametrize("B,G,qpg,dh,W,ksel,block_w", [
+    (1, 4, 1, 64, 128, 2, 64),      # MHA head sparsity
+    (3, 8, 4, 64, 512, 3, 128),     # GQA group sparsity
+    (2, 8, 2, 128, 256, 5, 256),    # block_w == W
+    (4, 16, 1, 32, 384, 8, 128),    # W not a power of two
+    (2, 2, 8, 64, 128, 1, 32),      # extreme grouping, 1 active group
+])
+def test_sha_shapes(B, G, qpg, dh, W, ksel, block_w):
+    ks = jax.random.split(jax.random.fold_in(KEY, B * G + W), 4)
+    q = jax.random.normal(ks[0], (B, G, qpg, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, W, G, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, W, G, dh), jnp.float32)
+    bhi = _rand_bhi(ks[3], B, G, ksel)
+    lengths = (jnp.arange(B, dtype=jnp.int32) * (W // max(1, B)) + W // 2) % W + 1
+    out = select_head_attention(q, k, v, bhi, lengths, block_w=block_w)
+    ref = sha_ref(q, k, v, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)])
+def test_sha_dtypes(dtype, atol):
+    B, G, qpg, dh, W, ksel = 2, 8, 4, 64, 256, 4
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, G, qpg, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, W, G, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, W, G, dh)).astype(dtype)
+    bhi = _rand_bhi(ks[3], B, G, ksel)
+    lengths = jnp.full((B,), W, jnp.int32)
+    out = select_head_attention(q, k, v, bhi, lengths, block_w=128)
+    ref = sha_ref(q, k, v, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_sha_inactive_heads_zero():
+    B, G, qpg, dh, W, ksel = 2, 8, 2, 32, 128, 3
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, G, qpg, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, W, G, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, W, G, dh), jnp.float32)
+    bhi = _rand_bhi(ks[3], B, G, ksel)
+    lengths = jnp.full((B,), W, jnp.int32)
+    out = np.asarray(select_head_attention(q, k, v, bhi, lengths))
+    active = np.zeros((B, G), bool)
+    for b in range(B):
+        active[b, np.asarray(bhi[b])] = True
+    assert (out[~active] == 0).all()
+    assert (np.abs(out[active]).sum(axis=(-1, -2)) > 0).all()
+
+
+def test_sha_matches_dense_when_all_active():
+    """k_sel == G ==> SHA equals full dense attention."""
+    B, G, qpg, dh, W = 2, 4, 2, 64, 256
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, G, qpg, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, W, G, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, W, G, dh), jnp.float32)
+    bhi = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32), (B, G))
+    lengths = jnp.full((B,), W, jnp.int32)
+    out = select_head_attention(q, k, v, bhi, lengths, block_w=64)
+    kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bgqd,bgwd->bgqw", q, kt) / dh ** 0.5
+    dense = jnp.einsum("bgqw,bgwd->bgqd", jax.nn.softmax(s, -1), vt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense), atol=3e-5)
+
+
+# ---------------------------------------------------------- select_gemm ---
+@pytest.mark.parametrize("M,d,D,bn,nsel,act,block_m", [
+    (32, 64, 256, 16, 4, "relu", 32),
+    (64, 128, 512, 32, 7, "relu", 32),
+    (128, 128, 1024, 64, 3, "gelu", 64),
+    (64, 256, 512, 16, 16, "relu2", 64),
+    (64, 128, 512, 32, 16, "relu", 64),   # all blocks active == dense
+])
+def test_select_gemm_shapes(M, d, D, bn, nsel, act, block_m):
+    ks = jax.random.split(jax.random.fold_in(KEY, M + D), 4)
+    x = jax.random.normal(ks[0], (M, d), jnp.float32) * 0.5
+    w1 = jax.random.normal(ks[1], (d, D), jnp.float32) * 0.1
+    w2 = jax.random.normal(ks[2], (D, d), jnp.float32) * 0.1
+    idx = jnp.sort(jax.random.permutation(ks[3], D // bn)[:nsel]).astype(jnp.int32)
+    out = selective_mlp(x, w1, w2, idx, block_n=bn, act=act, block_m=block_m)
+    ref = select_gemm_ref(x, w1, w2, idx, block_n=bn, act=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+def test_select_gemm_swiglu():
+    M, d, D, bn, nsel = 32, 64, 256, 16, 6
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (M, d), jnp.float32) * 0.5
+    w1 = jax.random.normal(ks[1], (d, D), jnp.float32) * 0.1
+    w2 = jax.random.normal(ks[2], (D, d), jnp.float32) * 0.1
+    w3 = jax.random.normal(ks[3], (d, D), jnp.float32) * 0.1
+    idx = jnp.sort(jax.random.permutation(ks[4], D // bn)[:nsel]).astype(jnp.int32)
+    out = selective_mlp(x, w1, w2, idx, block_n=bn, act="swiglu", w3=w3, block_m=32)
+    ref = select_gemm_ref(x, w1, w2, idx, block_n=bn, act="swiglu", w3=w3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.bfloat16, 5e-2)])
+def test_select_gemm_bf16(dtype, atol):
+    M, d, D, bn, nsel = 32, 64, 256, 16, 5
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (M, d)) * 0.5).astype(dtype)
+    w1 = (jax.random.normal(ks[1], (d, D)) * 0.1).astype(dtype)
+    w2 = (jax.random.normal(ks[2], (D, d)) * 0.1).astype(dtype)
+    idx = jnp.sort(jax.random.permutation(ks[3], D // bn)[:nsel]).astype(jnp.int32)
+    out = selective_mlp(x, w1, w2, idx, block_n=bn, act="relu", block_m=32)
+    ref = select_gemm_ref(x, w1, w2, idx, block_n=bn, act="relu")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_select_gemm_matches_xla_sparse_path():
+    """Kernel == models.mlp.sparse_mlp_apply (the XLA twin used in serving)."""
+    from repro.configs import get_smoke_config
+    from repro.models.mlp import init_mlp, sparse_mlp_apply
+    cfg = get_smoke_config("opt-125m").replace(mlp_bias=False)
+    p = init_mlp(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(KEY, (8, cfg.d_model), jnp.float32)
+    nb = cfg.d_ff // 16
+    idx = jnp.sort(jax.random.permutation(KEY, nb)[:nb // 2]).astype(jnp.int32)
+    got = selective_mlp(x, p["w1"], p["w2"], idx, block_n=16, act="relu", block_m=8)
+    want = sparse_mlp_apply(p, x, cfg, idx, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)

@@ -1,0 +1,77 @@
+"""Extra hypothesis property tests on substrate invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rope import apply_rope, mrope_cos_sin, rope_cos_sin
+
+
+@given(st.integers(2, 8), st.integers(1, 64), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_norm(S, dh_half, seed):
+    """RoPE is a rotation: per-position vector norms are invariant."""
+    dh = 2 * dh_half
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, S, 2, dh))
+    cos, sin = rope_cos_sin(jnp.arange(S), dh, 10000.0)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+
+
+@given(st.integers(1, 40), st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_rope_relative_position(shift, seed):
+    """q_i . k_j after RoPE depends only on i-j (relative encoding)."""
+    dh, S = 16, 64
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (dh,))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (dh,))
+    cos, sin = rope_cos_sin(jnp.arange(S + shift), dh, 10000.0)
+    rot = lambda v, i: apply_rope(v[None, None], cos[i:i + 1], sin[i:i + 1],
+                                  head_axis=False)[0, 0]
+    d1 = float(jnp.dot(rot(q, 5 + shift), rot(k, 5)))
+    d2 = float(jnp.dot(rot(q, 20 + shift), rot(k, 20)))
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)
+
+
+def test_mrope_equals_rope_for_text():
+    """With t==h==w position ids, M-RoPE must equal standard RoPE."""
+    dh, S, B = 16, 12, 2
+    pos = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+    c1, s1 = mrope_cos_sin(pos, dh, 10000.0, (2, 3, 3))
+    c2, s2 = rope_cos_sin(jnp.arange(S), dh, 10000.0)
+    np.testing.assert_allclose(np.asarray(c1[0]), np.asarray(c2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1[0]), np.asarray(s2), rtol=1e-6)
+
+
+@given(st.integers(1, 4), st.integers(2, 8), st.integers(1, 4),
+       st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_sha_ref_scale_invariance_in_v(B, G, qpg, seed):
+    """Attention output is linear in V (softmax only sees Q,K)."""
+    from repro.kernels.sha import sha_ref
+    dh, W = 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, G, qpg, dh))
+    k = jax.random.normal(ks[1], (B, W, G, dh))
+    v = jax.random.normal(ks[2], (B, W, G, dh))
+    bhi = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32), (B, G))
+    lengths = jnp.full((B,), W, jnp.int32)
+    o1 = sha_ref(q, k, v, bhi, lengths)
+    o2 = sha_ref(q, k, 3.0 * v, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(3.0 * o1), np.asarray(o2),
+                               rtol=2e-4, atol=1e-5)
+
+
+@given(st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_kv_quant_bounded_error(seed):
+    from repro.models.attention import _kv_quantize
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 2, 8, 32)) * 3
+    codes, scale = _kv_quantize(x)
+    deq = codes.astype(jnp.float32) * scale[..., None]
+    # absmax int8: error bounded by scale/2 per element
+    err = jnp.abs(deq - x)
+    assert bool(jnp.all(err <= scale[..., None] * 0.5 + 1e-6))

@@ -1,0 +1,113 @@
+"""Training substrate tests: optimizer, losses (incl. chunked-vocab), data
+pipeline determinism, EP MoE subprocess correctness."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.training.losses import xent, xent_chunked
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+KEY = jax.random.PRNGKey(0)
+
+
+def test_xent_chunked_matches_dense():
+    B, S, d, V = 2, 16, 8, 32
+    ks = jax.random.split(KEY, 3)
+    hidden = jax.random.normal(ks[0], (B, S, d))
+    w = jax.random.normal(ks[1], (d, V)) * 0.2
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    dense = xent(jnp.einsum("bsd,dv->bsv", hidden, w), labels)
+    for nc in (1, 2, 4, 16):
+        chunked = xent_chunked(hidden, w, labels, num_chunks=nc)
+        np.testing.assert_allclose(float(dense), float(chunked), rtol=2e-2)
+
+
+def test_xent_chunked_grads_match():
+    B, S, d, V = 2, 8, 8, 16
+    ks = jax.random.split(KEY, 3)
+    hidden = jax.random.normal(ks[0], (B, S, d))
+    w = jax.random.normal(ks[1], (d, V)) * 0.2
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    g1 = jax.grad(lambda w: xent(jnp.einsum("bsd,dv->bsv", hidden, w).astype(jnp.float32), labels))(w)
+    g2 = jax.grad(lambda w: xent_chunked(hidden, w, labels, num_chunks=4))(w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=3e-2, rtol=5e-2)
+
+
+@given(st.floats(1e-5, 1e-2), st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_adamw_descends_quadratic(lr, seed):
+    """AdamW reduces a convex quadratic from any start."""
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    cfg = AdamWConfig(lr=float(lr), clip_norm=1.0)
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    l0 = float(loss(params))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(g, state, params, cfg)
+    assert float(loss(params)) < l0
+
+
+def test_adamw_bf16_moments_close_to_f32():
+    params = {"w": jnp.ones((16,), jnp.float32)}
+    g = {"w": jnp.full((16,), 0.5, jnp.float32)}
+    cfg32 = AdamWConfig(lr=1e-3)
+    cfg16 = AdamWConfig(lr=1e-3, moment_dtype="bfloat16")
+    p32, _ = adamw_update(g, adamw_init(params), params, cfg32)
+    p16, _ = adamw_update(g, adamw_init(params, "bfloat16"), params, cfg16)
+    np.testing.assert_allclose(np.asarray(p32["w"]), np.asarray(p16["w"]),
+                               atol=1e-4)
+
+
+def test_data_pipeline_determinism_and_split():
+    from repro.data import DataConfig, token_stream
+    a = next(token_stream(DataConfig(64, 32, 4, seed=1)))
+    b = next(token_stream(DataConfig(64, 32, 4, seed=1)))
+    c = next(token_stream(DataConfig(64, 32, 4, seed=2)))
+    np.testing.assert_array_equal(a, b)          # deterministic
+    assert (a != c).any()                        # different samples
+    # same language structure: marginals correlate strongly across seeds
+    ha = np.bincount(a.ravel(), minlength=64)
+    hc = np.bincount(c.ravel(), minlength=64)
+    corr = np.corrcoef(ha, hc)[0, 1]
+    assert corr > 0.9, corr
+
+
+def test_moe_ep_subprocess():
+    """EP shard_map MoE == dispatch oracle on an 8-device (4x2) mesh."""
+    code = """
+import jax, jax.numpy as jnp, dataclasses, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import runtime
+from repro.configs import get_smoke_config
+from repro.models.moe import init_moe, moe_apply
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+runtime.set_mesh(mesh)
+cfg = get_smoke_config("jamba-v0.1-52b").replace(dtype="float32", param_dtype="float32")
+cfg_ref = cfg.replace(moe=dataclasses.replace(cfg.moe, impl="dispatch", capacity_factor=4.0))
+cfg_ep  = cfg.replace(moe=dataclasses.replace(cfg.moe, impl="ep", capacity_factor=4.0))
+p = init_moe(jax.random.PRNGKey(0), cfg_ref, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model), jnp.float32)
+f_ref = jax.jit(lambda p, x: moe_apply(p, x, cfg_ref)[0])
+f_ep = jax.jit(lambda p, x: moe_apply(p, x, cfg_ep)[0],
+               in_shardings=(jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), p),
+                             NamedSharding(mesh, P("data", None, None))))
+err = float(jnp.max(jnp.abs(f_ref(p, x) - f_ep(p, x))))
+assert err < 2e-4, err
+print("EP_OK", err)
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0 and "EP_OK" in out.stdout, (
+        out.stdout[-1500:] + out.stderr[-1500:])
