@@ -16,6 +16,7 @@ SUITES = [
     ("kernel_select_gemm", "Fig 3a: Selective GEMM speedup"),
     ("kernel_sha", "Fig 3b: Select Head Attention speedup"),
     ("throughput", "Fig 5/6: decode throughput dense/DejaVu/Polar"),
+    ("continuous_batching", "Serving: Poisson-arrival continuous batching"),
     ("router_ablation", "Fig 10: router cost ablation"),
     ("accuracy_proxy", "Table 1: quality at critical threshold (ppl proxy)"),
     ("calibration", "Alg 2: per-layer dynamic top-k"),

@@ -3,6 +3,13 @@ batched requests — dense vs Deja-Vu-style vs Polar Sparsity — and report
 decode throughput per batch size (the paper's Fig 5 experiment, CPU-scale).
 
     PYTHONPATH=src python examples/serve_batched.py [--steps 32]
+
+With --continuous, instead drives the continuous-batching engine: a Poisson
+trace of requests is admitted mid-stream into a slot-based KV pool
+(scheduler -> kv_pool -> engine.serve) and per-request latencies are
+reported alongside throughput:
+
+    PYTHONPATH=src python examples/serve_batched.py --continuous
 """
 import argparse
 import dataclasses
@@ -14,17 +21,10 @@ sys.path.insert(0, "benchmarks")
 from common import data_cfg, get_toy_model  # noqa: E402
 
 from repro.data import token_stream  # noqa: E402
-from repro.serving.engine import Engine  # noqa: E402
+from repro.serving import Engine, poisson_requests  # noqa: E402
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--batches", type=int, nargs="+", default=[1, 8, 32])
-    args = ap.parse_args()
-
-    print("training / loading the toy OPT model + routers ...")
-    cfg, params, routers, pol = get_toy_model()
+def fixed_batch(args, cfg, params, routers, pol):
     pol_dejavu = dataclasses.replace(pol, attn_sparse=False)
     toks_all = jnp.asarray(next(token_stream(data_cfg(64, seed=123))))
 
@@ -45,6 +45,45 @@ def main():
             tps[name] = eng.stats.decode_tok_per_s
         print(f"{B:>6} {tps['dense']:>12.1f} {tps['dejavu']:>13.1f} "
               f"{tps['polar']:>12.1f} {tps['polar'] / tps['dense']:>12.2f}")
+
+
+def continuous(args, cfg, params, routers, pol):
+    reqs = poisson_requests(args.num_requests, args.rate,
+                            vocab_size=cfg.vocab_size, prompt_len=(4, 16),
+                            max_new_tokens=(8, 24), seed=7)
+    for name, kw in [("dense", {}),
+                     ("polar", dict(routers=routers, policy=pol))]:
+        eng = Engine(cfg, params, cache_width=64, **kw)
+        eng.serve(reqs[:2], max_batch=args.max_batch)    # jit warmup
+        rep = eng.serve(reqs, max_batch=args.max_batch)
+        print(f"\n[{name}] {len(rep.tokens)} requests over {rep.steps} decode "
+              f"steps | {rep.decode_tok_per_s:.1f} tok/s | mean queue "
+              f"{rep.mean_queue_steps:.2f} steps | decode traces: "
+              f"{eng.decode_jit_traces()}")
+        for rid in sorted(rep.tokens)[:6]:
+            r = reqs[rid]
+            print(f"  rid {rid}: arrived {r.arrival:>3}, admitted "
+                  f"{rep.admitted_step[rid]:>3}, finished "
+                  f"{rep.finished_step[rid]:>3}, {len(rep.tokens[rid])} tokens")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching under Poisson arrivals")
+    ap.add_argument("--num-requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    print("training / loading the toy OPT model + routers ...")
+    cfg, params, routers, pol = get_toy_model()
+    if args.continuous:
+        continuous(args, cfg, params, routers, pol)
+    else:
+        fixed_batch(args, cfg, params, routers, pol)
 
 
 if __name__ == "__main__":

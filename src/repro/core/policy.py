@@ -46,6 +46,7 @@ class PolarPolicy:
     wkv_sparse: bool = False         # beyond-paper RWKV head sparsity
     layer0_dense: bool = True        # paper Fig 2b
     impl: str = "gather"             # "gather" (perf) | "mask" (eval)
+                                     # | "kernel" (Pallas SHA decode path)
     selector: str = "router"         # "router" | "oracle" | "random"
     neuron_block: int = 16           # TPU block granularity (DESIGN §3)
     # per-layer calibrated MLP top-k blocks (from Algorithm 2); None -> density

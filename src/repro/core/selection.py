@@ -24,14 +24,22 @@ def head_mask_from_logits(logits, k: int):
     return (logits >= kth).astype(jnp.float32)
 
 
-def union_neuron_blocks(logits, k_blocks: int):
+def union_neuron_blocks(logits, k_blocks: int, weights=None):
     """Union top-k neuron-block selection across the batch (paper §4.1).
 
     logits (B, T, NB) or (B, NB) router outputs -> block_idx (k_blocks,).
     Aggregates predicted activation probabilities over all sequences in the
     batch, then takes a single top-k — one neuron index tensor per batch.
+
+    ``weights`` (B,) optionally downweights sequences before aggregation;
+    the continuous-batching engine passes its active-slot mask so vacant
+    slots (holding stale hidden states) cannot steal union capacity.
     """
     probs = jax.nn.sigmoid(logits.astype(jnp.float32))
+    if weights is not None:
+        w = weights.astype(jnp.float32).reshape(
+            (weights.shape[0],) + (1,) * (probs.ndim - 1))
+        probs = probs * w
     flat = probs.reshape(-1, probs.shape[-1])
     agg = flat.sum(axis=0)                      # (NB,)
     _, idx = jax.lax.top_k(agg, k_blocks)

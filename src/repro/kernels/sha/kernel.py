@@ -21,7 +21,8 @@ NEG_INF = -1e30
 
 
 def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                acc_ref, m_ref, l_ref, *, block_w: int, scale: float):
+                acc_ref, m_ref, l_ref, *, block_w: int, scale: float,
+                soft_cap: float):
     b = pl.program_id(0)
     w = pl.program_id(2)
     n_w = pl.num_programs(2)
@@ -38,6 +39,8 @@ def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+    if soft_cap:  # Gemma/Grok-style logit soft capping (static)
+        s = soft_cap * jnp.tanh(s / soft_cap)
     length = len_ref[b]
     kv_pos = w * block_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(kv_pos < length, s, NEG_INF)
@@ -58,7 +61,7 @@ def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def sha_pallas_compact(q, k, v, bhi, lengths, *, block_w: int = 256,
-                       interpret: bool = True):
+                       interpret: bool = True, soft_cap: float = 0.0):
     """q (B,G,qpg,dh), k/v (B,W,G,dh), bhi (B,k_sel), lengths (B,)
     -> compact O (B, k_sel, qpg, dh)."""
     B, G, qpg, dh = q.shape
@@ -88,7 +91,8 @@ def sha_pallas_compact(q, k, v, bhi, lengths, *, block_w: int = 256,
             pltpu.VMEM((qpg, 1), jnp.float32),
         ],
     )
-    kernel = functools.partial(_sha_kernel, block_w=block_w, scale=scale)
+    kernel = functools.partial(_sha_kernel, block_w=block_w, scale=scale,
+                               soft_cap=float(soft_cap or 0.0))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -9,19 +9,21 @@ import jax.numpy as jnp
 from repro.kernels.sha.kernel import sha_pallas_compact
 
 
-@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret", "soft_cap"))
 def select_head_attention(q, k, v, bhi, lengths, *, block_w: int = 256,
-                          interpret: bool = True):
+                          interpret: bool = True, soft_cap: float = 0.0):
     """Paper Alg. 1: decode attention over ONLY the groups named in ``bhi``.
 
     q (B, G, qpg, dh); k, v (B, W, G, dh); bhi (B, k_sel) int32;
     lengths (B,) int32.  Returns (B, G, qpg, dh) with inactive groups zero.
     For MHA pass G=H, qpg=1 (head sparsity); for GQA pass G=num_kv_heads
-    (group sparsity, paper §4.2).
+    (group sparsity, paper §4.2).  ``soft_cap`` applies Gemma/Grok-style
+    tanh logit capping inside the kernel (0 = off).
     """
     B, G, qpg, dh = q.shape
     o_sel = sha_pallas_compact(q, k, v, bhi, lengths,
-                               block_w=block_w, interpret=interpret)
+                               block_w=block_w, interpret=interpret,
+                               soft_cap=soft_cap)
     out = jnp.zeros((B, G, qpg, dh), o_sel.dtype)
     return out.at[jnp.arange(B)[:, None], bhi].set(o_sel)
 

@@ -1,7 +1,8 @@
 """Pure-JAX model substrate."""
 from repro.models.model import (decode_step, first_attn_layer_id, forward,
                                 init_cache, init_params, init_routers,
-                                prepare_model_config)
+                                init_serve_cache, prepare_model_config)
 
 __all__ = ["forward", "decode_step", "init_params", "init_routers",
-           "init_cache", "prepare_model_config", "first_attn_layer_id"]
+           "init_cache", "init_serve_cache", "prepare_model_config",
+           "first_attn_layer_id"]

@@ -8,6 +8,11 @@ Conventions
 * decode mode: x (B, 1, d), ring-buffer KV cache of width W; ``pos`` is the
   scalar current position, ``slot_pos`` (W,) holds the absolute position
   stored in each cache slot (-1 = empty).  K is cached post-RoPE.
+* serve mode (continuous batching): ``pos`` is instead a (B,) vector of
+  per-sequence cache lengths and ``slot_pos`` is None — every sequence
+  writes its new KV at its own slot ``pos[b]`` and attends over its own
+  prefix [0, pos[b]].  This is what lets requests join/leave the batch
+  mid-stream without re-jitting (fixed shapes, ragged validity).
 * head_select: None | ("mask", m) | ("gather", idx)
     - mask  m   (B, G) float 0/1 multiplier on group outputs (eval path,
       works in both modes);
@@ -90,6 +95,20 @@ def _kv_quantize(x):
 
 
 # ------------------------------------------------------------- helpers ----
+def _write_slot(buf, update, pos, per_seq: bool):
+    """Write one decode step's K/V (or quant scale) into the cache.
+
+    ``buf`` has the slot axis at 2 — (B, Hkv, W, dh) or (B, Hkv, W) — and
+    ``update`` has slot extent 1 there.  per_seq: ``pos`` (B,) scatters row b
+    at its own slot (serve mode); else scalar ring-buffer write."""
+    W = buf.shape[2]
+    if per_seq:
+        bidx = jnp.arange(buf.shape[0])
+        return buf.at[bidx, :, jnp.mod(pos, W)].set(update[:, :, 0])
+    return jax.lax.dynamic_update_slice_in_dim(buf, update, jnp.mod(pos, W),
+                                               axis=2)
+
+
 def _rms(p, x, eps=1e-5):
     xf = x.astype(jnp.float32)
     y = xf * (jnp.mean(xf * xf, -1, keepdims=True) + eps) ** -0.5
@@ -226,16 +245,23 @@ def attn_full(p, x, cfg, *, cos, sin, cache=None, head_select=None,
 
 
 def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
-                head_select=None) -> Tuple[jnp.ndarray, dict]:
+                head_select=None, sha_kernel: bool = False) -> Tuple[jnp.ndarray, dict]:
     """One-token decode over a ring-buffer KV cache.
 
-    x (B, 1, d); cache k/v (B, Hkv, W, dh) head-major; slot_pos (W,)
-    absolute positions (-1 empty); pos scalar int (new token position).
+    x (B, 1, d); cache k/v (B, Hkv, W, dh) head-major.  Two position modes:
+    * legacy (lockstep batch): pos scalar int (new token position),
+      slot_pos (W,) absolute positions (-1 empty);
+    * serve (continuous batching): pos (B,) per-sequence cache lengths,
+      slot_pos None — row b writes at slot pos[b] and attends [0, pos[b]].
+    ``sha_kernel`` routes the gather path through the Pallas SHA kernel
+    (repro/kernels/sha), threading per-sequence lengths into its ragged
+    masking.
     """
     B, _, d = x.shape
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     qpg = H // Hkv
     W = cache["k"].shape[2]
+    per_seq = getattr(pos, "ndim", 0) == 1          # serve mode
 
     q = linear(x, p["wq"], p.get("bq")).reshape(B, 1, H, dh)
     k = linear(x, p["wk"], p.get("bk")).reshape(B, 1, Hkv, dh)
@@ -244,24 +270,39 @@ def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
 
-    slot = jnp.mod(pos, W)
     kT, vT = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
     if cfg.kv_quant:
         kq, ks_ = _kv_quantize(kT)
         vq, vs_ = _kv_quantize(vT)
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2)
-        ksc = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks_, slot, axis=2)
-        vsc = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs_, slot, axis=2)
-        new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        updates = {"k": kq, "v": vq, "k_scale": ks_, "v_scale": vs_}
     else:
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], kT.astype(cache["k"].dtype), slot, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], vT.astype(cache["v"].dtype), slot, axis=2)
-        ksc = vsc = None
-        new_cache = {"k": kc, "v": vc}
-    valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)  # (W,)
+        updates = {"k": kT.astype(cache["k"].dtype),
+                   "v": vT.astype(cache["v"].dtype)}
+    new_cache = {name: _write_slot(cache[name], u, pos, per_seq)
+                 for name, u in updates.items()}
+    kc, vc = new_cache["k"], new_cache["v"]
+    ksc, vsc = new_cache.get("k_scale"), new_cache.get("v_scale")
+    if per_seq:
+        valid = jnp.arange(W)[None, :] <= pos[:, None]              # (B, W)
+    else:
+        valid = jnp.asarray(slot_pos >= 0).at[jnp.mod(pos, W)].set(True)  # (W,)
+
+    if (sha_kernel and not cfg.kv_quant
+            and head_select is not None and head_select[0] == "gather"):
+        # Pallas Selective Head Attention: per-sequence ``lengths`` drive the
+        # kernel's ragged masking (lengths[b] == valid prefix of row b).
+        from repro.kernels.sha import select_head_attention
+        lengths = ((pos + 1) if per_seq
+                   else jnp.full((B,), pos + 1)).astype(jnp.int32)
+        block_w = next(bw for bw in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                       if W % bw == 0)
+        qg = q.reshape(B, Hkv, qpg, dh)
+        out = select_head_attention(qg, kc.transpose(0, 2, 1, 3),
+                                    vc.transpose(0, 2, 1, 3),
+                                    head_select[1], lengths, block_w=block_w,
+                                    soft_cap=float(cfg.logit_soft_cap or 0.0))
+        out = out.reshape(B, 1, H * dh).astype(x.dtype)
+        return linear(out, p["wo"]), new_cache
 
     qg = q.reshape(B, Hkv, qpg, dh)  # (B, G, q, dh)
     if cfg.kv_quant:
@@ -301,7 +342,8 @@ def _sdpa_decode(qg, kt, vt, valid, cfg):
     dh = qg.shape[-1]
     scores = jnp.einsum("bgqd,bgwd->bgqw", qg, kt).astype(jnp.float32) / (dh ** 0.5)
     scores = _softcap(scores, cfg.logit_soft_cap)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    vm = valid[None, None, None, :] if valid.ndim == 1 else valid[:, None, None, :]
+    scores = jnp.where(vm, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
     return jnp.einsum("bgqw,bgwd->bgqd", probs, vt)
 
@@ -369,23 +411,37 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None):
     r = m.kv_lora_rank
     scale = (nope + rope_d) ** -0.5
 
+    per_seq = getattr(pos, "ndim", 0) == 1          # serve mode (see attn_decode)
+
     q = linear(_rms(p["q_norm"], linear(x, p["wq_a"])), p["wq_b"]).reshape(B, H, nope + rope_d)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     kv_a = linear(x, p["wkv_a"])[:, 0]                              # (B, r+rope)
     ckv = _rms(p["kv_norm"], kv_a[..., :r])
     k_rope = kv_a[..., r:]
-    if cos is not None:  # cos/sin (1, rope_d//2) from the caller
-        q_rope = apply_rope(q_rope, cos, sin)
-        k_rope = apply_rope(k_rope, cos, sin, head_axis=False)
+    if cos is not None:  # cos/sin (1, rope_d//2), or (B, 1, rope_d//2) serve
+        # head_axis=False: rotation is elementwise, (B|1, 1, d/2) broadcasts
+        # against q_rope's (B, H, d/2) without a spurious head axis.
+        q_rope = apply_rope(q_rope, cos, sin, head_axis=False)
+        cos1, sin1 = (cos, sin) if cos.ndim == 2 else (cos[:, 0], sin[:, 0])
+        k_rope = apply_rope(k_rope, cos1, sin1, head_axis=False)
 
     W = cache["ckv"].shape[1]
-    slot = jnp.mod(pos, W)
-    ckv_c = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv[:, None].astype(cache["ckv"].dtype), slot, axis=1)
-    krope_c = jax.lax.dynamic_update_slice_in_dim(
-        cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), slot, axis=1)
+    if per_seq:
+        slots = jnp.mod(pos, W)
+        bidx = jnp.arange(B)
+        ckv_c = cache["ckv"].at[bidx, slots].set(ckv.astype(cache["ckv"].dtype))
+        krope_c = cache["krope"].at[bidx, slots].set(
+            k_rope.astype(cache["krope"].dtype))
+        valid = jnp.arange(W)[None, :] <= pos[:, None]              # (B, W)
+    else:
+        slot = jnp.mod(pos, W)
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv[:, None].astype(cache["ckv"].dtype), slot, axis=1)
+        krope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), slot, axis=1)
+        valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)
     new_cache = {"ckv": ckv_c, "krope": krope_c}
-    valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)
+    vmask = valid[None, None] if valid.ndim == 1 else valid[:, None]
 
     wkv_b = p["wkv_b"].reshape(r, H, nope + vd)
     w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]               # (r,H,nope),(r,H,vd)
@@ -413,7 +469,7 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None):
         scores = (jnp.einsum("bhr,bwr->bhw", q_abs, ckv_c.astype(q_abs.dtype))
                   + jnp.einsum("bhd,bwd->bhw", q_rope_h, krope_c.astype(q_rope_h.dtype)))
         scores = scores.astype(jnp.float32) * scale
-        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        scores = jnp.where(vmask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, -1).astype(x.dtype)
         ctx = jnp.einsum("bhw,bwr->bhr", probs, ckv_c.astype(probs.dtype))
         if gather:
@@ -431,7 +487,7 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None):
         scores = (jnp.einsum("bhn,bhwn->bhw", q_nope, k_nope_c)
                   + jnp.einsum("bhd,bwd->bhw", q_rope_h, krope_c.astype(q_rope_h.dtype)))
         scores = scores.astype(jnp.float32) * scale
-        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        scores = jnp.where(vmask, scores, NEG_INF)
         probs = jax.nn.softmax(scores, -1).astype(x.dtype)
         o = jnp.einsum("bhw,bhwv->bhv", probs, v_c)
         if gather:

@@ -8,9 +8,12 @@ segment runs under one ``lax.scan`` (MaxText-style, keeps HLO size O(1) in
 depth — essential for 61-layer dry-run compiles on one CPU core).
 
 Public entry points:
-  init_params / init_routers / init_cache
+  init_params / init_routers / init_cache / init_serve_cache
   forward(...)       -- train / prefill (full sequence)
-  decode_step(...)   -- one token against the ring-buffer cache
+  decode_step(...)   -- one token against the ring-buffer cache; with a
+      serve cache (init_serve_cache: per-slot ``lengths`` + ``active``)
+      every batch row decodes at its own position, which is the substrate
+      for continuous batching (serving/scheduler.py + serving/kv_pool.py)
   prepare_model_config(cfg, policy) -- splits the first attention layer into
       its own segment so the paper's "layer 0 dense" rule is static.
 """
@@ -215,6 +218,19 @@ def init_cache(cfg: ModelConfig, batch: int, width: int):
     }
 
 
+def init_serve_cache(cfg: ModelConfig, max_batch: int, width: int):
+    """Slot-based cache for continuous batching: ``max_batch`` independent
+    slots of width ``width``.  Per-slot ``lengths`` (valid prefix) replaces
+    the lockstep scalar ``pos``; ``active`` marks occupied slots (inactive
+    slots still flow through the fixed-shape decode but never advance)."""
+    base = init_cache(cfg, max_batch, width)
+    return {
+        "layers": base["layers"],
+        "lengths": jnp.zeros((max_batch,), jnp.int32),
+        "active": jnp.zeros((max_batch,), bool),
+    }
+
+
 # ------------------------------------------------------------ selection ---
 def _head_selection(spec, cfg, policy, router_p, h, mode, force_dense):
     """Compute head_select for one layer.  h: (B,S,d) full / (B,1,d) decode."""
@@ -240,16 +256,17 @@ def _head_selection(spec, cfg, policy, router_p, h, mode, force_dense):
     if router_p is None or "head" not in router_p:
         return None  # no routers supplied (e.g. ground-truth collection runs)
     logits = apply_head_router(router_p["head"], h)        # (B,S,G)/(B,1,G)
-    if mode == "decode" and policy.impl == "gather":
+    if mode == "decode" and policy.impl in ("gather", "kernel"):
         return ("gather", batch_head_index(logits[:, 0], k))
     m = head_mask_from_logits(logits, k)
     return ("mask", m[:, 0] if mode == "decode" else m)
 
 
-def _mlp_block_idx(cfg, policy, router_p, h, k_blocks):
-    """Union neuron-block index across the batch (decode/serve path)."""
+def _mlp_block_idx(cfg, policy, router_p, h, k_blocks, active=None):
+    """Union neuron-block index across the batch (decode/serve path).
+    ``active`` (B,) masks vacant serving slots out of the union."""
     logits = apply_mlp_router(router_p["mlp"], h)          # (B,1,NB)
-    return union_neuron_blocks(logits, k_blocks)
+    return union_neuron_blocks(logits, k_blocks, weights=active)
 
 
 # --------------------------------------------------------------- layers ---
@@ -310,14 +327,16 @@ def _layer_full(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
 
 
 def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
-                  slot_pos, pos, k_blocks, force_dense):
+                  slot_pos, pos, k_blocks, force_dense, active=None):
     h = apply_norm(lp["norm1"], x, cfg.norm)
     sel = _head_selection(spec, cfg, policy, router_p, h, "decode", force_dense)
 
     if spec.mixer == "attn":
+        sha = (policy is not None and policy.impl == "kernel"
+               and not force_dense)
         out, new_c = attn.attn_decode(lp["mixer"], h, cfg, cos=cos, sin=sin,
                                       cache=cache, slot_pos=slot_pos, pos=pos,
-                                      head_select=sel)
+                                      head_select=sel, sha_kernel=sha)
     elif spec.mixer == "mla":
         out, new_c = attn.mla_decode(lp["mixer"], h, cfg, cos=cos, sin=sin,
                                      cache=cache, slot_pos=slot_pos, pos=pos,
@@ -334,18 +353,23 @@ def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
     use_sparse = (policy is not None and policy.mlp_sparse and spec.ffn == "dense"
                   and not force_dense and router_p is not None and "mlp" in router_p)
     if spec.ffn == "moe":
-        out2, _ = moe_apply(lp["ffn"], h2, cfg)
+        # dropless routing at decode: a per-token capacity drop would zero a
+        # live request's FFN output (the batch is tiny — dense combine is
+        # both exact and cheap at S == 1)
+        moe_cfg = (cfg if cfg.moe.impl == "dense" else
+                   cfg.replace(moe=dataclasses.replace(cfg.moe, impl="dense")))
+        out2, _ = moe_apply(lp["ffn"], h2, moe_cfg)
     elif spec.mixer == "rwkv":
         block_idx = None
         if use_sparse:
-            block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks)
+            block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks, active)
         out2, _ = rwkv_lib.channel_mix(lp["ffn"], h2, cm_shift[:, None].astype(h2.dtype),
                                        cfg, block_idx=block_idx,
                                        neuron_block=policy.neuron_block if policy else 16)
         new_c = dict(new_c)
         new_c["shift_cm"] = h2[:, 0].astype(jnp.dtype(cfg.dtype))
     elif use_sparse:
-        block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks)
+        block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks, active)
         ffcfg = cfg if not cfg.dense_ff else cfg.replace(d_ff=cfg.dense_ff)
         out2 = sparse_mlp_apply(lp["ffn"], h2, ffcfg, block_idx, policy.neuron_block)
     else:
@@ -377,7 +401,7 @@ def _segment_mlp_k(cfg, policy, seg_idx):
 
 
 def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
-                  slot_pos, pos, collect, remat=False):
+                  slot_pos, pos, collect, remat=False, active=None):
     """Apply all segments via lax.scan.  Returns (x, new_layer_caches, aux)."""
     force_dense = _segment_force_dense(cfg, policy)
     new_caches: Dict[str, Any] = {}
@@ -405,7 +429,7 @@ def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
                     x_c, nc = _layer_decode(lp, spec, x_c, cfg=cfg, policy=policy,
                                             router_p=rp, cos=cos, sin=sin, cache=lc,
                                             slot_pos=slot_pos, pos=pos, k_blocks=kb,
-                                            force_dense=fd)
+                                            force_dense=fd, active=active)
                 else:
                     x_c, nc, aux = _layer_full(lp, spec, x_c, cfg=cfg, policy=policy,
                                                router_p=rp, cos=cos, sin=sin, cache=lc,
@@ -526,14 +550,32 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
                 policy: Optional[PolarPolicy] = None):
     """One-token decode.  tokens (B,) int32 or embeds (B,1,d).
 
+    Two cache layouts (distinguished by pytree structure, so both trace
+    under one jit wrapper without flags):
+    * lockstep (init_cache): scalar ``pos`` + ``slot_pos`` ring buffer —
+      the paper's fixed-batch evaluation setting;
+    * serve (init_serve_cache): per-slot ``lengths`` (B,) + ``active`` (B,)
+      — every row decodes at its own position; inactive slots compute but
+      neither advance nor influence batch-coupled selection (MLP union).
+
     Returns (logits (B, V), new_cache)."""
-    pos = cache["pos"]
-    slot_pos = cache["slot_pos"]
-    positions = jnp.reshape(pos, (1,))
+    serve = "lengths" in cache
+    if serve:
+        lengths = cache["lengths"]
+        active = cache["active"]
+        pos = lengths                                   # (B,) per-slot
+        slot_pos = None
+        positions = lengths[:, None]                    # (B, 1)
+    else:
+        active = None
+        pos = cache["pos"]
+        slot_pos = cache["slot_pos"]
+        positions = jnp.reshape(pos, (1,))
     if cfg.pos_emb == "mrope":
         if pos_ids is None:
             B = tokens.shape[0] if tokens is not None else embeds.shape[0]
-            pos_ids = jnp.broadcast_to(positions[None, None], (3, B, 1))
+            base = positions[None, None] if positions.ndim == 1 else positions[None]
+            pos_ids = jnp.broadcast_to(base, (3, B, 1))
     cos, sin = _trig(cfg, positions, pos_ids)
     if tokens is not None and tokens.ndim == 1:
         tokens = tokens[:, None]
@@ -541,13 +583,21 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
 
     x, new_caches, _, _ = _run_segments(
         params, cfg, x, mode="decode", policy=policy, routers=routers,
-        cache=cache, cos=cos, sin=sin, slot_pos=slot_pos, pos=pos, collect=False)
+        cache=cache, cos=cos, sin=sin, slot_pos=slot_pos, pos=pos,
+        collect=False, active=active)
 
     logits = _lm_head(params, cfg, x)[:, 0]
-    W = slot_pos.shape[0]
-    new_cache = {
-        "layers": new_caches,
-        "slot_pos": slot_pos.at[jnp.mod(pos, W)].set(pos),
-        "pos": pos + 1,
-    }
+    if serve:
+        new_cache = {
+            "layers": new_caches,
+            "lengths": lengths + active.astype(jnp.int32),
+            "active": active,
+        }
+    else:
+        W = slot_pos.shape[0]
+        new_cache = {
+            "layers": new_caches,
+            "slot_pos": slot_pos.at[jnp.mod(pos, W)].set(pos),
+            "pos": pos + 1,
+        }
     return logits, new_cache

@@ -2,23 +2,34 @@
 Sparsity integrated (head/group routers every sparse layer, MLP union
 routing for ReLU-family FFNs).
 
-The engine owns the jitted step functions and the ring-buffer cache.  It is
-deliberately synchronous-batch (the paper's evaluation setting: fixed batch,
-fixed sequence length, measure decode throughput).
+Two serving modes:
+
+* ``prefill()`` / ``generate()`` — the paper's synchronous fixed-batch
+  evaluation setting (fixed batch, fixed sequence length, measure decode
+  throughput).
+* ``serve(requests)`` — continuous batching: a request-level scheduler
+  (serving/scheduler.py) admits requests into a slot-based paged KV pool
+  (serving/kv_pool.py) as they arrive, evicts finished sequences, and
+  backfills freed slots — all at fixed array shapes, so the decode step
+  compiles exactly once no matter how traffic arrives.  Prompts are
+  right-padded to power-of-two buckets so prefill compiles once per bucket.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import PolarPolicy
 from repro.models import (decode_step, forward, init_cache,
                           prepare_model_config)
 from repro.serving import sampling
+from repro.serving.kv_pool import KVPool
+from repro.serving.scheduler import Request, Scheduler, SlotRun
 
 
 @dataclass
@@ -30,6 +41,31 @@ class EngineStats:
     @property
     def decode_tok_per_s(self) -> float:
         return self.tokens_decoded / self.decode_s if self.decode_s else 0.0
+
+
+@dataclass
+class ServeReport:
+    """Outcome of one ``Engine.serve`` run."""
+    tokens: Dict[int, List[int]]          # rid -> generated tokens
+    admitted_step: Dict[int, int]         # rid -> decode step of admission
+    finished_step: Dict[int, int]
+    arrival: Dict[int, int]
+    steps: int = 0                        # decode steps executed
+    wall_s: float = 0.0
+    tokens_decoded: int = 0               # tokens produced by decode steps
+    slots_served: int = 0                 # admissions (incl. slot reuse)
+    rejected: List[int] = field(default_factory=list)  # rids never admissible
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_decoded / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def mean_queue_steps(self) -> float:
+        # over admitted requests only: a max_steps cutoff can leave queued
+        # requests that never got a slot
+        waits = [step - self.arrival[r] for r, step in self.admitted_step.items()]
+        return float(np.mean(waits)) if waits else 0.0
 
 
 class Engine:
@@ -62,6 +98,7 @@ class Engine:
         self._decode = jax.jit(_decode)
         self.cache = None
 
+    # ------------------------------------------------- synchronous batch ---
     def prefill(self, tokens=None, embeds=None):
         B = tokens.shape[0] if tokens is not None else embeds.shape[0]
         cache = init_cache(self.cfg, B, self.cache_width)
@@ -95,6 +132,118 @@ class Engine:
 
     def _batch(self) -> int:
         return jax.tree_util.tree_leaves(self.cache["layers"])[0].shape[1]
+
+    # ------------------------------------------------ continuous batching ---
+    def _prefill_request(self, req: Request):
+        """Prefill one prompt at a power-of-two bucket length (one jit trace
+        per bucket).  Returns (first greedy/sampled token, layer caches,
+        prompt length)."""
+        L = len(req.prompt)
+        P = 8
+        while P < L:
+            P *= 2
+        P = min(P, self.cache_width - 1)
+        assert L <= P, f"prompt length {L} exceeds cache width {self.cache_width}"
+        toks = np.zeros((1, P), np.int32)
+        toks[0, :L] = req.prompt
+        cache = init_cache(self.cfg, 1, self.cache_width)
+        t0 = time.perf_counter()
+        out = self._prefill(self.params, jnp.asarray(toks), None, cache)
+        logits = out["logits"][0, L - 1]
+        logits.block_until_ready()
+        self.stats.prefill_s += time.perf_counter() - t0
+        tok = int(self.sampler(logits[None], jax.random.PRNGKey(req.rid))[0])
+        return tok, out["cache"]["layers"], L
+
+    def serve(self, requests: Sequence[Request], *, max_batch: int = 4,
+              max_steps: Optional[int] = None) -> ServeReport:
+        """Continuous-batching serve loop over ``requests``.
+
+        Each simulated decode step: (1) admit arrived requests into free
+        pool slots (prefill + scatter-insert), (2) one batched decode over
+        all slots, (3) evict finished sequences so their slots backfill.
+        ``Request.arrival`` is in units of decode steps; the loop fast-
+        forwards idle gaps.  Returns a ServeReport with per-request tokens
+        and throughput/queueing stats.
+        """
+        pool = KVPool(self.cfg, max_batch, self.cache_width)
+        sched = Scheduler(max_batch, max_length=self.cache_width - 1)
+        report = ServeReport(tokens={}, admitted_step={}, finished_step={},
+                             arrival={r.rid: r.arrival for r in requests})
+        # a prompt that cannot fit the cache width can never be admitted:
+        # reject it up front instead of crashing the run mid-stream
+        admissible = []
+        for r in requests:
+            if len(r.prompt) >= self.cache_width:
+                report.rejected.append(r.rid)
+            else:
+                admissible.append(r)
+        sched.submit(admissible)
+
+        step = 0
+        t0 = time.perf_counter()
+        while not sched.done:
+            if max_steps is not None and step >= max_steps:
+                break
+            # ---- admission: backfill free slots with arrived requests ----
+            for req in sched.pop_arrived(step, budget=pool.num_free):
+                slot = pool.claim()
+                tok, layers, L = self._prefill_request(req)
+                pool.insert(layers, slot, L)
+                run = sched.bind(slot, req, step, tok)
+                report.admitted_step[req.rid] = step
+                report.slots_served += 1
+                if run.done:                     # e.g. max_new_tokens == 1
+                    self._finish(run, sched, pool, report)
+
+            if not sched.running:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                step = max(step + 1, nxt)        # fast-forward idle time
+                continue
+
+            # ---- one batched decode over every slot (fixed shapes) -------
+            cur = np.zeros((max_batch,), np.int32)
+            for slot, run in sched.running.items():
+                cur[slot] = run.pending
+            td = time.perf_counter()
+            logits, pool.cache = self._decode(self.params, self.routers,
+                                              jnp.asarray(cur), pool.cache)
+            toks = np.asarray(
+                self.sampler(logits, jax.random.fold_in(jax.random.PRNGKey(1), step)))
+            dt = time.perf_counter() - td
+            self.stats.decode_s += dt
+            n_active = len(sched.running)
+            self.stats.tokens_decoded += n_active
+            report.tokens_decoded += n_active
+            step += 1
+
+            # ---- account tokens, evict finished, free their slots --------
+            for slot in list(sched.running):
+                run = sched.record(slot, int(toks[slot]), step)
+                if run.done:
+                    self._finish(run, sched, pool, report)
+
+        report.steps = step
+        report.wall_s = time.perf_counter() - t0
+        return report
+
+    def _finish(self, run: SlotRun, sched: Scheduler, pool: KVPool,
+                report: ServeReport) -> None:
+        sched.evict(run.slot)
+        pool.release(run.slot)
+        r = run.request
+        gen = run.generated
+        if r.eos_id is not None and gen and gen[-1] == r.eos_id:
+            gen = gen[:-1]
+        report.tokens[r.rid] = gen
+        report.finished_step[r.rid] = run.finished_step
+
+    def decode_jit_traces(self) -> int:
+        """Number of compiled decode variants (continuous batching must
+        hold this constant while requests join/leave)."""
+        return self._decode._cache_size()
 
 
 def build_engine(cfg, params_key, *, policy=None, routers_key=None,

@@ -1,0 +1,131 @@
+"""Request-level scheduler for continuous batching.
+
+Pure-Python bookkeeping (no jax): FCFS admission of waiting requests into
+free slots, per-request generation state, and finished-sequence eviction so
+freed slots backfill from the queue.  Time is measured in engine decode
+steps — ``Request.arrival`` says at which decode step the request becomes
+visible, which makes async-arrival simulations (Poisson traces, bursts)
+exactly reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request."""
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int = 16
+    arrival: int = 0                 # decode step at which it arrives
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self.prompt = tuple(int(t) for t in self.prompt)
+        assert len(self.prompt) >= 1, "empty prompt"
+        assert self.max_new_tokens >= 1
+
+
+@dataclass
+class SlotRun:
+    """Live per-slot state while a request occupies a KV-pool slot."""
+    request: Request
+    slot: int
+    admitted_step: int
+    length: int                      # valid cache prefix (tokens stored)
+    pending: int                     # next input token (last sampled)
+    generated: List[int] = field(default_factory=list)
+    finished_step: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished_step is not None
+
+
+class Scheduler:
+    """Admission + eviction over ``max_batch`` slots and a FCFS queue."""
+
+    def __init__(self, max_batch: int, max_length: int):
+        self.max_batch = int(max_batch)
+        self.max_length = int(max_length)     # hard cache-width bound
+        self.waiting: List[Request] = []
+        self.running: Dict[int, SlotRun] = {}  # slot -> SlotRun
+        self.finished: List[SlotRun] = []
+
+    # -------------------------------------------------------- admission ---
+    def submit(self, requests: Sequence[Request]) -> None:
+        self.waiting.extend(requests)
+        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
+
+    def pop_arrived(self, step: int, budget: int) -> List[Request]:
+        """Up to ``budget`` arrived requests, FCFS."""
+        out: List[Request] = []
+        while self.waiting and budget > 0 and self.waiting[0].arrival <= step:
+            out.append(self.waiting.pop(0))
+            budget -= 1
+        return out
+
+    def bind(self, slot: int, request: Request, step: int,
+             first_token: int) -> SlotRun:
+        """Occupy ``slot``; the prefill already produced ``first_token``."""
+        run = SlotRun(request=request, slot=slot, admitted_step=step,
+                      length=len(request.prompt), pending=first_token,
+                      generated=[first_token])
+        self.running[slot] = run
+        self._maybe_finish(run, step)
+        return run
+
+    # ----------------------------------------------------------- decode ---
+    def record(self, slot: int, token: int, step: int) -> SlotRun:
+        """Account one decoded token for ``slot``; marks finish when the
+        request hits max_new_tokens / EOS / the cache-width bound."""
+        run = self.running[slot]
+        run.generated.append(token)
+        run.pending = token
+        run.length += 1              # the decode step wrote pending's KV
+        self._maybe_finish(run, step)
+        return run
+
+    def _maybe_finish(self, run: SlotRun, step: int) -> None:
+        r = run.request
+        if (len(run.generated) >= r.max_new_tokens
+                or (r.eos_id is not None and run.generated[-1] == r.eos_id)
+                or run.length >= self.max_length):
+            run.finished_step = step
+
+    def evict(self, slot: int) -> SlotRun:
+        run = self.running.pop(slot)
+        self.finished.append(run)
+        return run
+
+    # ------------------------------------------------------------ state ---
+    @property
+    def done(self) -> bool:
+        return not self.waiting and not self.running
+
+    def next_arrival(self) -> Optional[int]:
+        return self.waiting[0].arrival if self.waiting else None
+
+
+def poisson_requests(n: int, rate: float, *, vocab_size: int,
+                     prompt_len: Tuple[int, int] = (4, 16),
+                     max_new_tokens: Tuple[int, int] = (8, 24),
+                     seed: int = 0) -> List[Request]:
+    """Synthetic async-arrival trace: exponential inter-arrival gaps with
+    mean ``1/rate`` (requests per decode step), uniform prompt/output
+    lengths.  Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        mnew = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
+        prompt = rng.integers(0, vocab_size, size=plen).tolist()
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnew,
+                            arrival=int(t)))
+    return reqs

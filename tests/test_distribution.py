@@ -65,6 +65,7 @@ def test_batch_pspec_fallback():
 
 
 # --------------------------------------------------- subprocess dry-run ---
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("internlm2-1.8b", "decode_32k"),
     ("llama3-8b", "train_4k"),

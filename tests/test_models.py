@@ -1,6 +1,8 @@
 """Per-arch smoke tests (deliverable f): reduced variant of each assigned
 family runs one forward + one train step on CPU, asserting output shapes
 and no NaNs."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,6 +35,7 @@ def test_smoke_forward(arch):
         assert bool(jnp.isfinite(out["mtp_logits"]).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch).replace(dtype="float32", param_dtype="float32")
@@ -55,6 +58,12 @@ def test_smoke_train_step(arch):
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_decode(arch):
     cfg = get_smoke_config(arch).replace(dtype="float32", param_dtype="float32")
+    if cfg.moe is not None:
+        # the prefill+decode == full invariant is only well-defined under
+        # dropless routing: capacity drops depend on how many tokens share a
+        # dispatch (18 tokens at prefill vs 2 at decode), so the dropful path
+        # legitimately diverges (covered by test_moe_capacity_drops_tokens)
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, impl="dense"))
     params = init_params(KEY, cfg, max_seq_len=64)
     B, S, W = 2, 9, 16
     kw = _inputs(cfg, B, S, KEY)
@@ -89,6 +98,7 @@ def test_sliding_window_attention():
     assert float(jnp.abs(full[:, -1] - win[:, -1]).max()) > 1e-4
 
 
+@pytest.mark.slow
 def test_ring_buffer_decode_matches_window():
     """Decoding past the ring-buffer width == windowed attention semantics."""
     cfg = get_smoke_config("internlm2-1.8b").replace(
@@ -106,6 +116,7 @@ def test_ring_buffer_decode_matches_window():
                                atol=2e-4, rtol=2e-4)
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     cfg = get_smoke_config("opt-125m")
     from repro.training import train
