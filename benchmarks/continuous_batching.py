@@ -1,9 +1,12 @@
 """Continuous-batching throughput under async (Poisson) arrivals — the
 serving regime the paper's batched claims are about, beyond its fixed-batch
 evaluation: requests of mixed prompt/output lengths stream in, the engine
-admits them into a slot-based KV pool, evicts finished sequences, and
-backfills.  Compares dense vs Polar (head-sparse) decode tokens/s and
-queueing delay at the same trace.
+admits them into a paged KV pool, evicts finished sequences, and backfills.
+Compares dense vs Polar (head-sparse) decode tokens/s and queueing delay at
+the same trace, and records the paged pool's memory/I-O profile: page
+occupancy, pages-scanned-per-step (vs the full-width dense-equivalent
+scan), preemptions, and pool HBM bytes vs the contiguous
+``max_batch x width`` reservation.
 
 Runs end-to-end on CPU (the SHA Pallas kernel path stays available via
 --impl kernel, interpret mode).  Emits `name,config,value` rows for
@@ -17,20 +20,33 @@ import dataclasses
 import json
 import os
 
+import jax
+import numpy as np
+
 from benchmarks.common import get_toy_model
+from repro.models import init_serve_cache
 from repro.serving import Engine, poisson_requests
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
+def _contiguous_hbm_bytes(cfg, max_batch: int, width: int) -> int:
+    """KV bytes the contiguous pool would reserve — via eval_shape, so the
+    comparison never materializes the very allocation paging avoids."""
+    shapes = jax.eval_shape(lambda: init_serve_cache(cfg, max_batch, width))
+    return int(sum(np.prod(s.shape) * s.dtype.itemsize
+                   for s in jax.tree_util.tree_leaves(shapes["layers"])))
+
+
 def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
-                impl=None):
+                impl=None, page_w=None, num_pages=None):
     kw = {}
     if pol is not None:
         if impl:
             pol = dataclasses.replace(pol, impl=impl)
         kw = dict(routers=routers, policy=pol)
-    eng = Engine(cfg, params, cache_width=cache_width, **kw)
+    eng = Engine(cfg, params, cache_width=cache_width, page_w=page_w,
+                 num_pages=num_pages, **kw)
     eng.serve(reqs[:2], max_batch=max_batch)          # jit warmup
     report = eng.serve(reqs, max_batch=max_batch)
     assert eng.decode_jit_traces() <= 1, "continuous batching re-jitted!"
@@ -38,7 +54,8 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
 
 
 def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
-        impl: str = "gather", seed: int = 0):
+        impl: str = "gather", seed: int = 0, page_w: int = 16,
+        page_share: float = 0.5):
     if num_requests < 1:
         raise SystemExit("--num-requests must be >= 1")
     cfg, params, routers, pol = get_toy_model()
@@ -46,11 +63,23 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
     reqs = poisson_requests(num_requests, rate, vocab_size=cfg.vocab_size,
                             prompt_len=(4, 16), max_new_tokens=(8, 24),
                             seed=seed)
+    # paged pool: provision page_share of the contiguous full reservation —
+    # the memory-scales-with-tokens-in-flight demonstration (preemptions,
+    # if the trace ever exceeds it, are recorded, not fatal)
+    paged = page_w > 0
+    num_pages = None
+    if paged:
+        pages_per_slot = -(-cache_width // page_w)
+        full = max_batch * pages_per_slot
+        num_pages = max(pages_per_slot, int(full * page_share))
+    contig_hbm = _contiguous_hbm_bytes(cfg, max_batch, cache_width)
     rows, json_rows = [], []
     for name, policy in [("dense", None), ("polar", pol)]:
         rep = _serve_once(cfg, params, routers, policy, reqs,
                           max_batch=max_batch, cache_width=cache_width,
-                          impl=impl if name == "polar" else None)
+                          impl=impl if name == "polar" else None,
+                          page_w=page_w if paged else None,
+                          num_pages=num_pages)
         assert len(rep.tokens) == num_requests
         row = {
             "benchmark": "continuous_batching",
@@ -64,12 +93,33 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
             "decode_tok_per_s": round(rep.decode_tok_per_s, 2),
             "mean_queue_steps": round(rep.mean_queue_steps, 3),
             "slots_served": rep.slots_served,
+            # ------------------------------------ paged pool profile ------
+            "page_w": rep.page_w,
+            "num_pages": rep.num_pages,
+            "pages_scanned": rep.pages_scanned,
+            "pages_scanned_per_step": round(rep.pages_scanned_per_step, 2),
+            "dense_equiv_pages_per_step": round(
+                rep.pages_scanned_dense_equiv / rep.decode_steps_run, 2)
+                if rep.decode_steps_run else 0.0,
+            "page_scan_ratio": round(
+                rep.pages_scanned / rep.pages_scanned_dense_equiv, 3)
+                if rep.pages_scanned_dense_equiv else None,
+            "page_occupancy_mean": round(rep.page_occupancy_mean, 3),
+            "peak_pages_in_use": rep.peak_pages_in_use,
+            "preemptions": rep.preemptions,
+            "pool_hbm_bytes": rep.pool_hbm_bytes,
+            "contiguous_pool_hbm_bytes": contig_hbm,
         }
         json_rows.append(row)
         rows.append(("cb_decode_tok_per_s", f"{name}_mb{max_batch}",
                      row["decode_tok_per_s"]))
         rows.append(("cb_mean_queue_steps", f"{name}_mb{max_batch}",
                      row["mean_queue_steps"]))
+        if row["page_scan_ratio"] is not None:
+            rows.append(("cb_page_scan_ratio", f"{name}_mb{max_batch}",
+                         row["page_scan_ratio"]))
+            rows.append(("cb_pool_hbm_vs_contiguous", f"{name}_mb{max_batch}",
+                         round(row["pool_hbm_bytes"] / contig_hbm, 3)))
     tps = {r["policy"]: r["decode_tok_per_s"] for r in json_rows}
     rows.append(("cb_polar_vs_dense_speedup", f"mb{max_batch}",
                  round(tps["polar"] / tps["dense"], 3)))
@@ -93,9 +143,15 @@ def main():
     ap.add_argument("--impl", default="gather", choices=["gather", "kernel"],
                     help="polar decode path: XLA gather or Pallas SHA kernel")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-w", type=int, default=16,
+                    help="KV page size (0 = contiguous slot pool)")
+    ap.add_argument("--page-share", type=float, default=0.5,
+                    help="physical pages as a fraction of the contiguous "
+                         "max_batch x width reservation")
     args = ap.parse_args()
     for name, config, value in run(args.num_requests, args.rate,
-                                   args.max_batch, args.impl, args.seed):
+                                   args.max_batch, args.impl, args.seed,
+                                   args.page_w, args.page_share):
         print(f"{name},{config},{value}")
 
 

@@ -51,15 +51,24 @@ def continuous(args, cfg, params, routers, pol):
     reqs = poisson_requests(args.num_requests, args.rate,
                             vocab_size=cfg.vocab_size, prompt_len=(4, 16),
                             max_new_tokens=(8, 24), seed=7)
+    page_w = None if args.page_w == 0 else args.page_w
     for name, kw in [("dense", {}),
                      ("polar", dict(routers=routers, policy=pol))]:
-        eng = Engine(cfg, params, cache_width=64, **kw)
+        eng = Engine(cfg, params, cache_width=64, page_w=page_w,
+                     num_pages=args.num_pages, **kw)
         eng.serve(reqs[:2], max_batch=args.max_batch)    # jit warmup
         rep = eng.serve(reqs, max_batch=args.max_batch)
         print(f"\n[{name}] {len(rep.tokens)} requests over {rep.steps} decode "
               f"steps | {rep.decode_tok_per_s:.1f} tok/s | mean queue "
               f"{rep.mean_queue_steps:.2f} steps | decode traces: "
               f"{eng.decode_jit_traces()}")
+        if rep.page_w is not None:
+            print(f"  paged KV: page_w {rep.page_w}, {rep.num_pages} pages "
+                  f"({rep.pool_hbm_bytes / 1e6:.1f} MB KV) | "
+                  f"{rep.pages_scanned_per_step:.1f} pages/step scanned vs "
+                  f"{rep.pages_scanned_dense_equiv / max(rep.decode_steps_run, 1):.1f} "
+                  f"full-width | peak in use {rep.peak_pages_in_use} | "
+                  f"preemptions {rep.preemptions}")
         for rid in sorted(rep.tokens)[:6]:
             r = reqs[rid]
             print(f"  rid {rid}: arrived {r.arrival:>3}, admitted "
@@ -76,6 +85,10 @@ def main():
     ap.add_argument("--num-requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=0.5)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-w", type=int, default=16,
+                    help="KV page size for --continuous (0 = contiguous pool)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical KV pages (default: full provisioning)")
     args = ap.parse_args()
 
     print("training / loading the toy OPT model + routers ...")

@@ -1,14 +1,19 @@
 """Pallas TPU kernels for the paper's two compute hot-spots:
 
-* sha — Selective Head/Group FlashAttention decode (paper Alg. 1)
+* sha — Selective Head/Group FlashAttention decode (paper Alg. 1), in a
+  contiguous-cache variant and a paged variant whose K/V index maps route
+  through a scalar-prefetched page table (length-proportional I/O)
 * select_gemm — fused Selective GEMM MLP (paper Alg. 3 + fused 2nd GEMM)
 
 Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper) and
-ref.py (pure-jnp oracle).  Validated in interpret=True on CPU; on TPU set
-interpret=False.
+ref.py (pure-jnp oracle).  Execution mode is decided by
+``runtime.pallas_interpret()`` (compile on TPU, interpret elsewhere);
+``REPRO_PALLAS_INTERPRET=0/1`` or ``runtime.set_pallas_interpret``
+overrides it.
 """
 from repro.kernels.select_gemm import select_gemm_ref, selective_mlp
-from repro.kernels.sha import select_group_attention, select_head_attention, sha_ref
+from repro.kernels.sha import (select_group_attention, select_head_attention,
+                               select_head_attention_paged, sha_ref)
 
 __all__ = ["selective_mlp", "select_gemm_ref", "select_head_attention",
-           "select_group_attention", "sha_ref"]
+           "select_head_attention_paged", "select_group_attention", "sha_ref"]

@@ -14,11 +14,14 @@ n_sel grid dimension (accumulation in-place, f32).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro import runtime
 
 
 def _kernel(idx_ref, x_ref, w1_ref, w2_ref, o_ref, *, act: str):
@@ -65,8 +68,12 @@ def _kernel_glu(idx_ref, x_ref, w1_ref, w3_ref, w2_ref, o_ref):
 
 
 def select_gemm_pallas(x, w1, w2, block_idx, *, block_n: int, act: str = "relu",
-                       w3=None, block_m: int = 128, interpret: bool = True):
-    """x (M, d); w1/w3 (d, D); w2 (D, d); block_idx (n_sel,) -> (M, d)."""
+                       w3=None, block_m: int = 128,
+                       interpret: Optional[bool] = None):
+    """x (M, d); w1/w3 (d, D); w2 (D, d); block_idx (n_sel,) -> (M, d).
+
+    ``interpret=None`` defers to ``runtime.pallas_interpret()``."""
+    interpret = runtime.pallas_interpret() if interpret is None else interpret
     M, d = x.shape
     D = w1.shape[1]
     nb = D // block_n

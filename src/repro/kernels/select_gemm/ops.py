@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
@@ -10,9 +11,11 @@ from repro.kernels.select_gemm.kernel import select_gemm_pallas
 
 @functools.partial(jax.jit, static_argnames=("block_n", "act", "block_m", "interpret"))
 def selective_mlp(x, w1, w2, block_idx, *, block_n: int, act: str = "relu",
-                  w3=None, block_m: int = 128, interpret: bool = True):
+                  w3=None, block_m: int = 128,
+                  interpret: Optional[bool] = None):
     """Paper Alg. 3 (+ fused second GEMM): sparse FFN over the union-active
-    neuron blocks.  x (M, d) or (B, S, d); returns the same leading shape."""
+    neuron blocks.  x (M, d) or (B, S, d); returns the same leading shape.
+    ``interpret=None`` defers to ``runtime.pallas_interpret()``."""
     shp = x.shape
     if x.ndim == 3:
         x = x.reshape(-1, shp[-1])

@@ -1,4 +1,7 @@
-from repro.kernels.sha.ops import select_group_attention, select_head_attention
+from repro.kernels.sha.ops import (select_group_attention,
+                                   select_head_attention,
+                                   select_head_attention_paged)
 from repro.kernels.sha.ref import sha_ref
 
-__all__ = ["select_head_attention", "select_group_attention", "sha_ref"]
+__all__ = ["select_head_attention", "select_head_attention_paged",
+           "select_group_attention", "sha_ref"]

@@ -1,23 +1,45 @@
-"""Selective Head/Group FlashAttention decode kernel (paper Algorithm 1),
+"""Selective Head/Group FlashAttention decode kernels (paper Algorithm 1),
 TPU-native via Pallas.
 
 TPU adaptation (DESIGN §3): the per-sequence ``batch_head_index`` is a
 scalar-prefetch operand; it drives the K/V BlockSpec index_maps, so ONLY
 active groups' KV blocks are streamed HBM->VMEM — the paper's I/O saving.
-Grid = (B, k_sel, W // block_w) with online-softmax accumulation in VMEM
-scratch across the innermost (kv) grid dimension.  Output is written
-compact (B, k_sel, qpg, dh); the wrapper scatters to (B, G, qpg, dh).
+
+Two variants:
+
+* ``sha_pallas_compact`` — contiguous per-sequence KV (B, W, G, dh).
+  Grid = (B, k_sel, ceil(W / block_w)); every KV block of every sequence
+  is visited, masked by ``lengths``.
+* ``sha_pallas_paged`` — paged KV pool (P, G, page_w, dh) indexed through a
+  scalar-prefetched per-slot page table.  Grid = (B, k_sel, max_pages);
+  pages at or past ``lengths[b]`` contribute nothing (compute is skipped
+  under ``pl.when`` and their index map collapses onto the pool's sink
+  page, so the pipeline re-uses one already-resident block instead of
+  streaming stale pages).  HBM->VMEM traffic is therefore proportional to
+  ``k_sel x ceil(length / page_w)`` per sequence — decode attention cost
+  scales with tokens actually in flight, not the maximum cache width.
+
+Both use online-softmax accumulation in VMEM scratch across the innermost
+(kv) grid dimension and write output compact (B, k_sel, qpg, dh); the
+wrappers scatter to (B, G, qpg, dh).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import runtime
+
 NEG_INF = -1e30
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return runtime.pallas_interpret() if interpret is None else interpret
 
 
 def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
@@ -61,14 +83,25 @@ def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def sha_pallas_compact(q, k, v, bhi, lengths, *, block_w: int = 256,
-                       interpret: bool = True, soft_cap: float = 0.0):
+                       interpret: Optional[bool] = None, soft_cap: float = 0.0):
     """q (B,G,qpg,dh), k/v (B,W,G,dh), bhi (B,k_sel), lengths (B,)
-    -> compact O (B, k_sel, qpg, dh)."""
+    -> compact O (B, k_sel, qpg, dh).
+
+    ``block_w`` is clamped to W; when the width is not a multiple of the
+    block, K/V are zero-padded up to the next block boundary — the padded
+    tail sits at positions >= W, which the ``lengths`` mask (lengths <= W)
+    already excludes, so no caller-visible semantics change.
+    """
     B, G, qpg, dh = q.shape
     W = k.shape[1]
     k_sel = bhi.shape[1]
+    interpret = _resolve_interpret(interpret)
     block_w = min(block_w, W)
-    assert W % block_w == 0, (W, block_w)
+    if W % block_w:
+        pad = block_w - W % block_w
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        W += pad
     grid = (B, k_sel, W // block_w)
     scale = dh ** -0.5
 
@@ -99,3 +132,98 @@ def sha_pallas_compact(q, k, v, bhi, lengths, *, block_w: int = 256,
         out_shape=jax.ShapeDtypeStruct((B, k_sel, qpg, dh), q.dtype),
         interpret=interpret,
     )(bhi, lengths, q, k, v)
+
+
+# ------------------------------------------------------------ paged SHA ---
+def _sha_paged_kernel(pt_ref, bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                      acc_ref, m_ref, l_ref, *, page_w: int, scale: float,
+                      soft_cap: float):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+    n_w = pl.num_programs(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(w * page_w < length)
+    def _page():
+        q = q_ref[0, 0]                              # (qpg, dh)
+        k = k_ref[0, 0]                              # (page_w, dh)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if soft_cap:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        kv_pos = w * page_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(w == n_w - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def sha_pallas_paged(q, k_pages, v_pages, bhi, page_table, lengths, *,
+                     interpret: Optional[bool] = None, soft_cap: float = 0.0):
+    """Length-proportional SHA decode over a paged KV pool.
+
+    q (B, G, qpg, dh); k_pages/v_pages (P, G, page_w, dh) — the physical
+    page pool, head-major inside each page; page_table (B, max_pages) int32
+    physical page ids (entries past the sequence's allocated pages must be
+    any in-range id, conventionally the pool's sink page); bhi (B, k_sel)
+    active group ids; lengths (B,) valid tokens (positions [0, length)).
+
+    Returns compact O (B, k_sel, qpg, dh).  Sequences with length 0
+    produce zero rows (no page is ever visited for them).
+    """
+    B, G, qpg, dh = q.shape
+    P, _, page_w, _ = k_pages.shape
+    k_sel = bhi.shape[1]
+    max_pages = page_table.shape[1]
+    interpret = _resolve_interpret(interpret)
+    grid = (B, k_sel, max_pages)
+    scale = dh ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qpg, dh),
+                         lambda b, j, w, pt, bhi, ln: (b, bhi[b, j], 0, 0)),
+            # one physical page of one group, routed through the page table
+            pl.BlockSpec((1, 1, page_w, dh),
+                         lambda b, j, w, pt, bhi, ln: (pt[b, w], bhi[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, page_w, dh),
+                         lambda b, j, w, pt, bhi, ln: (pt[b, w], bhi[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpg, dh),
+                               lambda b, j, w, pt, bhi, ln: (b, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qpg, dh), jnp.float32),
+            pltpu.VMEM((qpg, 1), jnp.float32),
+            pltpu.VMEM((qpg, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_sha_paged_kernel, page_w=page_w, scale=scale,
+                               soft_cap=float(soft_cap or 0.0))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, k_sel, qpg, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, bhi, lengths, q, k_pages, v_pages)

@@ -1,31 +1,56 @@
-"""Jit'd public wrapper for Selective Head/Group FlashAttention decode."""
+"""Jit'd public wrappers for Selective Head/Group FlashAttention decode."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sha.kernel import sha_pallas_compact
+from repro.kernels.sha.kernel import sha_pallas_compact, sha_pallas_paged
+
+
+def _scatter_groups(o_sel, bhi, B, G, qpg, dh):
+    """Compact (B, k_sel, qpg, dh) -> (B, G, qpg, dh), inactive groups zero."""
+    out = jnp.zeros((B, G, qpg, dh), o_sel.dtype)
+    return out.at[jnp.arange(B)[:, None], bhi].set(o_sel)
 
 
 @functools.partial(jax.jit, static_argnames=("block_w", "interpret", "soft_cap"))
 def select_head_attention(q, k, v, bhi, lengths, *, block_w: int = 256,
-                          interpret: bool = True, soft_cap: float = 0.0):
+                          interpret: Optional[bool] = None,
+                          soft_cap: float = 0.0):
     """Paper Alg. 1: decode attention over ONLY the groups named in ``bhi``.
 
     q (B, G, qpg, dh); k, v (B, W, G, dh); bhi (B, k_sel) int32;
     lengths (B,) int32.  Returns (B, G, qpg, dh) with inactive groups zero.
     For MHA pass G=H, qpg=1 (head sparsity); for GQA pass G=num_kv_heads
     (group sparsity, paper §4.2).  ``soft_cap`` applies Gemma/Grok-style
-    tanh logit capping inside the kernel (0 = off).
+    tanh logit capping inside the kernel (0 = off).  ``interpret=None``
+    defers to ``runtime.pallas_interpret()`` (compile on TPU, interpret
+    elsewhere).
     """
     B, G, qpg, dh = q.shape
     o_sel = sha_pallas_compact(q, k, v, bhi, lengths,
                                block_w=block_w, interpret=interpret,
                                soft_cap=soft_cap)
-    out = jnp.zeros((B, G, qpg, dh), o_sel.dtype)
-    return out.at[jnp.arange(B)[:, None], bhi].set(o_sel)
+    return _scatter_groups(o_sel, bhi, B, G, qpg, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "soft_cap"))
+def select_head_attention_paged(q, k_pages, v_pages, bhi, page_table, lengths,
+                                *, interpret: Optional[bool] = None,
+                                soft_cap: float = 0.0):
+    """Length-proportional SHA over a paged KV pool (see sha_pallas_paged).
+
+    q (B, G, qpg, dh); k_pages/v_pages (P, G, page_w, dh); page_table
+    (B, max_pages) int32 physical page ids (sink-padded); bhi (B, k_sel);
+    lengths (B,).  Returns (B, G, qpg, dh) with inactive groups zero.
+    """
+    B, G, qpg, dh = q.shape
+    o_sel = sha_pallas_paged(q, k_pages, v_pages, bhi, page_table, lengths,
+                             interpret=interpret, soft_cap=soft_cap)
+    return _scatter_groups(o_sel, bhi, B, G, qpg, dh)
 
 
 select_group_attention = select_head_attention  # GQA alias (paper SGA)

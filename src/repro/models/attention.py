@@ -86,6 +86,26 @@ def init_kv_cache(cfg, batch: int, width: int, dtype, kind: str):
             "v": jnp.zeros((batch, Hkv, width, dh), dtype)}
 
 
+def init_kv_cache_paged(cfg, num_pages: int, page_w: int, dtype, kind: str):
+    """Physical page pool replacing the (batch, width) axes of the
+    contiguous cache with a shared (num_pages, page_w) pool.  ``num_pages``
+    must include the pool's sink page (writes/reads for unallocated slots
+    land there); slot->page routing lives in the serve cache's
+    ``page_table``, not here."""
+    if kind == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((num_pages, page_w, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((num_pages, page_w, m.qk_rope_head_dim), dtype)}
+    dh, Hkv = cfg.head_dim, cfg.num_kv_heads
+    if cfg.kv_quant:
+        return {"k": jnp.zeros((num_pages, Hkv, page_w, dh), jnp.int8),
+                "v": jnp.zeros((num_pages, Hkv, page_w, dh), jnp.int8),
+                "k_scale": jnp.zeros((num_pages, Hkv, page_w), jnp.float32),
+                "v_scale": jnp.zeros((num_pages, Hkv, page_w), jnp.float32)}
+    return {"k": jnp.zeros((num_pages, Hkv, page_w, dh), dtype),
+            "v": jnp.zeros((num_pages, Hkv, page_w, dh), dtype)}
+
+
 def _kv_quantize(x):
     """x (..., dh) -> (int8 codes, f32 scale (...,)) with deq = codes*scale."""
     xf = x.astype(jnp.float32)
@@ -107,6 +127,28 @@ def _write_slot(buf, update, pos, per_seq: bool):
         return buf.at[bidx, :, jnp.mod(pos, W)].set(update[:, :, 0])
     return jax.lax.dynamic_update_slice_in_dim(buf, update, jnp.mod(pos, W),
                                                axis=2)
+
+
+def _write_paged(buf, update, pos, page_table, page_w: int):
+    """Scatter one decode step's K/V (or quant scale) into the page pool.
+
+    ``buf`` (P, Hkv, page_w[, dh]) physical pages; ``update`` (B, Hkv,
+    1[, dh]); ``pos`` (B,) logical write positions.  Row b lands in page
+    ``page_table[b, pos[b] // page_w]`` — the sink page for vacant slots
+    (their table rows point there), so inactive rows never corrupt live
+    pages."""
+    bidx = jnp.arange(pos.shape[0])
+    phys = page_table[bidx, pos // page_w]
+    return buf.at[phys, :, jnp.mod(pos, page_w)].set(update[:, :, 0])
+
+
+def _gather_pages(buf, page_table):
+    """Contiguous per-slot view of paged KV: (P, Hkv, page_w[, dh]) +
+    page_table (B, max_pages) -> (B, Hkv, max_pages*page_w[, dh]).  Sink
+    entries surface garbage positions; callers mask with ``lengths``."""
+    g = buf[page_table]                       # (B, Sp, Hkv, pw[, dh])
+    g = jnp.moveaxis(g, 1, 2)                 # (B, Hkv, Sp, pw[, dh])
+    return g.reshape(g.shape[:2] + (-1,) + g.shape[4:])
 
 
 def _rms(p, x, eps=1e-5):
@@ -245,23 +287,36 @@ def attn_full(p, x, cfg, *, cos, sin, cache=None, head_select=None,
 
 
 def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
-                head_select=None, sha_kernel: bool = False) -> Tuple[jnp.ndarray, dict]:
-    """One-token decode over a ring-buffer KV cache.
+                head_select=None, sha_kernel: bool = False,
+                page_table=None) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode over a ring-buffer or paged KV cache.
 
-    x (B, 1, d); cache k/v (B, Hkv, W, dh) head-major.  Two position modes:
-    * legacy (lockstep batch): pos scalar int (new token position),
-      slot_pos (W,) absolute positions (-1 empty);
-    * serve (continuous batching): pos (B,) per-sequence cache lengths,
-      slot_pos None — row b writes at slot pos[b] and attends [0, pos[b]].
-    ``sha_kernel`` routes the gather path through the Pallas SHA kernel
-    (repro/kernels/sha), threading per-sequence lengths into its ragged
+    x (B, 1, d).  Three position/layout modes:
+    * legacy (lockstep batch): cache k/v (B, Hkv, W, dh); pos scalar int
+      (new token position), slot_pos (W,) absolute positions (-1 empty);
+    * serve (continuous batching): same layout; pos (B,) per-sequence cache
+      lengths, slot_pos None — row b writes at slot pos[b] and attends over
+      its own prefix [0, pos[b]];
+    * paged serve: cache k/v (P, Hkv, page_w, dh) physical page pool plus
+      ``page_table`` (B, max_pages) routing each slot's logical pages to
+      physical ones.  Row b's write scatters into its current page; reads
+      either gather a contiguous per-slot view (XLA paths) or stream pages
+      directly in the Pallas paged SHA kernel (length-proportional I/O).
+    ``sha_kernel`` routes the gather path through the Pallas SHA kernels
+    (repro/kernels/sha), threading per-sequence lengths into their ragged
     masking.
     """
     B, _, d = x.shape
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     qpg = H // Hkv
-    W = cache["k"].shape[2]
     per_seq = getattr(pos, "ndim", 0) == 1          # serve mode
+    paged = page_table is not None
+    assert not paged or per_seq, "paged cache requires per-sequence positions"
+    if paged:
+        page_w = cache["k"].shape[2]
+        W = page_table.shape[1] * page_w            # logical width
+    else:
+        W = cache["k"].shape[2]
 
     q = linear(x, p["wq"], p.get("bq")).reshape(B, 1, H, dh)
     k = linear(x, p["wk"], p.get("bk")).reshape(B, 1, Hkv, dh)
@@ -278,10 +333,12 @@ def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
     else:
         updates = {"k": kT.astype(cache["k"].dtype),
                    "v": vT.astype(cache["v"].dtype)}
-    new_cache = {name: _write_slot(cache[name], u, pos, per_seq)
-                 for name, u in updates.items()}
-    kc, vc = new_cache["k"], new_cache["v"]
-    ksc, vsc = new_cache.get("k_scale"), new_cache.get("v_scale")
+    if paged:
+        new_cache = {name: _write_paged(cache[name], u, pos, page_table, page_w)
+                     for name, u in updates.items()}
+    else:
+        new_cache = {name: _write_slot(cache[name], u, pos, per_seq)
+                     for name, u in updates.items()}
     if per_seq:
         valid = jnp.arange(W)[None, :] <= pos[:, None]              # (B, W)
     else:
@@ -291,18 +348,41 @@ def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
             and head_select is not None and head_select[0] == "gather"):
         # Pallas Selective Head Attention: per-sequence ``lengths`` drive the
         # kernel's ragged masking (lengths[b] == valid prefix of row b).
-        from repro.kernels.sha import select_head_attention
+        from repro.kernels.sha import (select_head_attention,
+                                       select_head_attention_paged)
         lengths = ((pos + 1) if per_seq
                    else jnp.full((B,), pos + 1)).astype(jnp.int32)
-        block_w = next(bw for bw in (256, 128, 64, 32, 16, 8, 4, 2, 1)
-                       if W % bw == 0)
         qg = q.reshape(B, Hkv, qpg, dh)
-        out = select_head_attention(qg, kc.transpose(0, 2, 1, 3),
-                                    vc.transpose(0, 2, 1, 3),
-                                    head_select[1], lengths, block_w=block_w,
-                                    soft_cap=float(cfg.logit_soft_cap or 0.0))
+        soft_cap = float(cfg.logit_soft_cap or 0.0)
+        if paged:
+            # pool layout streams straight into the kernel: no gather, and
+            # only pages below lengths[b] are visited (length-proportional)
+            out = select_head_attention_paged(qg, new_cache["k"],
+                                              new_cache["v"], head_select[1],
+                                              page_table, lengths,
+                                              soft_cap=soft_cap)
+        else:
+            # prefer a block size dividing W (zero-copy); the wrapper's
+            # pad-to-block fallback is only for widths with no sane divisor
+            block_w = next((bw for bw in (256, 128, 64, 32, 16)
+                            if W % bw == 0), 256)
+            out = select_head_attention(qg, new_cache["k"].transpose(0, 2, 1, 3),
+                                        new_cache["v"].transpose(0, 2, 1, 3),
+                                        head_select[1], lengths,
+                                        block_w=block_w, soft_cap=soft_cap)
         out = out.reshape(B, 1, H * dh).astype(x.dtype)
         return linear(out, p["wo"]), new_cache
+
+    if paged:  # contiguous per-slot views for the XLA paths
+        kc = _gather_pages(new_cache["k"], page_table)
+        vc = _gather_pages(new_cache["v"], page_table)
+        ksc = vsc = None
+        if cfg.kv_quant:
+            ksc = _gather_pages(new_cache["k_scale"], page_table)
+            vsc = _gather_pages(new_cache["v_scale"], page_table)
+    else:
+        kc, vc = new_cache["k"], new_cache["v"]
+        ksc, vsc = new_cache.get("k_scale"), new_cache.get("v_scale")
 
     qg = q.reshape(B, Hkv, qpg, dh)  # (B, G, q, dh)
     if cfg.kv_quant:
@@ -398,11 +478,15 @@ def mla_full(p, x, cfg, *, cos, sin, cache=None, head_select=None,
     return linear(out.reshape(B, S, H * vd), p["wo"]), new_cache, head_norms
 
 
-def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None):
+def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None,
+               page_table=None):
     """MLA decode.  cfg.mla.absorb selects the absorbed (low-rank) variant:
     naive re-expands k_nope/v for all W cached positions each step
     (paper-faithful port of the reference impl); absorbed folds wkv_b into
     the query/output — the beyond-paper optimization measured in §Perf.
+    With ``page_table`` the latent cache is a physical page pool (P, page_w,
+    r); writes scatter into the slot's current page and the attention math
+    runs over a gathered contiguous view.
     """
     m = cfg.mla
     B = x.shape[0]
@@ -425,22 +509,39 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None):
         cos1, sin1 = (cos, sin) if cos.ndim == 2 else (cos[:, 0], sin[:, 0])
         k_rope = apply_rope(k_rope, cos1, sin1, head_axis=False)
 
-    W = cache["ckv"].shape[1]
-    if per_seq:
-        slots = jnp.mod(pos, W)
+    paged = page_table is not None
+    assert not paged or per_seq, "paged cache requires per-sequence positions"
+    if paged:
+        page_w = cache["ckv"].shape[1]
+        W = page_table.shape[1] * page_w                            # logical
         bidx = jnp.arange(B)
-        ckv_c = cache["ckv"].at[bidx, slots].set(ckv.astype(cache["ckv"].dtype))
-        krope_c = cache["krope"].at[bidx, slots].set(
+        phys = page_table[bidx, pos // page_w]
+        off = jnp.mod(pos, page_w)
+        ckv_p = cache["ckv"].at[phys, off].set(ckv.astype(cache["ckv"].dtype))
+        krope_p = cache["krope"].at[phys, off].set(
             k_rope.astype(cache["krope"].dtype))
+        new_cache = {"ckv": ckv_p, "krope": krope_p}
+        # contiguous per-slot views for the attention math below
+        ckv_c = ckv_p[page_table].reshape(B, W, -1)
+        krope_c = krope_p[page_table].reshape(B, W, -1)
         valid = jnp.arange(W)[None, :] <= pos[:, None]              # (B, W)
     else:
-        slot = jnp.mod(pos, W)
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv[:, None].astype(cache["ckv"].dtype), slot, axis=1)
-        krope_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), slot, axis=1)
-        valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)
-    new_cache = {"ckv": ckv_c, "krope": krope_c}
+        W = cache["ckv"].shape[1]
+        if per_seq:
+            slots = jnp.mod(pos, W)
+            bidx = jnp.arange(B)
+            ckv_c = cache["ckv"].at[bidx, slots].set(ckv.astype(cache["ckv"].dtype))
+            krope_c = cache["krope"].at[bidx, slots].set(
+                k_rope.astype(cache["krope"].dtype))
+            valid = jnp.arange(W)[None, :] <= pos[:, None]          # (B, W)
+        else:
+            slot = jnp.mod(pos, W)
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv[:, None].astype(cache["ckv"].dtype), slot, axis=1)
+            krope_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), slot, axis=1)
+            valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)
+        new_cache = {"ckv": ckv_c, "krope": krope_c}
     vmask = valid[None, None] if valid.ndim == 1 else valid[:, None]
 
     wkv_b = p["wkv_b"].reshape(r, H, nope + vd)

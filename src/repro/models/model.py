@@ -190,45 +190,78 @@ def init_routers(key, cfg: ModelConfig, policy: PolarPolicy):
     return routers
 
 
-def init_cache(cfg: ModelConfig, batch: int, width: int):
-    """Ring-buffer KV cache / recurrent state for every layer."""
-    dtype = jnp.dtype(cfg.dtype)
+def _init_layer_states(cfg: ModelConfig, batch: int, dtype, kv_factory):
+    """Per-layer cache pytree; ``kv_factory(spec)`` builds the attention/MLA
+    leaves (contiguous or paged), recurrent mixers always get per-slot
+    state."""
     layers: Dict[str, Any] = {}
     for i, seg in enumerate(cfg.segments):
         seg_c = {}
         for j, spec in enumerate(seg.pattern):
             if spec.mixer in ("attn", "mla"):
-                one = lambda s=spec: attn.init_kv_cache(cfg, batch, width, dtype,
-                                                        "mla" if s.mixer == "mla" else "kv")
+                base = kv_factory(spec)
             elif spec.mixer == "mamba":
-                one = lambda: mamba_lib.init_mamba_cache(cfg, batch, dtype)
+                base = mamba_lib.init_mamba_cache(cfg, batch, dtype)
             else:
-                one = lambda: rwkv_lib.init_rwkv_cache(cfg, batch, dtype)
-            base = one()
+                base = rwkv_lib.init_rwkv_cache(cfg, batch, dtype)
             seg_c[f"pos{j}"] = jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x[None], (seg.cycles,) + x.shape), base)
             if spec.mixer == "rwkv":
                 seg_c[f"pos{j}"]["shift_cm"] = jnp.zeros(
                     (seg.cycles, batch, cfg.d_model), dtype)
         layers[f"seg{i}"] = seg_c
+    return layers
+
+
+def init_cache(cfg: ModelConfig, batch: int, width: int):
+    """Ring-buffer KV cache / recurrent state for every layer."""
+    dtype = jnp.dtype(cfg.dtype)
+    kv = lambda spec: attn.init_kv_cache(
+        cfg, batch, width, dtype, "mla" if spec.mixer == "mla" else "kv")
     return {
-        "layers": layers,
+        "layers": _init_layer_states(cfg, batch, dtype, kv),
         "slot_pos": jnp.full((width,), -1, jnp.int32),
         "pos": jnp.zeros((), jnp.int32),
     }
 
 
-def init_serve_cache(cfg: ModelConfig, max_batch: int, width: int):
+def init_serve_cache(cfg: ModelConfig, max_batch: int, width: int, *,
+                     page_w: Optional[int] = None,
+                     num_pages: Optional[int] = None):
     """Slot-based cache for continuous batching: ``max_batch`` independent
-    slots of width ``width``.  Per-slot ``lengths`` (valid prefix) replaces
-    the lockstep scalar ``pos``; ``active`` marks occupied slots (inactive
-    slots still flow through the fixed-shape decode but never advance)."""
-    base = init_cache(cfg, max_batch, width)
-    return {
-        "layers": base["layers"],
+    slots of (logical) width ``width``.  Per-slot ``lengths`` (valid prefix)
+    replaces the lockstep scalar ``pos``; ``active`` marks occupied slots
+    (inactive slots still flow through the fixed-shape decode but never
+    advance).
+
+    With ``page_w`` set, attention/MLA KV lives in a shared *paged* pool:
+    ``num_pages`` physical pages of ``page_w`` positions (default: full
+    provisioning, ``max_batch * ceil(width / page_w)``) plus one sink page
+    that absorbs reads/writes of unallocated logical pages.  The extra
+    ``page_table`` leaf (max_batch, pages_per_slot) int32 routes each
+    slot's logical pages to physical ones; unallocated entries hold the
+    sink id ``num_pages``.  Recurrent state (Mamba/RWKV) stays per-slot.
+    HBM for KV then scales with ``num_pages * page_w`` tokens, not
+    ``max_batch * width``."""
+    dtype = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {
         "lengths": jnp.zeros((max_batch,), jnp.int32),
         "active": jnp.zeros((max_batch,), bool),
     }
+    if page_w is None:
+        kv = lambda spec: attn.init_kv_cache(
+            cfg, max_batch, width, dtype, "mla" if spec.mixer == "mla" else "kv")
+    else:
+        pages_per_slot = -(-width // page_w)
+        if num_pages is None:
+            num_pages = max_batch * pages_per_slot
+        kv = lambda spec: attn.init_kv_cache_paged(
+            cfg, num_pages + 1, page_w, dtype,
+            "mla" if spec.mixer == "mla" else "kv")
+        out["page_table"] = jnp.full((max_batch, pages_per_slot),
+                                     num_pages, jnp.int32)   # all -> sink
+    out["layers"] = _init_layer_states(cfg, max_batch, dtype, kv)
+    return out
 
 
 # ------------------------------------------------------------ selection ---
@@ -327,7 +360,8 @@ def _layer_full(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
 
 
 def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
-                  slot_pos, pos, k_blocks, force_dense, active=None):
+                  slot_pos, pos, k_blocks, force_dense, active=None,
+                  page_table=None):
     h = apply_norm(lp["norm1"], x, cfg.norm)
     sel = _head_selection(spec, cfg, policy, router_p, h, "decode", force_dense)
 
@@ -336,11 +370,12 @@ def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
                and not force_dense)
         out, new_c = attn.attn_decode(lp["mixer"], h, cfg, cos=cos, sin=sin,
                                       cache=cache, slot_pos=slot_pos, pos=pos,
-                                      head_select=sel, sha_kernel=sha)
+                                      head_select=sel, sha_kernel=sha,
+                                      page_table=page_table)
     elif spec.mixer == "mla":
         out, new_c = attn.mla_decode(lp["mixer"], h, cfg, cos=cos, sin=sin,
                                      cache=cache, slot_pos=slot_pos, pos=pos,
-                                     head_select=sel)
+                                     head_select=sel, page_table=page_table)
     elif spec.mixer == "mamba":
         out, new_c = mamba_lib.mamba_decode(lp["mixer"], h, cfg, cache)
     else:
@@ -401,7 +436,8 @@ def _segment_mlp_k(cfg, policy, seg_idx):
 
 
 def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
-                  slot_pos, pos, collect, remat=False, active=None):
+                  slot_pos, pos, collect, remat=False, active=None,
+                  page_table=None):
     """Apply all segments via lax.scan.  Returns (x, new_layer_caches, aux)."""
     force_dense = _segment_force_dense(cfg, policy)
     new_caches: Dict[str, Any] = {}
@@ -429,7 +465,8 @@ def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
                     x_c, nc = _layer_decode(lp, spec, x_c, cfg=cfg, policy=policy,
                                             router_p=rp, cos=cos, sin=sin, cache=lc,
                                             slot_pos=slot_pos, pos=pos, k_blocks=kb,
-                                            force_dense=fd, active=active)
+                                            force_dense=fd, active=active,
+                                            page_table=page_table)
                 else:
                     x_c, nc, aux = _layer_full(lp, spec, x_c, cfg=cfg, policy=policy,
                                                router_p=rp, cos=cos, sin=sin, cache=lc,
@@ -557,9 +594,13 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     * serve (init_serve_cache): per-slot ``lengths`` (B,) + ``active`` (B,)
       — every row decodes at its own position; inactive slots compute but
       neither advance nor influence batch-coupled selection (MLP union).
+      With ``page_table`` present (init_serve_cache(page_w=...)) the KV
+      leaves are a shared physical page pool and reads/writes route through
+      the table (serving/kv_pool.py PagedKVPool owns the allocation).
 
     Returns (logits (B, V), new_cache)."""
     serve = "lengths" in cache
+    page_table = cache.get("page_table")                # paged serve cache
     if serve:
         lengths = cache["lengths"]
         active = cache["active"]
@@ -584,7 +625,7 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     x, new_caches, _, _ = _run_segments(
         params, cfg, x, mode="decode", policy=policy, routers=routers,
         cache=cache, cos=cos, sin=sin, slot_pos=slot_pos, pos=pos,
-        collect=False, active=active)
+        collect=False, active=active, page_table=page_table)
 
     logits = _lm_head(params, cfg, x)[:, 0]
     if serve:
@@ -593,6 +634,8 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             "lengths": lengths + active.astype(jnp.int32),
             "active": active,
         }
+        if page_table is not None:
+            new_cache["page_table"] = page_table
     else:
         W = slot_pos.shape[0]
         new_cache = {

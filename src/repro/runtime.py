@@ -1,18 +1,43 @@
-"""Process-global mesh context.
+"""Process-global runtime context: mesh + Pallas execution mode.
 
 Launchers (dryrun / serve / train) set ``MESH`` so that model-internal
 sharding constraints (``wsc``) can be applied without threading the mesh
 through every call.  When no mesh is set (unit tests, CPU examples) all
 helpers are no-ops.
+
+``pallas_interpret()`` is the single switch deciding whether the Pallas
+kernels (SHA decode attention, Selective GEMM) run in interpret mode:
+explicit ``set_pallas_interpret`` wins, then the ``REPRO_PALLAS_INTERPRET``
+env var (0/1), then auto-detection — compile on TPU, interpret elsewhere.
+Resolution happens at trace time, so set it before the first kernel call.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MESH: Optional[Mesh] = None
+
+_PALLAS_INTERPRET: Optional[bool] = None
+
+
+def set_pallas_interpret(value: Optional[bool]) -> None:
+    """Force interpret mode on/off (None restores auto-detection)."""
+    global _PALLAS_INTERPRET
+    _PALLAS_INTERPRET = value
+
+
+def pallas_interpret() -> bool:
+    """Should Pallas kernels run in interpret mode in this process?"""
+    if _PALLAS_INTERPRET is not None:
+        return _PALLAS_INTERPRET
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
 
 
 def set_mesh(mesh: Optional[Mesh]) -> None:

@@ -1,9 +1,10 @@
 from repro.serving.engine import (Engine, EngineStats, ServeReport,
                                   build_engine)
-from repro.serving.kv_pool import KVPool
+from repro.serving.kv_pool import KVPool, PagedKVPool
 from repro.serving.scheduler import (Request, Scheduler, SlotRun,
                                      poisson_requests)
 from repro.serving import sampling
 
 __all__ = ["Engine", "EngineStats", "ServeReport", "build_engine", "KVPool",
-           "Request", "Scheduler", "SlotRun", "poisson_requests", "sampling"]
+           "PagedKVPool", "Request", "Scheduler", "SlotRun",
+           "poisson_requests", "sampling"]

@@ -8,11 +8,19 @@ Two serving modes:
   evaluation setting (fixed batch, fixed sequence length, measure decode
   throughput).
 * ``serve(requests)`` — continuous batching: a request-level scheduler
-  (serving/scheduler.py) admits requests into a slot-based paged KV pool
-  (serving/kv_pool.py) as they arrive, evicts finished sequences, and
-  backfills freed slots — all at fixed array shapes, so the decode step
-  compiles exactly once no matter how traffic arrives.  Prompts are
-  right-padded to power-of-two buckets so prefill compiles once per bucket.
+  (serving/scheduler.py) admits requests into a KV pool (serving/kv_pool.py)
+  as they arrive, evicts finished sequences, and backfills freed slots —
+  all at fixed array shapes, so the decode step compiles exactly once no
+  matter how traffic arrives.  Prompts are right-padded to power-of-two
+  buckets so prefill compiles once per bucket.
+
+  The default pool is **paged** (``page_w`` positions per page, per-slot
+  page tables): admission is gated on free *pages* (strict FCFS —
+  head-of-line requests that don't fit block later ones), decode growth
+  allocates a page when a sequence crosses a page boundary, and when pages
+  run out the youngest running request is preempted back to the queue for
+  recompute.  ``page_w=None`` restores the contiguous one-slot-per-request
+  pool (useful as a parity oracle).
 """
 from __future__ import annotations
 
@@ -28,7 +36,7 @@ from repro.core.policy import PolarPolicy
 from repro.models import (decode_step, forward, init_cache,
                           prepare_model_config)
 from repro.serving import sampling
-from repro.serving.kv_pool import KVPool
+from repro.serving.kv_pool import KVPool, PagedKVPool
 from repro.serving.scheduler import Request, Scheduler, SlotRun
 
 
@@ -50,11 +58,21 @@ class ServeReport:
     admitted_step: Dict[int, int]         # rid -> decode step of admission
     finished_step: Dict[int, int]
     arrival: Dict[int, int]
-    steps: int = 0                        # decode steps executed
+    steps: int = 0                        # step-clock value at exit
+    decode_steps_run: int = 0             # batched decode dispatches executed
     wall_s: float = 0.0
     tokens_decoded: int = 0               # tokens produced by decode steps
     slots_served: int = 0                 # admissions (incl. slot reuse)
     rejected: List[int] = field(default_factory=list)  # rids never admissible
+    # ------------------------------------------- paged-pool accounting ----
+    preemptions: int = 0                  # recompute preemptions (paged)
+    pages_scanned: int = 0                # sum over steps of live pages read
+    pages_scanned_dense_equiv: int = 0    # what a full-width scan would read
+    peak_pages_in_use: int = 0
+    occupancy_sum: float = 0.0            # sum of per-step pages_in_use/num_pages
+    page_w: Optional[int] = None          # None = contiguous pool
+    num_pages: Optional[int] = None
+    pool_hbm_bytes: int = 0               # KV-cache bytes actually reserved
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -67,6 +85,14 @@ class ServeReport:
         waits = [step - self.arrival[r] for r, step in self.admitted_step.items()]
         return float(np.mean(waits)) if waits else 0.0
 
+    @property
+    def pages_scanned_per_step(self) -> float:
+        return self.pages_scanned / self.decode_steps_run if self.decode_steps_run else 0.0
+
+    @property
+    def page_occupancy_mean(self) -> float:
+        return self.occupancy_sum / self.decode_steps_run if self.decode_steps_run else 0.0
+
 
 class Engine:
     """serve(cfg, params) with optional (routers, policy)."""
@@ -74,6 +100,8 @@ class Engine:
     def __init__(self, cfg, params, *, routers=None,
                  policy: Optional[PolarPolicy] = None,
                  cache_width: int = 2048,
+                 page_w: Optional[int] = 16,
+                 num_pages: Optional[int] = None,
                  sampler: Callable = sampling.greedy):
         # NOTE: cfg must already be prepare_model_config(cfg, policy)'d if
         # params were initialized with the split layout.
@@ -82,6 +110,8 @@ class Engine:
         self.routers = routers
         self.policy = policy
         self.cache_width = cache_width
+        self.page_w = page_w               # None -> contiguous KVPool
+        self.num_pages = num_pages         # None -> full provisioning
         self.sampler = sampler
         self.stats = EngineStats()
 
@@ -155,21 +185,50 @@ class Engine:
         tok = int(self.sampler(logits[None], jax.random.PRNGKey(req.rid))[0])
         return tok, out["cache"]["layers"], L
 
+    def _make_pool(self, max_batch: int):
+        if self.page_w is None:
+            return KVPool(self.cfg, max_batch, self.cache_width)
+        return PagedKVPool(self.cfg, max_batch, self.cache_width,
+                           page_w=self.page_w, num_pages=self.num_pages)
+
+    @staticmethod
+    def _pick_victim(sched: Scheduler, exclude: int) -> Optional[int]:
+        """Youngest running slot (latest admission, then highest rid) other
+        than ``exclude`` — the cheapest request to recompute."""
+        cands = [(run.admitted_step, run.request.rid, slot)
+                 for slot, run in sched.running.items() if slot != exclude]
+        return max(cands)[2] if cands else None
+
+    def _preempt(self, slot: int, sched: Scheduler, pool,
+                 report: ServeReport, step: int) -> None:
+        sched.requeue(slot, step)
+        pool.release(slot)
+        report.preemptions += 1
+
     def serve(self, requests: Sequence[Request], *, max_batch: int = 4,
               max_steps: Optional[int] = None) -> ServeReport:
         """Continuous-batching serve loop over ``requests``.
 
-        Each simulated decode step: (1) admit arrived requests into free
-        pool slots (prefill + scatter-insert), (2) one batched decode over
-        all slots, (3) evict finished sequences so their slots backfill.
-        ``Request.arrival`` is in units of decode steps; the loop fast-
-        forwards idle gaps.  Returns a ServeReport with per-request tokens
-        and throughput/queueing stats.
+        Each simulated decode step: (1) reserve decode-growth pages for the
+        running slots — preempting the youngest request when the pool is
+        out of pages (reserve comes FIRST so a request admitted this step
+        can never be the victim before it decodes a token), (2) admit
+        arrived requests into free pool slots (prefill + scatter-insert; a
+        paged pool also gates on free pages, strict FCFS), (3) one batched
+        decode over all slots, (4) evict finished sequences so their slots
+        and pages backfill.  ``Request.arrival`` is in units of decode
+        steps; the loop fast-forwards idle gaps.  Returns a ServeReport
+        with per-request tokens and throughput/queueing/paging stats.
         """
-        pool = KVPool(self.cfg, max_batch, self.cache_width)
+        pool = self._make_pool(max_batch)
+        paged = isinstance(pool, PagedKVPool)
         sched = Scheduler(max_batch, max_length=self.cache_width - 1)
         report = ServeReport(tokens={}, admitted_step={}, finished_step={},
                              arrival={r.rid: r.arrival for r in requests})
+        if paged:
+            report.page_w = pool.page_w
+            report.num_pages = pool.num_pages
+        report.pool_hbm_bytes = pool.hbm_bytes()
         # a prompt that cannot fit the cache width can never be admitted:
         # reject it up front instead of crashing the run mid-stream
         admissible = []
@@ -185,13 +244,38 @@ class Engine:
         while not sched.done:
             if max_steps is not None and step >= max_steps:
                 break
+            # ---- decode-growth page reservation (paged pool only) --------
+            # runs BEFORE admission so a just-admitted request cannot be
+            # picked as preemption victim in the same step (which would
+            # discard its prefill before it decoded a single token); a
+            # fresh insert already covers its own first decode page
+            if paged:
+                for slot in sorted(sched.running):
+                    if slot not in sched.running:   # victim of a preemption
+                        continue
+                    run = sched.running[slot]
+                    while not pool.reserve(slot, run.length):
+                        victim = self._pick_victim(sched, exclude=slot)
+                        # num_pages >= pages_per_slot guarantees a lone
+                        # request can always grow once rivals are evicted
+                        assert victim is not None, "page pool exhausted"
+                        self._preempt(victim, sched, pool, report, step)
+
             # ---- admission: backfill free slots with arrived requests ----
-            for req in sched.pop_arrived(step, budget=pool.num_free):
+            # strict FCFS: when the head request doesn't fit (no slot, or a
+            # paged pool short on pages), later arrivals wait behind it
+            while True:
+                req = sched.peek_arrived(step)
+                if req is None or not pool.can_admit(len(req.prompt)):
+                    break
+                sched.pop_head()
                 slot = pool.claim()
                 tok, layers, L = self._prefill_request(req)
                 pool.insert(layers, slot, L)
                 run = sched.bind(slot, req, step, tok)
-                report.admitted_step[req.rid] = step
+                # first admission only: queueing delay must not absorb the
+                # residency time of a later-preempted request
+                report.admitted_step.setdefault(req.rid, step)
                 report.slots_served += 1
                 if run.done:                     # e.g. max_new_tokens == 1
                     self._finish(run, sched, pool, report)
@@ -217,6 +301,15 @@ class Engine:
             n_active = len(sched.running)
             self.stats.tokens_decoded += n_active
             report.tokens_decoded += n_active
+            report.decode_steps_run += 1
+            if paged:   # live pages this step actually covers vs full width
+                report.pages_scanned += sum(
+                    r.length // pool.page_w + 1
+                    for r in sched.running.values())
+                report.pages_scanned_dense_equiv += n_active * pool.pages_per_slot
+                report.peak_pages_in_use = max(report.peak_pages_in_use,
+                                               pool.pages_in_use)
+                report.occupancy_sum += pool.pages_in_use / pool.num_pages
             step += 1
 
             # ---- account tokens, evict finished, free their slots --------
@@ -229,7 +322,7 @@ class Engine:
         report.wall_s = time.perf_counter() - t0
         return report
 
-    def _finish(self, run: SlotRun, sched: Scheduler, pool: KVPool,
+    def _finish(self, run: SlotRun, sched: Scheduler, pool,
                 report: ServeReport) -> None:
         sched.evict(run.slot)
         pool.release(run.slot)
@@ -247,7 +340,9 @@ class Engine:
 
 
 def build_engine(cfg, params_key, *, policy=None, routers_key=None,
-                 cache_width: int = 2048, max_seq_len=None):
+                 cache_width: int = 2048, max_seq_len=None,
+                 page_w: Optional[int] = 16,
+                 num_pages: Optional[int] = None):
     """Convenience: prepared config + fresh params (+ routers)."""
     from repro.models import init_params, init_routers
     cfg = prepare_model_config(cfg, policy)
@@ -256,4 +351,5 @@ def build_engine(cfg, params_key, *, policy=None, routers_key=None,
     if policy is not None and (policy.attn_sparse or policy.mlp_sparse):
         routers = init_routers(routers_key or jax.random.PRNGKey(7), cfg, policy)
     return Engine(cfg, params, routers=routers, policy=policy,
-                  cache_width=cache_width), cfg, params
+                  cache_width=cache_width, page_w=page_w,
+                  num_pages=num_pages), cfg, params

@@ -1,20 +1,31 @@
-"""Slot-based paged KV pool for continuous batching.
+"""KV pools for continuous batching: contiguous slots and paged pages.
 
-The pool owns a fixed-shape serve cache (``init_serve_cache``: ``max_batch``
-slots x ``width`` positions) plus the free-slot bookkeeping.  Requests claim
-a slot, their prefilled single-sequence cache is scatter-inserted into that
-slot (a jitted ``dynamic_update_slice`` over every layer-cache leaf), and on
-completion the slot is released for the next request — all without changing
-any array shape, so the decode step stays on its single jit trace no matter
-how requests come and go (the re-jit-free property the paper's batched
-serving claim depends on).
+``KVPool`` owns a fixed-shape serve cache (``init_serve_cache``:
+``max_batch`` slots x ``width`` positions) plus free-slot bookkeeping.
+Requests claim a slot, their prefilled single-sequence cache is
+scatter-inserted into that slot (a jitted ``dynamic_update_slice`` over
+every layer-cache leaf), and on completion the slot is released for the
+next request — all without changing any array shape, so the decode step
+stays on its single jit trace no matter how requests come and go (the
+re-jit-free property the paper's batched serving claim depends on).
 
-Works for every mixer in the model zoo: attention KV (incl. int8-quantized),
-MLA latent caches, Mamba/RWKV recurrent state — anything ``init_cache``
-materializes with the batch on axis 1 of each ``(cycles, B, ...)`` leaf.
+``PagedKVPool`` replaces the per-slot ``width`` reservation with a
+PagedAttention-style physical page pool: ``num_pages`` pages of ``page_w``
+positions shared across all slots, per-slot page tables, allocate-on-decode
+growth, and a dedicated *sink* page (physical id ``num_pages``) that
+absorbs reads/writes of unallocated logical pages so every jitted op keeps
+fixed shapes.  KV memory then scales with tokens in flight
+(``num_pages * page_w``) instead of ``max_batch * width``, and the paged
+SHA kernel's I/O scales with ``ceil(length / page_w)`` pages per sequence.
+
+Both pools work for every mixer in the model zoo: attention KV (incl.
+int8-quantized), MLA latent caches, Mamba/RWKV recurrent state (recurrent
+state has no width axis and stays slot-indexed even in the paged pool).
 """
 from __future__ import annotations
 
+import functools
+import heapq
 from typing import List, Optional
 
 import jax
@@ -23,7 +34,16 @@ import numpy as np
 
 from repro.models import init_serve_cache
 
+# leaf names (dict keys) holding width-indexed KV — everything else is
+# per-slot recurrent state
+_PAGED_LEAVES = ("k", "v", "k_scale", "v_scale", "ckv", "krope")
 
+
+def _leaf_hbm_bytes(cache) -> int:
+    return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(cache)))
+
+
+# ===================================================== contiguous slots ===
 def _insert_fn(pool, single_layers, slot, length):
     """Scatter one prefilled sequence (batch==1 layer caches) into ``slot``."""
     layers = jax.tree_util.tree_map(
@@ -50,12 +70,14 @@ def _release_fn(pool, slot):
 class KVPool:
     """Fixed ``max_batch`` x ``width`` slot pool over the serve cache."""
 
+    page_w: Optional[int] = None       # contiguous pools have no pages
+
     def __init__(self, cfg, max_batch: int, width: int):
         self.cfg = cfg
         self.max_batch = int(max_batch)
         self.width = int(width)
         self.cache = init_serve_cache(cfg, max_batch, width)
-        self._free: List[int] = list(range(max_batch))
+        self._free: List[int] = list(range(max_batch))  # sorted => valid heap
         self._insert = jax.jit(_insert_fn)
         self._release = jax.jit(_release_fn)
 
@@ -64,9 +86,12 @@ class KVPool:
     def num_free(self) -> int:
         return len(self._free)
 
+    def can_admit(self, prompt_len: int) -> bool:
+        return self.num_free > 0
+
     def claim(self) -> Optional[int]:
         """Lowest free slot id, or None when the pool is full."""
-        return self._free.pop(0) if self._free else None
+        return heapq.heappop(self._free) if self._free else None
 
     def insert(self, single_layers, slot: int, length: int) -> None:
         """Install a prefilled sequence (layer caches from a batch==1
@@ -77,8 +102,7 @@ class KVPool:
 
     def release(self, slot: int) -> None:
         self.cache = self._release(self.cache, jnp.int32(slot))
-        self._free.append(slot)
-        self._free.sort()    # deterministic lowest-first reuse
+        heapq.heappush(self._free, slot)   # deterministic lowest-first reuse
 
     # ------------------------------------------------------------ views ---
     def lengths(self) -> np.ndarray:
@@ -86,3 +110,186 @@ class KVPool:
 
     def active(self) -> np.ndarray:
         return np.asarray(self.cache["active"])
+
+    def hbm_bytes(self) -> int:
+        return _leaf_hbm_bytes(self.cache["layers"])
+
+
+# ========================================================= paged pages ===
+def _paged_insert_fn(pool, single_layers, page_ids, slot, length, *,
+                     page_w: int, pages_per_slot: int):
+    """Scatter one prefilled contiguous sequence across its physical pages.
+
+    ``page_ids`` (pages_per_slot,) int32 holds the slot's physical page for
+    every logical page — the sink id for logical pages past the prompt, so
+    the scatter keeps one fixed shape for every prompt length (unused-page
+    writes land in the sink and are never read back)."""
+    W_pad = pages_per_slot * page_w
+
+    def insert_leaf(path, p, s):
+        name = path[-1].key
+        if name in ("ckv", "krope"):
+            # p (cycles, P, page_w, r); s (cycles, 1, W1, r)
+            x = s[:, 0]
+            if x.shape[1] < W_pad:
+                x = jnp.pad(x, ((0, 0), (0, W_pad - x.shape[1]), (0, 0)))
+            x = x.reshape(x.shape[0], pages_per_slot, page_w, x.shape[-1])
+            return p.at[:, page_ids].set(x.astype(p.dtype))
+        if name in _PAGED_LEAVES:
+            # p (cycles, P, Hkv, page_w[, dh]); s (cycles, 1, Hkv, W1[, dh])
+            x = s[:, 0]
+            if x.shape[2] < W_pad:
+                padcfg = [(0, 0)] * x.ndim
+                padcfg[2] = (0, W_pad - x.shape[2])
+                x = jnp.pad(x, padcfg)
+            x = x.reshape(x.shape[:2] + (pages_per_slot, page_w) + x.shape[3:])
+            x = jnp.moveaxis(x, 2, 1)         # (cycles, Sp, Hkv, page_w[, dh])
+            return p.at[:, page_ids].set(x.astype(p.dtype))
+        # per-slot recurrent state (Mamba/RWKV): contiguous slot write
+        return jax.lax.dynamic_update_slice_in_dim(p, s.astype(p.dtype),
+                                                   slot, axis=1)
+
+    layers = jax.tree_util.tree_map_with_path(
+        insert_leaf, pool["layers"], single_layers)
+    return {
+        "layers": layers,
+        "lengths": pool["lengths"].at[slot].set(length),
+        "active": pool["active"].at[slot].set(True),
+        "page_table": pool["page_table"].at[slot].set(page_ids),
+    }
+
+
+def _paged_release_fn(pool, slot, *, sink: int):
+    """Mark ``slot`` vacant: page-table row back to the sink, length 0.
+    Page contents stay in place and are overwritten on reallocation."""
+    row = jnp.full((pool["page_table"].shape[1],), sink, jnp.int32)
+    return {
+        "layers": pool["layers"],
+        "lengths": pool["lengths"].at[slot].set(0),
+        "active": pool["active"].at[slot].set(False),
+        "page_table": pool["page_table"].at[slot].set(row),
+    }
+
+
+class PagedKVPool:
+    """Page-table-indexed KV pool over ``init_serve_cache(page_w=...)``.
+
+    Logical layout: ``max_batch`` slots of ``pages_per_slot`` logical pages
+    (``width`` rounded up to a page multiple).  Physical layout:
+    ``num_pages`` shared pages + 1 sink.  The host side owns the free lists
+    (slots and pages, both heapq — O(log n), deterministic lowest-first)
+    and a mirror page table; the device side sees only the fixed-shape
+    ``page_table`` leaf inside ``self.cache``.
+
+    Allocation events: ``insert`` claims the prompt's pages (including the
+    page covering the first decode write), ``reserve`` grows a slot by one
+    page when decode crosses a page boundary, ``release`` returns all of a
+    slot's pages.  A single request never needs more than
+    ``pages_per_slot`` pages, so requiring ``num_pages >= pages_per_slot``
+    guarantees the engine's preempt-and-retry loop terminates.
+    """
+
+    def __init__(self, cfg, max_batch: int, width: int, *, page_w: int = 16,
+                 num_pages: Optional[int] = None):
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.page_w = int(page_w)
+        self.pages_per_slot = -(-int(width) // self.page_w)
+        self.width = self.pages_per_slot * self.page_w       # logical width
+        self.num_pages = (self.max_batch * self.pages_per_slot
+                          if num_pages is None else int(num_pages))
+        assert self.num_pages >= self.pages_per_slot, (
+            "pool must hold at least one full slot's pages",
+            self.num_pages, self.pages_per_slot)
+        self.sink = self.num_pages
+        self.cache = init_serve_cache(cfg, max_batch, self.width,
+                                      page_w=self.page_w,
+                                      num_pages=self.num_pages)
+        self._free_slots: List[int] = list(range(max_batch))
+        self._free_pages: List[int] = list(range(self.num_pages))
+        self._table = np.full((max_batch, self.pages_per_slot), -1, np.int64)
+        self._insert = jax.jit(functools.partial(
+            _paged_insert_fn, page_w=self.page_w,
+            pages_per_slot=self.pages_per_slot))
+        self._release = jax.jit(functools.partial(
+            _paged_release_fn, sink=self.sink))
+
+    # ------------------------------------------------------------ slots ---
+    @property
+    def num_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free_pages)
+
+    def pages_needed(self, prompt_len: int) -> int:
+        """Pages covering positions [0, prompt_len] — the prompt plus the
+        page the first decode step writes into."""
+        return prompt_len // self.page_w + 1
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return (self.num_free > 0
+                and self.free_pages >= self.pages_needed(prompt_len))
+
+    def claim(self) -> Optional[int]:
+        return heapq.heappop(self._free_slots) if self._free_slots else None
+
+    # ------------------------------------------------------------ pages ---
+    def insert(self, single_layers, slot: int, length: int) -> None:
+        """Install a prefilled sequence into ``slot``, allocating its pages
+        (prompt + first decode page) and scattering the contiguous prefill
+        cache across them."""
+        assert 0 <= length < self.width, (length, self.width)
+        n = self.pages_needed(length)
+        assert len(self._free_pages) >= n, "admission must check can_admit"
+        phys = [heapq.heappop(self._free_pages) for _ in range(n)]
+        self._table[slot, :] = -1
+        self._table[slot, :n] = phys
+        page_ids = np.full((self.pages_per_slot,), self.sink, np.int32)
+        page_ids[:n] = phys
+        self.cache = self._insert(self.cache, single_layers,
+                                  jnp.asarray(page_ids), jnp.int32(slot),
+                                  jnp.int32(length))
+
+    def reserve(self, slot: int, position: int) -> bool:
+        """Ensure the page covering ``position`` is allocated for ``slot``
+        (decode growth across a page boundary).  False = out of pages; the
+        engine must preempt someone (or wait) before this slot can decode."""
+        assert 0 <= position < self.width, (position, self.width)
+        idx = position // self.page_w
+        if self._table[slot, idx] >= 0:
+            return True
+        if not self._free_pages:
+            return False
+        phys = heapq.heappop(self._free_pages)
+        self._table[slot, idx] = phys
+        self.cache["page_table"] = (
+            self.cache["page_table"].at[slot, idx].set(phys))
+        return True
+
+    def release(self, slot: int) -> None:
+        for p in self._table[slot]:
+            if p >= 0:
+                heapq.heappush(self._free_pages, int(p))
+        self._table[slot, :] = -1
+        self.cache = self._release(self.cache, jnp.int32(slot))
+        heapq.heappush(self._free_slots, slot)
+
+    # ------------------------------------------------------------ views ---
+    def lengths(self) -> np.ndarray:
+        return np.asarray(self.cache["lengths"])
+
+    def active(self) -> np.ndarray:
+        return np.asarray(self.cache["active"])
+
+    def page_table(self) -> np.ndarray:
+        """Host mirror of the slot->physical-page mapping (-1 = vacant)."""
+        return self._table.copy()
+
+    def hbm_bytes(self) -> int:
+        return _leaf_hbm_bytes(self.cache["layers"])

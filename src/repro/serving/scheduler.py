@@ -9,6 +9,7 @@ exactly reproducible.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -61,13 +62,25 @@ class Scheduler:
         self.waiting.extend(requests)
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
 
-    def pop_arrived(self, step: int, budget: int) -> List[Request]:
-        """Up to ``budget`` arrived requests, FCFS."""
-        out: List[Request] = []
-        while self.waiting and budget > 0 and self.waiting[0].arrival <= step:
-            out.append(self.waiting.pop(0))
-            budget -= 1
-        return out
+    def peek_arrived(self, step: int) -> Optional[Request]:
+        """Head-of-queue request if it has arrived by ``step`` (not popped).
+        Admission is strictly FCFS: when the head does not fit (no slot / not
+        enough KV pages), later arrivals must not jump it."""
+        if self.waiting and self.waiting[0].arrival <= step:
+            return self.waiting[0]
+        return None
+
+    def pop_head(self) -> Request:
+        return self.waiting.pop(0)
+
+    def requeue(self, slot: int, step: int) -> SlotRun:
+        """Preempt ``slot``: its request goes back to the waiting queue (at
+        ``step`` arrival) for full recompute — generated tokens are
+        discarded, so a re-admitted request re-derives them deterministically
+        under greedy sampling."""
+        run = self.running.pop(slot)
+        self.submit([dataclasses.replace(run.request, arrival=step)])
+        return run
 
     def bind(self, slot: int, request: Request, step: int,
              first_token: int) -> SlotRun:

@@ -174,11 +174,14 @@ def test_scheduler_fcfs_and_backfill():
     s.submit([Request(rid=1, prompt=[1], arrival=5),
               Request(rid=0, prompt=[1], arrival=0),
               Request(rid=2, prompt=[1], arrival=5)])
-    assert [r.rid for r in s.pop_arrived(0, budget=2)] == [0]
-    assert [r.rid for r in s.pop_arrived(4, budget=2)] == []
-    # at step 5 both arrive; budget limits admission
-    assert [r.rid for r in s.pop_arrived(5, budget=1)] == [1]
-    assert [r.rid for r in s.pop_arrived(6, budget=2)] == [2]
+    assert s.peek_arrived(0).rid == 0
+    assert s.pop_head().rid == 0
+    assert s.peek_arrived(4) is None     # rid 1/2 not arrived yet
+    # at step 5 both have arrived; strict FCFS order by (arrival, rid)
+    assert s.peek_arrived(5).rid == 1
+    assert s.pop_head().rid == 1
+    assert s.peek_arrived(6).rid == 2
+    assert s.pop_head().rid == 2
     assert s.done  # queue drained, nothing running yet
     run = s.bind(0, Request(rid=9, prompt=[1, 2], max_new_tokens=2), 7, 42)
     assert not s.done

@@ -1,14 +1,15 @@
 """SHA kernel edge cases: compact-vs-reference parity at the boundaries the
 serving engine actually hits — k_sel at both extremes, ragged per-sequence
 ``lengths`` (the continuous-batching masking contract, including empty and
-full cache rows), and block_w clamping when the requested KV tile exceeds
-the cache width."""
+full cache rows), block_w clamping/padding on non-divisible cache widths,
+and the paged variant's page-table routing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.sha import select_head_attention, sha_ref
+from repro.kernels.sha import (select_head_attention,
+                               select_head_attention_paged, sha_ref)
 
 KEY = jax.random.PRNGKey(7)
 
@@ -81,6 +82,108 @@ def test_sha_block_w_larger_than_width_clamps(block_w):
     out = select_head_attention(q, k, v, bhi, lengths, block_w=block_w)
     ref = sha_ref(q, k, v, bhi, lengths)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_runtime_interpret_flag_resolution():
+    """Kernel execution mode: explicit set > env var > backend default
+    (interpret everywhere but TPU), so real-TPU runs compile the kernels
+    without per-callsite flags."""
+    import os
+
+    from repro import runtime
+
+    old_env = os.environ.pop("REPRO_PALLAS_INTERPRET", None)
+    try:
+        runtime.set_pallas_interpret(None)
+        assert runtime.pallas_interpret() == (jax.default_backend() != "tpu")
+        os.environ["REPRO_PALLAS_INTERPRET"] = "0"
+        assert runtime.pallas_interpret() is False
+        os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+        assert runtime.pallas_interpret() is True
+        runtime.set_pallas_interpret(False)      # explicit beats env
+        assert runtime.pallas_interpret() is False
+    finally:
+        runtime.set_pallas_interpret(None)
+        if old_env is None:
+            os.environ.pop("REPRO_PALLAS_INTERPRET", None)
+        else:
+            os.environ["REPRO_PALLAS_INTERPRET"] = old_env
+
+
+@pytest.mark.parametrize("W,block_w", [(48, 32), (40, 16), (33, 32)])
+def test_sha_non_divisible_width_pads_final_block(W, block_w):
+    """block_w that does not divide W must zero-pad the final KV block
+    instead of crashing (regression: the kernel used to assert
+    W % block_w == 0); the padded tail is masked by ``lengths``."""
+    B, G, qpg, dh = 2, 4, 2, 32
+    q, k, v = _qkv(B, G, qpg, dh, W, seed=8)
+    bhi = _bhi(jax.random.fold_in(KEY, 9), B, G, 2)
+    lengths = jnp.array([W, max(1, W // 3)], jnp.int32)
+    out = select_head_attention(q, k, v, bhi, lengths, block_w=block_w)
+    ref = sha_ref(q, k, v, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ----------------------------------------------------------- paged SHA ---
+def _paged_fixture(B, G, qpg, dh, page_w, pages_per_slot, num_pages, seed=0):
+    """Random page pool + per-slot tables; returns paged operands and the
+    gathered contiguous (B, W, G, dh) equivalents for the oracle."""
+    W = pages_per_slot * page_w
+    ks = jax.random.split(jax.random.fold_in(KEY, 100 + seed), 3)
+    q = jax.random.normal(ks[0], (B, G, qpg, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages + 1, G, page_w, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages + 1, G, page_w, dh), jnp.float32)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_pages)[:B * pages_per_slot]
+    pt = jnp.asarray(perm.reshape(B, pages_per_slot).astype(np.int32))
+    kc = jnp.moveaxis(kp[pt], 2, 1).reshape(B, G, W, dh).transpose(0, 2, 1, 3)
+    vc = jnp.moveaxis(vp[pt], 2, 1).reshape(B, G, W, dh).transpose(0, 2, 1, 3)
+    return q, kp, vp, pt, kc, vc, W
+
+
+def test_sha_paged_matches_reference_on_scattered_pages():
+    """Physical pages deliberately permuted across the pool: the paged
+    kernel must reassemble each sequence via its page table and match the
+    contiguous oracle for ragged lengths."""
+    B, G, qpg, dh, pw, Sp = 3, 4, 2, 32, 8, 4
+    q, kp, vp, pt, kc, vc, W = _paged_fixture(B, G, qpg, dh, pw, Sp, 16)
+    bhi = _bhi(jax.random.fold_in(KEY, 12), B, G, 2)
+    lengths = jnp.array([1, W // 2 + 3, W], jnp.int32)
+    out = select_head_attention_paged(q, kp, vp, bhi, pt, lengths)
+    ref = sha_ref(q, kc, vc, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_sha_paged_sink_entries_are_inert():
+    """Logical pages at or past ``length`` may point anywhere (the serving
+    pool points them at its sink page): their contents must not leak into
+    the output."""
+    B, G, qpg, dh, pw, Sp = 2, 4, 1, 16, 8, 3
+    q, kp, vp, pt, kc, vc, W = _paged_fixture(B, G, qpg, dh, pw, Sp, 8, seed=2)
+    bhi = _bhi(jax.random.fold_in(KEY, 13), B, G, 2)
+    lengths = jnp.array([5, 9], jnp.int32)   # 1 and 2 live pages
+    out = select_head_attention_paged(q, kp, vp, bhi, pt, lengths)
+    # redirect every dead logical page to the sink (id = num_pages = 8)
+    pt_np = np.asarray(pt).copy()
+    pt_np[0, 1:] = 8
+    pt_np[1, 2:] = 8
+    out_sink = select_head_attention_paged(q, kp, vp, bhi,
+                                           jnp.asarray(pt_np), lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_sink))
+    ref = sha_ref(q, kc, vc, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_sha_paged_zero_length_rows_are_zero():
+    """Vacant serving slots (length 0) visit no page and emit zeros — the
+    paged contract (the compact kernel's uniform-softmax garbage for
+    length 0 is equally discarded upstream, but pages must not be read)."""
+    B, G, qpg, dh, pw, Sp = 2, 4, 2, 16, 8, 2
+    q, kp, vp, pt, _, _, _ = _paged_fixture(B, G, qpg, dh, pw, Sp, 6, seed=3)
+    bhi = _bhi(jax.random.fold_in(KEY, 14), B, G, 2)
+    out = select_head_attention_paged(q, kp, vp, bhi, pt,
+                                      jnp.zeros((B,), jnp.int32))
+    assert not np.asarray(out).any()
 
 
 def test_sha_duplicate_group_ids_in_bhi():
