@@ -8,6 +8,10 @@ occupancy, pages-scanned-per-step (vs the full-width dense-equivalent
 scan), preemptions, and pool HBM bytes vs the contiguous
 ``max_batch x width`` reservation.
 
+Traffic goes through the ``LLM`` frontend (``EngineCore.step()``
+underneath): the Poisson trace is replayed via ``LLM.generate(...,
+arrivals=...)`` and metrics are read off ``llm.report``.
+
 Runs end-to-end on CPU (the SHA Pallas kernel path stays available via
 --impl kernel, interpret mode).  Emits `name,config,value` rows for
 benchmarks.run and one JSON row per policy to results/continuous_batching
@@ -25,7 +29,8 @@ import numpy as np
 
 from benchmarks.common import get_toy_model
 from repro.models import init_serve_cache
-from repro.serving import Engine, poisson_requests
+from repro.serving import (LLM, SamplingParams, make_serving_jits,
+                           poisson_requests)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -45,11 +50,25 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
         if impl:
             pol = dataclasses.replace(pol, impl=impl)
         kw = dict(routers=routers, policy=pol)
-    eng = Engine(cfg, params, cache_width=cache_width, page_w=page_w,
-                 num_pages=num_pages, **kw)
-    eng.serve(reqs[:2], max_batch=max_batch)          # jit warmup
-    report = eng.serve(reqs, max_batch=max_batch)
-    assert eng.decode_jit_traces() <= 1, "continuous batching re-jitted!"
+
+    jits = make_serving_jits(cfg, kw.get("policy"))
+
+    def _llm():
+        return LLM(cfg, params, cache_width=cache_width, page_w=page_w,
+                   num_pages=num_pages, max_batch=max_batch, _jits=jits, **kw)
+
+    def _run(llm, trace):
+        outs = llm.generate([r.prompt for r in trace],
+                            [SamplingParams(max_tokens=r.max_new_tokens)
+                             for r in trace],
+                            arrivals=[r.arrival for r in trace])
+        assert all(o is not None and o.finished for o in outs)
+        return llm.report
+
+    _run(_llm(), reqs[:2])                            # jit warmup
+    llm = _llm()
+    report = _run(llm, reqs)
+    assert llm.decode_jit_traces() <= 1, "continuous batching re-jitted!"
     return report
 
 

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.core import default_policy
 from repro.models import init_params, init_routers, prepare_model_config
+from repro.serving import LLM, SamplingParams
 from repro.serving.engine import Engine
 
 # 1. pick an architecture config (any of the 10 assigned archs works; the
@@ -38,3 +39,15 @@ print("generated   :", tokens.shape)
 print(tokens)
 print(f"decode throughput: {engine.stats.decode_tok_per_s:.1f} tok/s "
       f"(CPU, batch=4, polar sparsity ON)")
+
+# 5. the serving frontend: continuous batching with per-request sampling —
+#    greedy and temperature/top-k requests share one compiled decode step
+llm = LLM(cfg, params, routers=routers, policy=policy,
+          max_batch=4, cache_width=128)
+outs = llm.generate([p.tolist() for p in prompt[:2]],
+                    [SamplingParams(max_tokens=8),                  # greedy
+                     SamplingParams(max_tokens=8, temperature=0.8,
+                                    top_k=16, seed=0)])
+for out in outs:
+    print(f"rid {out.rid} ({out.finish_reason}): {out.token_ids}")
+print("decode traces:", llm.decode_jit_traces())

@@ -4,24 +4,33 @@ decode throughput per batch size (the paper's Fig 5 experiment, CPU-scale).
 
     PYTHONPATH=src python examples/serve_batched.py [--steps 32]
 
-With --continuous, instead drives the continuous-batching engine: a Poisson
-trace of requests is admitted mid-stream into a slot-based KV pool
-(scheduler -> kv_pool -> engine.serve) and per-request latencies are
-reported alongside throughput:
+With --continuous, instead drives the continuous-batching ``LLM`` frontend:
+a Poisson trace of requests is replayed through ``LLM.generate(...,
+arrivals=...)`` (scheduler -> kv_pool -> EngineCore.step) and per-request
+latencies are reported alongside throughput:
 
     PYTHONPATH=src python examples/serve_batched.py --continuous
+
+With --stream, tokens are printed as the engine produces them via
+``LLM.stream`` — heterogeneous per-request sampling (greedy next to
+temperature/top-k next to top-p in the same compiled decode batch) and one
+request aborted mid-flight:
+
+    PYTHONPATH=src python examples/serve_batched.py --stream
 """
 import argparse
 import dataclasses
 import sys
 
 import jax.numpy as jnp
+import numpy as np
 
 sys.path.insert(0, "benchmarks")
 from common import data_cfg, get_toy_model  # noqa: E402
 
 from repro.data import token_stream  # noqa: E402
-from repro.serving import Engine, poisson_requests  # noqa: E402
+from repro.serving import (LLM, Engine, SamplingParams,  # noqa: E402
+                           make_serving_jits, poisson_requests)
 
 
 def fixed_batch(args, cfg, params, routers, pol):
@@ -54,14 +63,27 @@ def continuous(args, cfg, params, routers, pol):
     page_w = None if args.page_w == 0 else args.page_w
     for name, kw in [("dense", {}),
                      ("polar", dict(routers=routers, policy=pol))]:
-        eng = Engine(cfg, params, cache_width=64, page_w=page_w,
-                     num_pages=args.num_pages, **kw)
-        eng.serve(reqs[:2], max_batch=args.max_batch)    # jit warmup
-        rep = eng.serve(reqs, max_batch=args.max_batch)
+        jits = make_serving_jits(cfg, kw.get("policy"))
+
+        def _llm():
+            return LLM(cfg, params, cache_width=64, page_w=page_w,
+                       num_pages=args.num_pages, max_batch=args.max_batch,
+                       _jits=jits, **kw)
+
+        def _run(llm, trace):
+            llm.generate([r.prompt for r in trace],
+                         [SamplingParams(max_tokens=r.max_new_tokens)
+                          for r in trace],
+                         arrivals=[r.arrival for r in trace])
+
+        _run(_llm(), reqs[:2])        # jit warmup: keep tok/s compile-free
+        llm = _llm()
+        _run(llm, reqs)
+        rep = llm.report
         print(f"\n[{name}] {len(rep.tokens)} requests over {rep.steps} decode "
               f"steps | {rep.decode_tok_per_s:.1f} tok/s | mean queue "
               f"{rep.mean_queue_steps:.2f} steps | decode traces: "
-              f"{eng.decode_jit_traces()}")
+              f"{llm.decode_jit_traces()}")
         if rep.page_w is not None:
             print(f"  paged KV: page_w {rep.page_w}, {rep.num_pages} pages "
                   f"({rep.pool_hbm_bytes / 1e6:.1f} MB KV) | "
@@ -76,24 +98,60 @@ def continuous(args, cfg, params, routers, pol):
                   f"{rep.finished_step[rid]:>3}, {len(rep.tokens[rid])} tokens")
 
 
+def stream_demo(args, cfg, params, routers, pol):
+    """Incremental streaming with heterogeneous sampling + a live abort."""
+    llm = LLM(cfg, params, routers=routers, policy=pol, cache_width=64,
+              max_batch=args.max_batch,
+              page_w=None if args.page_w == 0 else args.page_w)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).tolist()
+               for _ in range(3)]
+    sp = [SamplingParams(max_tokens=20),                             # greedy
+          SamplingParams(max_tokens=20, temperature=0.8, top_k=8, seed=1),
+          SamplingParams(max_tokens=20, temperature=1.0, top_p=0.9, seed=2)]
+    labels = {0: "greedy", 1: "temp+top-k", 2: "top-p"}
+    print("streaming 3 requests (mixed sampling, one compiled decode step); "
+          "rid 1 is aborted after 6 tokens:\n")
+    seen = {0: 0, 1: 0, 2: 0}
+    aborted = False
+    for out in llm.stream(prompts, sp):
+        if out.new_token_ids:
+            seen[out.rid] += len(out.new_token_ids)
+            print(f"  rid {out.rid} [{labels[out.rid]:>10}] "
+                  f"+= {out.new_token_ids}")
+        if not aborted and seen[1] >= 6:
+            print("  >>> abort(1): slot + KV pages freed immediately")
+            llm.abort(1)
+            aborted = True
+        if out.finished:
+            print(f"  rid {out.rid} finished ({out.finish_reason}): "
+                  f"{len(out.token_ids)} tokens")
+    print(f"\ndecode traces: {llm.decode_jit_traces()} "
+          f"(mixed sampling configs, single compile)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--batches", type=int, nargs="+", default=[1, 8, 32])
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching under Poisson arrivals")
+    ap.add_argument("--stream", action="store_true",
+                    help="stream tokens incrementally (with a mid-run abort)")
     ap.add_argument("--num-requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=0.5)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--page-w", type=int, default=16,
-                    help="KV page size for --continuous (0 = contiguous pool)")
+                    help="KV page size (0 = contiguous pool)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="physical KV pages (default: full provisioning)")
     args = ap.parse_args()
 
     print("training / loading the toy OPT model + routers ...")
     cfg, params, routers, pol = get_toy_model()
-    if args.continuous:
+    if args.stream:
+        stream_demo(args, cfg, params, routers, pol)
+    elif args.continuous:
         continuous(args, cfg, params, routers, pol)
     else:
         fixed_batch(args, cfg, params, routers, pol)

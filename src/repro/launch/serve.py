@@ -1,10 +1,14 @@
-"""Serving launcher: batched decode with Polar Sparsity for any --arch.
+"""Serving launcher: batched decode with Polar Sparsity for any --arch,
+through the continuous-batching ``LLM`` frontend.
 
 CPU demo runs the smoke variant; pass --full to build the published config
 (only sensible on a real TPU slice).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
-        --batch 4 --prefill 32 --decode 32 [--dense]
+        --batch 4 --prefill 32 --decode 32 [--dense] [--temperature 0.8]
+
+Embed-stub architectures (no token embedding table) cannot go through the
+token-prompt request API and fall back to the fixed-batch ``Engine`` path.
 """
 from __future__ import annotations
 
@@ -16,7 +20,22 @@ import jax.numpy as jnp
 from repro.configs import ALL_ARCHS, get_config, get_smoke_config
 from repro.core import default_policy
 from repro.models import init_params, init_routers, prepare_model_config
+from repro.serving import LLM, SamplingParams
 from repro.serving.engine import Engine
+
+
+def _serve_embed_stub(cfg, params, routers, policy, args, key):
+    """Fixed-batch legacy path for architectures that consume embeddings."""
+    width = args.prefill + args.decode + 2
+    eng = Engine(cfg, params, routers=routers, policy=policy, cache_width=width)
+    emb = jax.random.normal(key, (args.batch, args.prefill, cfg.d_model),
+                            jnp.float32)
+    first = eng.prefill(embeds=emb)
+    out = eng.generate(args.decode, first_logits=first)
+    print(f"prefill {eng.stats.prefill_s:.2f}s; "
+          f"decode {eng.stats.tokens_decoded} tokens "
+          f"@ {eng.stats.decode_tok_per_s:.1f} tok/s")
+    print("sample:", out[0, :16].tolist())
 
 
 def main():
@@ -28,6 +47,12 @@ def main():
     ap.add_argument("--dense", action="store_true", help="disable sparsity")
     ap.add_argument("--full", action="store_true", help="published config")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with top-k below")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--page-w", type=int, default=16,
+                    help="KV page size (0 = contiguous slot pool)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -44,19 +69,27 @@ def main():
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"policy={'dense' if policy is None else f'polar(d={policy.attn_density})'}")
 
-    eng = Engine(cfg, params, routers=routers, policy=policy, cache_width=width)
     if cfg.embed_stub:
-        emb = jax.random.normal(key, (args.batch, args.prefill, cfg.d_model),
-                                jnp.float32)
-        first = eng.prefill(embeds=emb)
-    else:
-        toks = jax.random.randint(key, (args.batch, args.prefill), 0, cfg.vocab_size)
-        first = eng.prefill(tokens=toks)
-    out = eng.generate(args.decode, first_logits=first)
-    print(f"prefill {eng.stats.prefill_s:.2f}s; "
-          f"decode {eng.stats.tokens_decoded} tokens "
-          f"@ {eng.stats.decode_tok_per_s:.1f} tok/s")
-    print("sample:", out[0, :16].tolist())
+        _serve_embed_stub(cfg, params, routers, policy, args, key)
+        return
+
+    llm = LLM(cfg, params, routers=routers, policy=policy,
+              max_batch=args.batch, cache_width=width,
+              page_w=args.page_w or None)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (args.prefill,), 0, cfg.vocab_size).tolist()
+               for i in range(args.batch)]
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, max_tokens=args.decode,
+                        seed=args.seed)
+    outs = llm.generate(prompts, sp)
+    rep = llm.report
+    print(f"prefill {llm.core.stats.prefill_s:.2f}s; "
+          f"decode {rep.tokens_decoded} tokens over {rep.decode_steps_run} "
+          f"steps @ {rep.decode_tok_per_s:.1f} tok/s | decode traces: "
+          f"{llm.decode_jit_traces()}")
+    print("sample:", outs[0].token_ids[:16],
+          f"(finish_reason={outs[0].finish_reason})")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,67 @@
-from repro.serving.engine import (Engine, EngineStats, ServeReport,
-                                  build_engine)
+"""Continuous-batching serving stack — API reference.
+
+Frontends
+---------
+``LLM(cfg, params, *, routers, policy, max_batch, cache_width, page_w,
+num_pages)`` (llm.py)
+    ``generate(prompts, params)``   blocking; one final ``RequestOutput``
+                                    per prompt, in order.
+    ``stream(prompts, params)``     iterator of incremental
+                                    ``RequestOutput`` token deltas.
+    ``abort(rid)``                  cancel between yields; frees the slot
+                                    and KV pages immediately.
+``Engine`` (engine.py)
+    ``prefill()`` / ``generate()``  the paper's fixed-batch evaluation.
+    ``serve(requests)``             legacy trace-replay wrapper: pumps an
+                                    ``EngineCore`` and reassembles a
+                                    ``ServeReport``.  Prefer ``LLM`` /
+                                    ``EngineCore`` for new code.
+
+Core
+----
+``EngineCore`` (engine.py)
+    ``add_request(rid, prompt, SamplingParams)``  enqueue (bad requests
+        come back as ``finish_reason="reject"``, never exceptions).
+    ``abort(rid)``    release the request's slot + pages now.
+    ``step()``        at most one prefill admission + one batched decode
+        dispatch; returns ``list[RequestOutput]``.  Per-request sampling
+        (temperature / top-k / top-p / seed) runs *inside* the single
+        jitted decode step via per-slot parameter arrays, so mixed
+        sampling configs keep ``decode_jit_traces() == 1``.
+
+Data types
+----------
+``SamplingParams``  temperature (0 = greedy), top_k, top_p, max_tokens,
+                    stop_token_ids, seed (draws keyed by (seed, position):
+                    batch-composition independent).          (params.py)
+``RequestOutput``   rid, new_token_ids (delta), token_ids (cumulative),
+                    finished, finish_reason
+                    ("stop" | "length" | "abort" | "reject"), reason.
+``Request``         scheduler-level record (prompt, arrival step, stop
+                    ids); raises ``InvalidRequestError``.  (scheduler.py)
+``ServeReport``     aggregate throughput / queueing / paging metrics.
+
+Infrastructure
+--------------
+``Scheduler``       FCFS admission, eviction, preemption requeue.
+``KVPool`` / ``PagedKVPool``  fixed-shape slot pool; paged variant adds
+                    page tables, allocate-on-decode growth, sink-page
+                    masking, O(log n) free lists.            (kv_pool.py)
+``sampling.sample`` batched per-row sampler (jit-resident).  (sampling.py)
+``poisson_requests``  synthetic async-arrival traces.
+"""
+from repro.serving.engine import (Engine, EngineCore, EngineStats,
+                                  ServeReport, build_engine,
+                                  make_serving_jits)
 from repro.serving.kv_pool import KVPool, PagedKVPool
+from repro.serving.llm import LLM
+from repro.serving.params import (InvalidRequestError, RequestOutput,
+                                  SamplingParams)
 from repro.serving.scheduler import (Request, Scheduler, SlotRun,
                                      poisson_requests)
 from repro.serving import sampling
 
-__all__ = ["Engine", "EngineStats", "ServeReport", "build_engine", "KVPool",
-           "PagedKVPool", "Request", "Scheduler", "SlotRun",
-           "poisson_requests", "sampling"]
+__all__ = ["Engine", "EngineCore", "EngineStats", "ServeReport",
+           "build_engine", "make_serving_jits", "KVPool", "PagedKVPool",
+           "LLM", "InvalidRequestError", "RequestOutput", "SamplingParams",
+           "Request", "Scheduler", "SlotRun", "poisson_requests", "sampling"]

@@ -2,28 +2,37 @@
 Sparsity integrated (head/group routers every sparse layer, MLP union
 routing for ReLU-family FFNs).
 
-Two serving modes:
+Two layers, vLLM-style:
 
-* ``prefill()`` / ``generate()`` — the paper's synchronous fixed-batch
-  evaluation setting (fixed batch, fixed sequence length, measure decode
-  throughput).
-* ``serve(requests)`` — continuous batching: a request-level scheduler
-  (serving/scheduler.py) admits requests into a KV pool (serving/kv_pool.py)
-  as they arrive, evicts finished sequences, and backfills freed slots —
-  all at fixed array shapes, so the decode step compiles exactly once no
-  matter how traffic arrives.  Prompts are right-padded to power-of-two
-  buckets so prefill compiles once per bucket.
+* ``EngineCore`` — the incremental scheduler/executor.  ``add_request``
+  enqueues a prompt with per-request :class:`SamplingParams`, ``abort``
+  frees a request's slot and KV pages immediately, and ``step()`` runs at
+  most one prefill admission plus one batched decode dispatch, returning
+  per-request :class:`RequestOutput` token deltas with a ``finish_reason``
+  (``stop`` / ``length`` / ``abort`` / ``reject``).  Sampling executes
+  *inside the single jitted decode step* via per-slot parameter arrays
+  (temperature / top-k / top-p / seed / position) threaded next to the KV
+  pool's ``lengths`` / ``active`` leaves — ``temperature == 0`` lowers to
+  greedy in-graph, so a batch mixing greedy and sampled requests still
+  compiles exactly once.
 
-  The default pool is **paged** (``page_w`` positions per page, per-slot
-  page tables): admission is gated on free *pages* (strict FCFS —
-  head-of-line requests that don't fit block later ones), decode growth
-  allocates a page when a sequence crosses a page boundary, and when pages
-  run out the youngest running request is preempted back to the queue for
-  recompute.  ``page_w=None`` restores the contiguous one-slot-per-request
-  pool (useful as a parity oracle).
+* ``Engine`` — the paper's synchronous fixed-batch evaluation setting
+  (``prefill()`` / ``generate()``: fixed batch, fixed sequence length,
+  measure decode throughput), plus ``serve(requests)``: a thin compat
+  wrapper that pumps ``EngineCore.step()`` over a complete arrival trace
+  and reassembles the historical :class:`ServeReport`.
+
+The KV pool behind both is paged by default (``page_w`` positions per
+page, per-slot page tables): admission gates on free *pages* (strict
+FCFS), decode growth allocates a page at each boundary crossing, and when
+pages run out the youngest running request is preempted back to the queue
+for recompute.  ``page_w=None`` restores the contiguous
+one-slot-per-request pool (parity oracle).  See ``serving/llm.py`` for the
+blocking/streaming ``LLM`` frontend on top of ``EngineCore``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
@@ -37,6 +46,9 @@ from repro.models import (decode_step, forward, init_cache,
                           prepare_model_config)
 from repro.serving import sampling
 from repro.serving.kv_pool import KVPool, PagedKVPool
+from repro.serving.params import (FINISH_ABORT, FINISH_REJECT, FINISH_STOP,
+                                  InvalidRequestError, RequestOutput,
+                                  SamplingParams)
 from repro.serving.scheduler import Request, Scheduler, SlotRun
 
 
@@ -53,7 +65,8 @@ class EngineStats:
 
 @dataclass
 class ServeReport:
-    """Outcome of one ``Engine.serve`` run."""
+    """Aggregate outcome of a serving run (one ``Engine.serve`` call, or an
+    ``EngineCore``'s lifetime-so-far via ``core.report``)."""
     tokens: Dict[int, List[int]]          # rid -> generated tokens
     admitted_step: Dict[int, int]         # rid -> decode step of admission
     finished_step: Dict[int, int]
@@ -64,6 +77,7 @@ class ServeReport:
     tokens_decoded: int = 0               # tokens produced by decode steps
     slots_served: int = 0                 # admissions (incl. slot reuse)
     rejected: List[int] = field(default_factory=list)  # rids never admissible
+    aborted: List[int] = field(default_factory=list)   # rids aborted mid-flight
     # ------------------------------------------- paged-pool accounting ----
     preemptions: int = 0                  # recompute preemptions (paged)
     pages_scanned: int = 0                # sum over steps of live pages read
@@ -94,8 +108,341 @@ class ServeReport:
         return self.occupancy_sum / self.decode_steps_run if self.decode_steps_run else 0.0
 
 
+def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
+    """(prefill_jit, decode_jit) for one prepared config + policy.
+
+    The decode jit fuses the model step with the per-slot sampler: it takes
+    the sampling-parameter arrays alongside the cache's ``lengths`` /
+    ``active`` / ``page_table`` leaves and returns sampled tokens directly,
+    so heterogeneous per-request sampling configs are data, not code — one
+    trace covers them all.
+    """
+    def _prefill(params, tokens, embeds, cache):
+        return forward(params, cfg, tokens=tokens, embeds=embeds, cache=cache)
+
+    def _decode(params, routers, tokens, cache, samp):
+        logits, cache = decode_step(params, cfg, tokens=tokens, cache=cache,
+                                    routers=routers, policy=policy)
+        toks = sampling.sample(logits, **samp)
+        return toks, cache
+
+    return jax.jit(_prefill), jax.jit(_decode)
+
+
+class EngineCore:
+    """Incremental serving core: ``add_request`` / ``abort`` / ``step``.
+
+    One instance owns one KV pool of ``max_batch`` slots at fixed shapes;
+    ``step()`` never re-jits as requests join, finish, abort, or get
+    preempted (``decode_jit_traces() == 1``).  The step clock advances by
+    one per batched decode and fast-forwards across idle gaps in simulated
+    arrival traces.
+    """
+
+    def __init__(self, cfg, params, *, routers=None,
+                 policy: Optional[PolarPolicy] = None,
+                 max_batch: int = 4, cache_width: int = 2048,
+                 page_w: Optional[int] = 16,
+                 num_pages: Optional[int] = None,
+                 stats: Optional[EngineStats] = None,
+                 _jits=None):
+        self.cfg = cfg
+        self.params = params
+        self.routers = routers
+        self.policy = policy
+        self.max_batch = int(max_batch)
+        self.cache_width = int(cache_width)
+        self.stats = stats if stats is not None else EngineStats()
+        self._prefill, self._decode = (_jits if _jits is not None
+                                       else make_serving_jits(cfg, policy))
+        if page_w is None:
+            self.pool = KVPool(cfg, max_batch, cache_width)
+        else:
+            self.pool = PagedKVPool(cfg, max_batch, cache_width,
+                                    page_w=page_w, num_pages=num_pages)
+        self.paged = isinstance(self.pool, PagedKVPool)
+        self.sched = Scheduler(max_batch, max_length=cache_width - 1)
+        self.clock = 0
+        self.report = ServeReport(tokens={}, admitted_step={},
+                                  finished_step={}, arrival={})
+        if self.paged:
+            self.report.page_w = self.pool.page_w
+            self.report.num_pages = self.pool.num_pages
+        self.report.pool_hbm_bytes = self.pool.hbm_bytes()
+        # per-slot sampling parameters, lowered from SamplingParams at
+        # admission; devices see them as (max_batch,) leaves next to the
+        # pool's lengths/active arrays
+        self._temp = np.zeros((self.max_batch,), np.float32)
+        self._top_k = np.zeros((self.max_batch,), np.int32)
+        self._top_p = np.ones((self.max_batch,), np.float32)
+        self._seed = np.zeros((self.max_batch,), np.uint32)
+        self._pos = np.zeros((self.max_batch,), np.int32)
+        self._emitted: Dict[int, int] = {}       # rid -> tokens emitted
+        self._tokens: Dict[int, List[int]] = {}  # rid -> emitted stream
+        self._pending: List[RequestOutput] = []  # rejects/aborts to deliver
+
+    # --------------------------------------------------------- frontend ---
+    def add_request(self, rid: int, prompt: Sequence[int],
+                    params: Optional[SamplingParams] = None, *,
+                    arrival: Optional[int] = None,
+                    eos_id: Optional[int] = None) -> bool:
+        """Enqueue one request.  Returns False (and queues a
+        ``finish_reason="reject"`` output for the next ``step()``) when the
+        request can never be served; the engine loop keeps running."""
+        params = params if params is not None else SamplingParams()
+        if params.seed is None:
+            params = dataclasses.replace(params, seed=rid & 0x7FFFFFFF)
+        try:
+            if rid in self.report.arrival:
+                raise InvalidRequestError(f"duplicate request id {rid}")
+            params.validate()
+            req = Request(rid=rid, prompt=prompt,
+                          max_new_tokens=params.max_tokens,
+                          arrival=self.clock if arrival is None else arrival,
+                          eos_id=eos_id,
+                          stop_token_ids=params.stop_token_ids,
+                          sampling=params)
+            if len(req.prompt) >= self.cache_width:
+                raise InvalidRequestError(
+                    f"prompt length {len(req.prompt)} >= cache width "
+                    f"{self.cache_width}")
+        except InvalidRequestError as e:
+            self.report.rejected.append(rid)
+            self._pending.append(RequestOutput(
+                rid=rid, finished=True, finish_reason=FINISH_REJECT,
+                reason=str(e)))
+            return False
+        self.sched.submit([req])
+        self.report.arrival[rid] = req.arrival
+        self._emitted.setdefault(rid, 0)
+        self._tokens.setdefault(rid, [])
+        return True
+
+    def abort(self, rid: int) -> bool:
+        """Abort ``rid`` wherever it is: waiting requests leave the queue,
+        running requests free their slot and KV pages immediately.  The
+        ``finish_reason="abort"`` output is delivered by the next
+        ``step()``.  Returns False for unknown/already-finished rids."""
+        hit = self.sched.remove_waiting(rid) is not None
+        slot = self.sched.find_running(rid)
+        if slot is not None:
+            self.sched.drop(slot)
+            self.pool.release(slot)
+            hit = True
+        if hit:
+            self.report.aborted.append(rid)
+            self._pending.append(RequestOutput(
+                rid=rid, token_ids=list(self._tokens.get(rid, [])),
+                finished=True, finish_reason=FINISH_ABORT,
+                reason="aborted by caller"))
+        return hit
+
+    @property
+    def done(self) -> bool:
+        """No waiting or running requests and no outputs left to deliver."""
+        return self.sched.done and not self._pending
+
+    def next_arrival(self) -> Optional[int]:
+        return self.sched.next_arrival()
+
+    def forget(self, rid: int) -> bool:
+        """Drop a *finished or aborted* request's retained state (its
+        token history and report entries), keeping aggregate counters.  A
+        long-lived core retains per-request history indefinitely so report
+        consumers (``Engine.serve``, benchmarks) can read it; a persistent
+        server should call this once it has delivered the terminal
+        ``RequestOutput`` downstream.  Returns False while the request is
+        still waiting/running (or the rid is unknown)."""
+        if (self.sched.find_running(rid) is not None
+                or any(r.rid == rid for r in self.sched.waiting)
+                or rid not in self.report.arrival):
+            return False
+        for d in (self._tokens, self._emitted, self.report.tokens,
+                  self.report.arrival, self.report.admitted_step,
+                  self.report.finished_step):
+            d.pop(rid, None)
+        return True
+
+    def decode_jit_traces(self) -> int:
+        """Number of compiled decode variants (continuous batching must
+        hold this at one while requests join/leave/abort)."""
+        return self._decode._cache_size()
+
+    # ------------------------------------------------------------- step ---
+    def step(self) -> List[RequestOutput]:
+        """Advance the engine: deliver pending reject/abort outputs, run at
+        most one prefill admission (strict FCFS head-of-line), then one
+        batched decode dispatch over every occupied slot.  Returns the
+        outputs produced this step (token deltas; finished requests carry
+        their ``finish_reason``)."""
+        outs, self._pending = self._pending, []
+        sched, pool = self.sched, self.pool
+        if not sched.running:
+            nxt = sched.next_arrival()
+            if nxt is None:
+                return outs
+            if nxt > self.clock:
+                self.clock = nxt               # fast-forward the idle gap
+
+        # ---- decode-growth page reservation (paged pool only) ------------
+        # runs BEFORE admission so a just-admitted request cannot be picked
+        # as preemption victim in the same step (which would discard its
+        # prefill before it decoded a single token); a fresh insert already
+        # covers its own first decode page
+        if self.paged:
+            for slot in sorted(sched.running):
+                if slot not in sched.running:     # victim of a preemption
+                    continue
+                run = sched.running[slot]
+                while not pool.reserve(slot, run.length):
+                    victim = self._pick_victim(exclude=slot)
+                    # num_pages >= pages_per_slot guarantees a lone request
+                    # can always grow once rivals are evicted
+                    assert victim is not None, "page pool exhausted"
+                    self._preempt(victim)
+
+        # ---- at most one admission: FCFS head into a free slot -----------
+        req = sched.peek_arrived(self.clock)
+        if req is not None and pool.can_admit(len(req.prompt)):
+            sched.pop_head()
+            slot = pool.claim()
+            tok, layers, L = self._prefill_request(req)
+            pool.insert(layers, slot, L)
+            self._lower_sampling(slot, req.sampling)
+            run = sched.bind(slot, req, self.clock, tok)
+            # first admission only: queueing delay must not absorb the
+            # residency time of a later-preempted request
+            self.report.admitted_step.setdefault(req.rid, self.clock)
+            self.report.slots_served += 1
+            if run.done:                          # e.g. max_tokens == 1
+                outs.append(self._finish(run))
+
+        # ---- one batched decode + in-jit per-slot sampling ---------------
+        if sched.running:
+            cur = np.zeros((self.max_batch,), np.int32)
+            for slot, run in sched.running.items():
+                cur[slot] = run.pending
+            td = time.perf_counter()
+            toks, pool.cache = self._decode(
+                self.params, self.routers, jnp.asarray(cur), pool.cache,
+                self._samp_arrays())
+            toks = np.asarray(toks)
+            self.stats.decode_s += time.perf_counter() - td
+            n_active = len(sched.running)
+            self.stats.tokens_decoded += n_active
+            self.report.tokens_decoded += n_active
+            self.report.decode_steps_run += 1
+            if self.paged:   # live pages this step covers vs full width
+                self.report.pages_scanned += sum(
+                    r.length // pool.page_w + 1
+                    for r in sched.running.values())
+                self.report.pages_scanned_dense_equiv += (
+                    n_active * pool.pages_per_slot)
+                self.report.peak_pages_in_use = max(
+                    self.report.peak_pages_in_use, pool.pages_in_use)
+                self.report.occupancy_sum += pool.pages_in_use / pool.num_pages
+            self.clock += 1
+            for slot in list(sched.running):
+                self._pos[slot] += 1
+                run = sched.record(slot, int(toks[slot]), self.clock)
+                if run.done:
+                    outs.append(self._finish(run))
+                else:
+                    out = self._emit(run, finished=False)
+                    if out.new_token_ids:
+                        outs.append(out)
+        self.report.steps = self.clock
+        return outs
+
+    # -------------------------------------------------------- internals ---
+    def _lower_sampling(self, slot: int, p: Optional[SamplingParams]) -> None:
+        p = p if p is not None else SamplingParams()
+        self._temp[slot] = p.temperature
+        self._top_k[slot] = p.top_k
+        self._top_p[slot] = p.top_p
+        self._seed[slot] = np.uint32((p.seed or 0) & 0xFFFFFFFF)
+        self._pos[slot] = 1          # position 0 was the prefill sample
+
+    def _samp_arrays(self):
+        return dict(temp=jnp.asarray(self._temp),
+                    top_k=jnp.asarray(self._top_k),
+                    top_p=jnp.asarray(self._top_p),
+                    seed=jnp.asarray(self._seed),
+                    pos=jnp.asarray(self._pos))
+
+    def _sample_one(self, logits, p: SamplingParams, pos: int) -> int:
+        """Sample one token from one row with the request's params (used at
+        prefill; same math as the in-decode batched sampler at ``pos``)."""
+        return int(sampling.sample(
+            logits[None],
+            temp=jnp.asarray([p.temperature], jnp.float32),
+            top_k=jnp.asarray([p.top_k], jnp.int32),
+            top_p=jnp.asarray([p.top_p], jnp.float32),
+            seed=jnp.asarray([(p.seed or 0) & 0xFFFFFFFF], jnp.uint32),
+            pos=jnp.asarray([pos], jnp.int32))[0])
+
+    def _prefill_request(self, req: Request):
+        """Prefill one prompt at a power-of-two bucket length (one jit trace
+        per bucket).  Returns (first sampled token, layer caches, prompt
+        length)."""
+        L = len(req.prompt)
+        P = 8
+        while P < L:
+            P *= 2
+        P = min(P, self.cache_width - 1)
+        toks = np.zeros((1, P), np.int32)
+        toks[0, :L] = req.prompt
+        cache = init_cache(self.cfg, 1, self.cache_width)
+        t0 = time.perf_counter()
+        out = self._prefill(self.params, jnp.asarray(toks), None, cache)
+        logits = out["logits"][0, L - 1]
+        logits.block_until_ready()
+        self.stats.prefill_s += time.perf_counter() - t0
+        p = req.sampling if req.sampling is not None else SamplingParams()
+        tok = self._sample_one(logits, p, pos=0)
+        return tok, out["cache"]["layers"], L
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Youngest running slot (latest admission, then highest rid) other
+        than ``exclude`` — the cheapest request to recompute."""
+        cands = [(run.admitted_step, run.request.rid, slot)
+                 for slot, run in self.sched.running.items() if slot != exclude]
+        return max(cands)[2] if cands else None
+
+    def _preempt(self, slot: int) -> None:
+        self.sched.requeue(slot, self.clock)
+        self.pool.release(slot)
+        self.report.preemptions += 1
+
+    def _emit(self, run: SlotRun, *, finished: bool) -> RequestOutput:
+        """Build the delta output for ``run``.  A preempted-then-recomputed
+        request re-derives its earlier tokens deterministically; only the
+        genuinely new suffix is emitted."""
+        rid = run.request.rid
+        gen = run.generated
+        if finished and run.finish_reason == FINISH_STOP:
+            gen = gen[:-1]           # the stop token itself is not emitted
+        new = [int(t) for t in gen[self._emitted[rid]:]]
+        self._tokens[rid].extend(new)
+        self._emitted[rid] = max(self._emitted[rid], len(gen))
+        return RequestOutput(rid=rid, new_token_ids=new,
+                             token_ids=list(self._tokens[rid]),
+                             finished=finished,
+                             finish_reason=run.finish_reason if finished
+                             else None)
+
+    def _finish(self, run: SlotRun) -> RequestOutput:
+        self.sched.evict(run.slot)
+        self.pool.release(run.slot)
+        out = self._emit(run, finished=True)
+        self.report.tokens[run.request.rid] = list(self._tokens[run.request.rid])
+        self.report.finished_step[run.request.rid] = run.finished_step
+        return out
+
+
 class Engine:
-    """serve(cfg, params) with optional (routers, policy)."""
+    """Fixed-batch evaluation (``prefill``/``generate``) plus the legacy
+    ``serve(requests)`` trace-replay wrapper over :class:`EngineCore`."""
 
     def __init__(self, cfg, params, *, routers=None,
                  policy: Optional[PolarPolicy] = None,
@@ -112,20 +459,17 @@ class Engine:
         self.cache_width = cache_width
         self.page_w = page_w               # None -> contiguous KVPool
         self.num_pages = num_pages         # None -> full provisioning
-        self.sampler = sampler
+        self.sampler = sampler             # fixed-batch generate() only
         self.stats = EngineStats()
+        # one shared jit pair: every serve() call reuses the same compiled
+        # decode step, so slot churn across calls never re-jits
+        self._prefill, self._decode = make_serving_jits(cfg, policy)
 
-        def _prefill(params, tokens, embeds, cache):
-            return forward(params, cfg, tokens=tokens, embeds=embeds,
-                           cache=cache)
+        def _decode_logits(params, routers, tokens, cache):
+            return decode_step(params, cfg, tokens=tokens, cache=cache,
+                               routers=routers, policy=policy)
 
-        def _decode(params, routers, tokens, cache):
-            logits, cache = decode_step(params, cfg, tokens=tokens, cache=cache,
-                                        routers=routers, policy=policy)
-            return logits, cache
-
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
+        self._decode_fixed = jax.jit(_decode_logits)
         self.cache = None
 
     # ------------------------------------------------- synchronous batch ---
@@ -150,8 +494,8 @@ class Engine:
         for i in range(num_tokens):
             if cur is None:
                 cur = jnp.zeros((self._batch(),), jnp.int32)
-            logits, self.cache = self._decode(self.params, self.routers,
-                                              cur, self.cache)
+            logits, self.cache = self._decode_fixed(self.params, self.routers,
+                                                    cur, self.cache)
             key, sub = jax.random.split(key)
             cur = self.sampler(logits, sub)
             toks.append(cur)
@@ -164,178 +508,54 @@ class Engine:
         return jax.tree_util.tree_leaves(self.cache["layers"])[0].shape[1]
 
     # ------------------------------------------------ continuous batching ---
-    def _prefill_request(self, req: Request):
-        """Prefill one prompt at a power-of-two bucket length (one jit trace
-        per bucket).  Returns (first greedy/sampled token, layer caches,
-        prompt length)."""
-        L = len(req.prompt)
-        P = 8
-        while P < L:
-            P *= 2
-        P = min(P, self.cache_width - 1)
-        assert L <= P, f"prompt length {L} exceeds cache width {self.cache_width}"
-        toks = np.zeros((1, P), np.int32)
-        toks[0, :L] = req.prompt
-        cache = init_cache(self.cfg, 1, self.cache_width)
-        t0 = time.perf_counter()
-        out = self._prefill(self.params, jnp.asarray(toks), None, cache)
-        logits = out["logits"][0, L - 1]
-        logits.block_until_ready()
-        self.stats.prefill_s += time.perf_counter() - t0
-        tok = int(self.sampler(logits[None], jax.random.PRNGKey(req.rid))[0])
-        return tok, out["cache"]["layers"], L
-
-    def _make_pool(self, max_batch: int):
-        if self.page_w is None:
-            return KVPool(self.cfg, max_batch, self.cache_width)
-        return PagedKVPool(self.cfg, max_batch, self.cache_width,
-                           page_w=self.page_w, num_pages=self.num_pages)
-
-    @staticmethod
-    def _pick_victim(sched: Scheduler, exclude: int) -> Optional[int]:
-        """Youngest running slot (latest admission, then highest rid) other
-        than ``exclude`` — the cheapest request to recompute."""
-        cands = [(run.admitted_step, run.request.rid, slot)
-                 for slot, run in sched.running.items() if slot != exclude]
-        return max(cands)[2] if cands else None
-
-    def _preempt(self, slot: int, sched: Scheduler, pool,
-                 report: ServeReport, step: int) -> None:
-        sched.requeue(slot, step)
-        pool.release(slot)
-        report.preemptions += 1
+    def make_core(self, *, max_batch: int = 4) -> EngineCore:
+        """A fresh :class:`EngineCore` sharing this engine's compiled
+        prefill/decode (and its stats accumulator)."""
+        return EngineCore(self.cfg, self.params, routers=self.routers,
+                          policy=self.policy, max_batch=max_batch,
+                          cache_width=self.cache_width, page_w=self.page_w,
+                          num_pages=self.num_pages, stats=self.stats,
+                          _jits=(self._prefill, self._decode))
 
     def serve(self, requests: Sequence[Request], *, max_batch: int = 4,
               max_steps: Optional[int] = None) -> ServeReport:
-        """Continuous-batching serve loop over ``requests``.
-
-        Each simulated decode step: (1) reserve decode-growth pages for the
-        running slots — preempting the youngest request when the pool is
-        out of pages (reserve comes FIRST so a request admitted this step
-        can never be the victim before it decodes a token), (2) admit
-        arrived requests into free pool slots (prefill + scatter-insert; a
-        paged pool also gates on free pages, strict FCFS), (3) one batched
-        decode over all slots, (4) evict finished sequences so their slots
-        and pages backfill.  ``Request.arrival`` is in units of decode
-        steps; the loop fast-forwards idle gaps.  Returns a ServeReport
-        with per-request tokens and throughput/queueing/paging stats.
-        """
-        pool = self._make_pool(max_batch)
-        paged = isinstance(pool, PagedKVPool)
-        sched = Scheduler(max_batch, max_length=self.cache_width - 1)
-        report = ServeReport(tokens={}, admitted_step={}, finished_step={},
-                             arrival={r.rid: r.arrival for r in requests})
-        if paged:
-            report.page_w = pool.page_w
-            report.num_pages = pool.num_pages
-        report.pool_hbm_bytes = pool.hbm_bytes()
-        # a prompt that cannot fit the cache width can never be admitted:
-        # reject it up front instead of crashing the run mid-stream
-        admissible = []
+        """Legacy trace-replay API: feed a complete ``Request`` trace to an
+        :class:`EngineCore`, pump ``step()`` until the trace drains (or
+        ``max_steps`` decode steps elapse), and return the assembled
+        :class:`ServeReport`.  Decoding is greedy unless a request carries
+        its own ``SamplingParams``.  New code should use ``EngineCore`` (or
+        the ``LLM`` frontend) directly."""
+        if self.sampler is not sampling.greedy:
+            raise ValueError(
+                "Engine.serve no longer routes through Engine(sampler=...): "
+                "per-request sampling runs inside the jitted decode step. "
+                "Attach SamplingParams to each Request (Request.sampling) "
+                "or use the LLM frontend.")
+        core = self.make_core(max_batch=max_batch)
         for r in requests:
-            if len(r.prompt) >= self.cache_width:
-                report.rejected.append(r.rid)
-            else:
-                admissible.append(r)
-        sched.submit(admissible)
-
-        step = 0
+            # the Request's own budget/stop set is authoritative in the
+            # legacy API: attached SamplingParams contribute the sampling
+            # knobs, never silently shrink max_new_tokens or drop stops
+            base = r.sampling if r.sampling is not None else SamplingParams()
+            p = dataclasses.replace(
+                base, max_tokens=r.max_new_tokens,
+                stop_token_ids=tuple(sorted(set(base.stop_token_ids)
+                                            | set(r.stop_token_ids))))
+            core.add_request(r.rid, r.prompt, p, arrival=r.arrival,
+                             eos_id=r.eos_id)
         t0 = time.perf_counter()
-        while not sched.done:
-            if max_steps is not None and step >= max_steps:
+        while not core.done:
+            if max_steps is not None and core.clock >= max_steps:
                 break
-            # ---- decode-growth page reservation (paged pool only) --------
-            # runs BEFORE admission so a just-admitted request cannot be
-            # picked as preemption victim in the same step (which would
-            # discard its prefill before it decoded a single token); a
-            # fresh insert already covers its own first decode page
-            if paged:
-                for slot in sorted(sched.running):
-                    if slot not in sched.running:   # victim of a preemption
-                        continue
-                    run = sched.running[slot]
-                    while not pool.reserve(slot, run.length):
-                        victim = self._pick_victim(sched, exclude=slot)
-                        # num_pages >= pages_per_slot guarantees a lone
-                        # request can always grow once rivals are evicted
-                        assert victim is not None, "page pool exhausted"
-                        self._preempt(victim, sched, pool, report, step)
-
-            # ---- admission: backfill free slots with arrived requests ----
-            # strict FCFS: when the head request doesn't fit (no slot, or a
-            # paged pool short on pages), later arrivals wait behind it
-            while True:
-                req = sched.peek_arrived(step)
-                if req is None or not pool.can_admit(len(req.prompt)):
-                    break
-                sched.pop_head()
-                slot = pool.claim()
-                tok, layers, L = self._prefill_request(req)
-                pool.insert(layers, slot, L)
-                run = sched.bind(slot, req, step, tok)
-                # first admission only: queueing delay must not absorb the
-                # residency time of a later-preempted request
-                report.admitted_step.setdefault(req.rid, step)
-                report.slots_served += 1
-                if run.done:                     # e.g. max_new_tokens == 1
-                    self._finish(run, sched, pool, report)
-
-            if not sched.running:
-                nxt = sched.next_arrival()
-                if nxt is None:
-                    break
-                step = max(step + 1, nxt)        # fast-forward idle time
-                continue
-
-            # ---- one batched decode over every slot (fixed shapes) -------
-            cur = np.zeros((max_batch,), np.int32)
-            for slot, run in sched.running.items():
-                cur[slot] = run.pending
-            td = time.perf_counter()
-            logits, pool.cache = self._decode(self.params, self.routers,
-                                              jnp.asarray(cur), pool.cache)
-            toks = np.asarray(
-                self.sampler(logits, jax.random.fold_in(jax.random.PRNGKey(1), step)))
-            dt = time.perf_counter() - td
-            self.stats.decode_s += dt
-            n_active = len(sched.running)
-            self.stats.tokens_decoded += n_active
-            report.tokens_decoded += n_active
-            report.decode_steps_run += 1
-            if paged:   # live pages this step actually covers vs full width
-                report.pages_scanned += sum(
-                    r.length // pool.page_w + 1
-                    for r in sched.running.values())
-                report.pages_scanned_dense_equiv += n_active * pool.pages_per_slot
-                report.peak_pages_in_use = max(report.peak_pages_in_use,
-                                               pool.pages_in_use)
-                report.occupancy_sum += pool.pages_in_use / pool.num_pages
-            step += 1
-
-            # ---- account tokens, evict finished, free their slots --------
-            for slot in list(sched.running):
-                run = sched.record(slot, int(toks[slot]), step)
-                if run.done:
-                    self._finish(run, sched, pool, report)
-
-        report.steps = step
+            core.step()
+        report = core.report
         report.wall_s = time.perf_counter() - t0
         return report
 
-    def _finish(self, run: SlotRun, sched: Scheduler, pool,
-                report: ServeReport) -> None:
-        sched.evict(run.slot)
-        pool.release(run.slot)
-        r = run.request
-        gen = run.generated
-        if r.eos_id is not None and gen and gen[-1] == r.eos_id:
-            gen = gen[:-1]
-        report.tokens[r.rid] = gen
-        report.finished_step[r.rid] = run.finished_step
-
     def decode_jit_traces(self) -> int:
         """Number of compiled decode variants (continuous batching must
-        hold this constant while requests join/leave)."""
+        hold this constant while requests join/leave — including across
+        repeated ``serve`` calls on the same engine)."""
         return self._decode._cache_size()
 
 

@@ -21,6 +21,11 @@ SHA kernel's I/O scales with ``ceil(length / page_w)`` pages per sequence.
 Both pools work for every mixer in the model zoo: attention KV (incl.
 int8-quantized), MLA latent caches, Mamba/RWKV recurrent state (recurrent
 state has no width axis and stays slot-indexed even in the paged pool).
+
+``release(slot)`` is the single reclamation path for *every* exit —
+finish, preemption, and mid-flight ``EngineCore.abort`` — so an abort
+returns the slot's pages to the free list immediately (``is_quiescent()``
+checks that the bookkeeping is back to its empty-pool baseline).
 """
 from __future__ import annotations
 
@@ -110,6 +115,10 @@ class KVPool:
 
     def active(self) -> np.ndarray:
         return np.asarray(self.cache["active"])
+
+    def is_quiescent(self) -> bool:
+        """True when every slot is back on the free list (no leaks)."""
+        return self.num_free == self.max_batch
 
     def hbm_bytes(self) -> int:
         return _leaf_hbm_bytes(self.cache["layers"])
@@ -290,6 +299,13 @@ class PagedKVPool:
     def page_table(self) -> np.ndarray:
         """Host mirror of the slot->physical-page mapping (-1 = vacant)."""
         return self._table.copy()
+
+    def is_quiescent(self) -> bool:
+        """True when every slot AND every physical page is back on its
+        free list (the abort/finish path leaked nothing)."""
+        return (self.num_free == self.max_batch
+                and self.free_pages == self.num_pages
+                and (self._table < 0).all())
 
     def hbm_bytes(self) -> int:
         return _leaf_hbm_bytes(self.cache["layers"])

@@ -1,0 +1,132 @@
+"""``LLM`` — the user-facing serving frontend over :class:`EngineCore`.
+
+Two entry points:
+
+* ``generate(prompts, params)`` — blocking convenience: submits every
+  prompt, pumps ``EngineCore.step()`` until the batch drains, and returns
+  one final :class:`RequestOutput` per prompt (same order).
+* ``stream(prompts, params)`` — incremental iterator: yields every
+  :class:`RequestOutput` as the engine produces it (token deltas while
+  running, then a final output carrying ``finish_reason``).  ``abort(rid)``
+  may be called between yields; the aborted request's slot and KV pages are
+  freed immediately and its terminal ``finish_reason="abort"`` output is
+  yielded on the next step.
+
+``params`` is one :class:`SamplingParams` shared by every prompt or a
+per-prompt list; heterogeneous configs (greedy next to temperature/top-k
+next to top-p) batch together in the one compiled decode step.  Invalid
+prompts/params never raise out of the engine loop — they come back as
+``finish_reason="reject"`` outputs with a ``reason`` string.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterator, List, Optional, Sequence, Union
+
+from repro.serving.engine import EngineCore, ServeReport
+from repro.serving.params import RequestOutput, SamplingParams
+
+Prompt = Sequence[int]
+ParamsLike = Union[None, SamplingParams, Sequence[Optional[SamplingParams]]]
+
+
+class LLM:
+    """Continuous-batching generation over one persistent engine core.
+
+    The core (KV pool, scheduler, compiled prefill/decode) lives for the
+    LLM's lifetime, so repeated ``generate``/``stream`` calls reuse the
+    same single decode trace (``decode_jit_traces() == 1``).
+
+    The core retains per-request history (token streams, report entries)
+    so ``report`` stays a complete record; a server that keeps one LLM
+    alive across unbounded traffic should call ``core.forget(rid)`` after
+    delivering each terminal output to reclaim that state.
+    """
+
+    def __init__(self, cfg, params, *, routers=None, policy=None,
+                 max_batch: int = 4, cache_width: int = 2048,
+                 page_w: Optional[int] = 16, num_pages: Optional[int] = None,
+                 _jits=None):
+        # _jits: a (prefill, decode) pair from make_serving_jits, so several
+        # LLM instances (e.g. a warmup and a measured run) can share one
+        # compiled decode step
+        self.core = EngineCore(cfg, params, routers=routers, policy=policy,
+                               max_batch=max_batch, cache_width=cache_width,
+                               page_w=page_w, num_pages=num_pages,
+                               _jits=_jits)
+        self._next_rid = 0
+
+    # --------------------------------------------------------- plumbing ---
+    @property
+    def report(self) -> ServeReport:
+        """Lifetime serving metrics of the underlying core."""
+        return self.core.report
+
+    def decode_jit_traces(self) -> int:
+        return self.core.decode_jit_traces()
+
+    def add_request(self, prompt: Prompt,
+                    params: Optional[SamplingParams] = None, *,
+                    arrival: Optional[int] = None) -> int:
+        """Submit one prompt; returns its request id (valid for ``abort``)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.core.add_request(rid, prompt, params, arrival=arrival)
+        return rid
+
+    def abort(self, rid: int) -> bool:
+        return self.core.abort(rid)
+
+    def _submit(self, prompts: Sequence[Prompt], params: ParamsLike,
+                arrivals: Optional[Sequence[int]]) -> List[int]:
+        if params is None or isinstance(params, SamplingParams):
+            params = [params] * len(prompts)
+        if len(params) != len(prompts):
+            raise ValueError(f"{len(prompts)} prompts but {len(params)} "
+                             "SamplingParams")
+        if arrivals is None:
+            arrivals = [None] * len(prompts)
+        return [self.add_request(p, sp, arrival=a)
+                for p, sp, a in zip(prompts, params, arrivals)]
+
+    def _pump(self, rids: Sequence[int],
+              max_steps: Optional[int]) -> Iterator[RequestOutput]:
+        """Drive ``core.step()`` until every rid finishes (or ``max_steps``
+        pump iterations elapse), yielding this call's outputs."""
+        pending = set(rids)
+        t0 = time.perf_counter()
+        steps = 0
+        while pending and not self.core.done and (max_steps is None
+                                                  or steps < max_steps):
+            for out in self.core.step():
+                if out.rid in pending:
+                    if out.finished:
+                        pending.discard(out.rid)
+                    yield out
+            steps += 1
+        self.core.report.wall_s += time.perf_counter() - t0
+
+    # --------------------------------------------------------- frontend ---
+    def generate(self, prompts: Sequence[Prompt], params: ParamsLike = None,
+                 *, arrivals: Optional[Sequence[int]] = None,
+                 max_steps: Optional[int] = None) -> List[Optional[RequestOutput]]:
+        """Blocking generation: one final output per prompt, in order.
+
+        ``arrivals`` (decode-step timestamps) replays an async trace
+        through the live API; ``None`` entries arrive immediately.  An
+        entry in the result is ``None`` only if ``max_steps`` cut the run
+        before that request finished.
+        """
+        rids = self._submit(prompts, params, arrivals)
+        final = {o.rid: o for o in self._pump(rids, max_steps) if o.finished}
+        return [final.get(r) for r in rids]
+
+    def stream(self, prompts: Sequence[Prompt], params: ParamsLike = None,
+               *, arrivals: Optional[Sequence[int]] = None,
+               max_steps: Optional[int] = None) -> Iterator[RequestOutput]:
+        """Incremental generation: yields outputs as the engine emits them.
+
+        Call ``abort(rid)`` between yields to cancel a request; its
+        terminal output arrives through the same iterator.
+        """
+        return self._pump(self._submit(prompts, params, arrivals), max_steps)

@@ -1,0 +1,94 @@
+"""Per-request sampling configuration and incremental outputs.
+
+``SamplingParams`` is the user-facing knob set for one request.  Inside the
+engine it is *lowered to per-slot device arrays* (temperature / top-k /
+top-p / seed / sample position) that ride next to the KV pool's
+``lengths`` / ``active`` leaves, so a batch mixing greedy, temperature+top-k
+and top-p requests still dispatches the one compiled decode step —
+``temperature == 0`` lowers to greedy *inside* the jitted sampler rather
+than picking a different code path.
+
+``RequestOutput`` is the unit ``EngineCore.step()`` returns: the token
+*delta* produced this step plus the cumulative stream, with a
+``finish_reason`` once the request leaves the engine
+(``stop`` / ``length`` / ``abort`` / ``reject``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+FINISH_STOP = "stop"      # hit a stop token (eos_id or stop_token_ids)
+FINISH_LENGTH = "length"  # hit max_tokens or the cache-width bound
+FINISH_ABORT = "abort"    # caller aborted the request mid-flight
+FINISH_REJECT = "reject"  # never admitted: invalid or un-servable request
+
+
+class InvalidRequestError(ValueError):
+    """A request that can never be served (bad prompt / bad params).
+
+    The engine surfaces it as ``RequestOutput(finish_reason="reject")``
+    instead of crashing the serving loop.
+    """
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Decoding configuration for one request.
+
+    temperature  0 => greedy argmax (the default); > 0 => softmax sampling.
+    top_k        keep only the k highest logits (0 = no top-k filter).
+    top_p        nucleus filter: keep the smallest prefix of the sorted
+                 distribution whose mass reaches top_p (1.0 = off).
+    max_tokens   hard cap on generated tokens (prompt excluded).
+    stop_token_ids  sampling any of these finishes the request with
+                 ``finish_reason="stop"``; the stop token is not emitted.
+    seed         per-request PRNG seed.  Sampling keys are derived from
+                 ``(seed, token_position)`` only, so a request's tokens do
+                 not depend on batch composition or admission timing.
+                 ``None`` => derived from the request id.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    max_tokens: int = 16
+    stop_token_ids: Tuple[int, ...] = ()
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    def validate(self) -> None:
+        if not (self.temperature >= 0.0):      # also rejects NaN
+            raise InvalidRequestError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise InvalidRequestError(f"top_k must be >= 0, got {self.top_k}")
+        if not (0.0 < self.top_p <= 1.0):
+            raise InvalidRequestError(
+                f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_tokens < 1:
+            raise InvalidRequestError(
+                f"max_tokens must be >= 1, got {self.max_tokens}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+@dataclass
+class RequestOutput:
+    """One incremental update for one request, as returned by ``step()``.
+
+    ``new_token_ids`` is the delta since the previous update for this
+    request (empty for pure state transitions such as abort/reject);
+    ``token_ids`` is the cumulative stream.  ``finish_reason`` is ``None``
+    while the request is still running.
+    """
+    rid: int
+    new_token_ids: List[int] = field(default_factory=list)
+    token_ids: List[int] = field(default_factory=list)
+    finished: bool = False
+    finish_reason: Optional[str] = None
+    reason: Optional[str] = None     # human-readable detail (reject/abort)

@@ -1,8 +1,22 @@
-"""Token samplers for the decode loop."""
+"""Token samplers for the decode loop.
+
+``greedy`` / ``temperature`` are the host-level samplers used by the
+fixed-batch ``Engine.generate`` path (one config for the whole batch).
+
+``sample`` is the serving sampler: fully batched with *per-row* parameter
+arrays (temperature, top-k, top-p, seed, sample position), shape-stable so
+it can live inside the engine's single jitted decode step.  Rows with
+``temp == 0`` lower to greedy via a ``where`` — mixed greedy/sampled
+batches never fork the compiled executable.  Keys derive from
+``(seed, pos)`` only, making every row's draw independent of batch
+composition, slot placement, and admission timing.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+_NEG = -1e30    # mask value for filtered logits
 
 
 def greedy(logits, key=None):
@@ -10,8 +24,65 @@ def greedy(logits, key=None):
 
 
 def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
-    logits = logits / max(temp, 1e-6)
+    """Whole-batch temperature sampling with optional static top-k.
+
+    ``temp == 0`` falls through to greedy (no division by an epsilon
+    floor), and the top-k threshold comes from ``jax.lax.top_k`` — O(V k)
+    selection instead of a full O(V log V) vocab sort.
+    """
+    if temp <= 0.0:
+        return greedy(logits)
+    logits = logits / temp
     if top_k:
-        kth = jnp.sort(logits, -1)[..., -top_k][..., None]
-        logits = jnp.where(logits >= kth, logits, -1e30)
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits >= kth, logits, _NEG)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def _row_key(seed, pos):
+    """Per-row PRNG key from (seed, position) — and nothing else."""
+    base = jax.random.PRNGKey(0)
+    return jax.random.fold_in(jax.random.fold_in(base, seed), pos)
+
+
+def sample(logits, *, temp, top_k, top_p, seed, pos):
+    """Per-row sampling over a (B, V) logits batch.
+
+    All parameters are (B,) arrays: ``temp`` float32 (0 = greedy),
+    ``top_k`` int32 (0 = off), ``top_p`` float32 (1 = off), ``seed``
+    uint32/int32, ``pos`` int32 (index of the token being sampled within
+    its request — 0 for the prefill token).  Returns (B,) int32 tokens.
+
+    Filtering runs in sorted space (one ``lax.top_k`` full sort per row —
+    descending values + source indices), so per-row *dynamic* k and the
+    nucleus cutoff share the same cumulative machinery; ``categorical``
+    renormalizes the surviving logits implicitly.
+    """
+    B, V = logits.shape
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    is_sampled = temp > 0.0
+
+    def _sampled(_):
+        scaled = logits / jnp.where(is_sampled, temp, 1.0)[:, None]
+        vals, idxs = jax.lax.top_k(scaled, V)          # descending per row
+        probs = jax.nn.softmax(vals, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        rank = jnp.arange(V)[None, :]
+        k = jnp.where(top_k > 0, top_k, V).astype(jnp.int32)[:, None]
+        keep = rank < k
+        # nucleus: keep tokens whose preceding mass is < top_p (rank 0
+        # always survives: its preceding mass is 0 < top_p)
+        keep &= (cum - probs) < top_p[:, None]
+        masked = jnp.where(keep, vals, _NEG)
+        keys = jax.vmap(_row_key)(seed.astype(jnp.uint32),
+                                  pos.astype(jnp.uint32))
+        choice = jax.vmap(jax.random.categorical)(keys, masked)
+        return jnp.take_along_axis(idxs, choice[:, None],
+                                   axis=-1)[:, 0].astype(jnp.int32)
+
+    # all-greedy batches (the common serving default) skip the sort/
+    # softmax/draw entirely — lax.cond keeps both branches in the one
+    # compiled executable, so this is a runtime skip, not a second trace
+    sampled = jax.lax.cond(jnp.any(is_sampled), _sampled,
+                           lambda _: greedy_tok, None)
+    return jnp.where(is_sampled, sampled, greedy_tok).astype(jnp.int32)

@@ -6,6 +6,10 @@ freed slots backfill from the queue.  Time is measured in engine decode
 steps — ``Request.arrival`` says at which decode step the request becomes
 visible, which makes async-arrival simulations (Poisson traces, bursts)
 exactly reproducible.
+
+Request validation raises :class:`InvalidRequestError` (a typed error, not
+a bare assert) so the engine can surface bad requests as
+``RequestOutput(finish_reason="reject")`` instead of crashing the loop.
 """
 from __future__ import annotations
 
@@ -14,6 +18,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.serving.params import (FINISH_LENGTH, FINISH_STOP,
+                                  InvalidRequestError, SamplingParams)
 
 
 @dataclass
@@ -24,11 +31,27 @@ class Request:
     max_new_tokens: int = 16
     arrival: int = 0                 # decode step at which it arrives
     eos_id: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+    sampling: Optional[SamplingParams] = None
 
     def __post_init__(self):
-        self.prompt = tuple(int(t) for t in self.prompt)
-        assert len(self.prompt) >= 1, "empty prompt"
-        assert self.max_new_tokens >= 1
+        try:
+            self.prompt = tuple(int(t) for t in self.prompt)
+        except (TypeError, ValueError) as e:
+            raise InvalidRequestError(f"prompt must be token ids: {e}") from e
+        if len(self.prompt) < 1:
+            raise InvalidRequestError("empty prompt")
+        if any(t < 0 for t in self.prompt):
+            raise InvalidRequestError("negative token id in prompt")
+        if self.max_new_tokens < 1:
+            raise InvalidRequestError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        self.stop_token_ids = tuple(int(t) for t in self.stop_token_ids)
+        if self.sampling is not None:
+            self.sampling.validate()
+
+    def is_stop(self, token: int) -> bool:
+        return token == self.eos_id or token in self.stop_token_ids
 
 
 @dataclass
@@ -41,6 +64,7 @@ class SlotRun:
     pending: int                     # next input token (last sampled)
     generated: List[int] = field(default_factory=list)
     finished_step: Optional[int] = None
+    finish_reason: Optional[str] = None   # "stop" | "length" once done
 
     @property
     def done(self) -> bool:
@@ -73,11 +97,29 @@ class Scheduler:
     def pop_head(self) -> Request:
         return self.waiting.pop(0)
 
+    def remove_waiting(self, rid: int) -> Optional[Request]:
+        """Drop ``rid`` from the waiting queue (abort before admission)."""
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                return self.waiting.pop(i)
+        return None
+
+    def find_running(self, rid: int) -> Optional[int]:
+        """Slot currently serving ``rid``, or None."""
+        for slot, run in self.running.items():
+            if run.request.rid == rid:
+                return slot
+        return None
+
+    def drop(self, slot: int) -> SlotRun:
+        """Remove a running slot without recording it as finished (abort)."""
+        return self.running.pop(slot)
+
     def requeue(self, slot: int, step: int) -> SlotRun:
         """Preempt ``slot``: its request goes back to the waiting queue (at
         ``step`` arrival) for full recompute — generated tokens are
         discarded, so a re-admitted request re-derives them deterministically
-        under greedy sampling."""
+        (greedy is stateless; sampled draws are keyed by (seed, position))."""
         run = self.running.pop(slot)
         self.submit([dataclasses.replace(run.request, arrival=step)])
         return run
@@ -95,7 +137,8 @@ class Scheduler:
     # ----------------------------------------------------------- decode ---
     def record(self, slot: int, token: int, step: int) -> SlotRun:
         """Account one decoded token for ``slot``; marks finish when the
-        request hits max_new_tokens / EOS / the cache-width bound."""
+        request hits a stop token, max_new_tokens, or the cache-width
+        bound."""
         run = self.running[slot]
         run.generated.append(token)
         run.pending = token
@@ -105,9 +148,12 @@ class Scheduler:
 
     def _maybe_finish(self, run: SlotRun, step: int) -> None:
         r = run.request
-        if (len(run.generated) >= r.max_new_tokens
-                or (r.eos_id is not None and run.generated[-1] == r.eos_id)
+        if r.is_stop(run.generated[-1]):
+            run.finish_reason = FINISH_STOP
+        elif (len(run.generated) >= r.max_new_tokens
                 or run.length >= self.max_length):
+            run.finish_reason = FINISH_LENGTH
+        if run.finish_reason is not None:
             run.finished_step = step
 
     def evict(self, slot: int) -> SlotRun:

@@ -22,7 +22,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core import default_policy
 from repro.models import init_cache, init_params, init_routers, prepare_model_config
-from repro.serving import Engine, PagedKVPool, Request
+from repro.serving import Engine, PagedKVPool, Request, SamplingParams
 
 KEY = jax.random.PRNGKey(0)
 
@@ -180,6 +180,31 @@ def test_out_of_pages_preempts_and_recovers():
     assert rep.preemptions > 0
     assert rep.tokens == ref
     assert eng.decode_jit_traces() == 1
+
+
+def test_abort_releases_pages_for_waiting_traffic():
+    """Aborting a page-hungry request mid-decode must free its pages
+    immediately so a blocked head-of-line request can admit — and after
+    everything drains the pool bookkeeping is back to empty."""
+    eng, cfg = _engine("dense", page_w=8, num_pages=5)   # 5 pages of 8
+    core = eng.make_core(max_batch=2)
+    # rid 0 holds 3 of 5 pages; rid 1 (3 pages) cannot co-reside
+    core.add_request(0, list(range(1, 21)), SamplingParams(max_tokens=20))
+    core.step()
+    assert core.pool.pages_in_use == 3
+    core.add_request(1, list(range(1, 21)), SamplingParams(max_tokens=3))
+    core.step()
+    assert core.sched.find_running(1) is None            # blocked on pages
+    core.abort(0)
+    assert core.pool.pages_in_use == 0                   # freed immediately
+    outs = []
+    while not core.done:
+        outs.extend(core.step())
+    reasons = {o.rid: o.finish_reason for o in outs if o.finished}
+    assert reasons == {0: "abort", 1: "length"}
+    assert len(core.report.tokens[1]) == 3
+    assert core.pool.is_quiescent()
+    assert core.decode_jit_traces() == 1
 
 
 def test_admission_blocks_on_pages_not_just_slots():

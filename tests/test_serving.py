@@ -25,7 +25,9 @@ from repro.configs import get_smoke_config
 from repro.core import default_policy
 from repro.models import (init_params, init_routers, init_serve_cache,
                           prepare_model_config)
-from repro.serving import Engine, KVPool, Request, Scheduler, poisson_requests
+from repro.serving import (Engine, InvalidRequestError, KVPool, Request,
+                           SamplingParams, Scheduler, poisson_requests,
+                           sampling)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -158,6 +160,30 @@ def test_serve_max_steps_cutoff():
     assert rep.tokens == {}               # rid 0 unfinished at cutoff
 
 
+def test_serve_honors_request_budget_when_sampling_attached():
+    """Request.max_new_tokens / stop_token_ids stay authoritative when a
+    Request also carries SamplingParams (regression: the wrapper used the
+    params' default max_tokens=16 and dropped the request's stop set)."""
+    eng, cfg = _opt_engine("dense")
+    req = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=5,
+                  stop_token_ids=(100000,),   # out of vocab: never fires
+                  sampling=SamplingParams(temperature=0.7, seed=1))
+    rep = eng.serve([req], max_batch=1)
+    assert len(rep.tokens[0]) == 5
+
+
+def test_serve_refuses_legacy_engine_level_sampler():
+    """serve() decodes via per-request SamplingParams; a custom
+    Engine(sampler=...) would be silently ignored, so it must raise with a
+    migration hint instead (the fixed-batch generate() path still honors
+    it)."""
+    eng, cfg = _opt_engine("dense")
+    eng.sampler = lambda logits, key: sampling.greedy(logits)
+    with pytest.raises(ValueError, match="SamplingParams"):
+        eng.serve([Request(rid=0, prompt=[1, 2], max_new_tokens=2)],
+                  max_batch=1)
+
+
 def test_serve_rejects_oversized_prompt_without_crashing():
     eng, cfg = _opt_engine("dense", cache_width=16)
     good = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=3)
@@ -238,6 +264,92 @@ def test_serve_cache_shapes_are_traffic_invariant():
     assert shape0 == shape1
     assert pool.lengths().tolist() == [0, 0]
     assert pool.active().tolist() == [False, False]
+
+
+# ------------------------------------------------------ request validity ---
+def test_request_validation_raises_typed_errors():
+    """Bad requests raise InvalidRequestError (a ValueError subclass the
+    engine can catch and surface as finish_reason='reject'), not bare
+    AssertionError."""
+    with pytest.raises(InvalidRequestError, match="empty prompt"):
+        Request(rid=0, prompt=[])
+    with pytest.raises(InvalidRequestError, match="max_new_tokens"):
+        Request(rid=0, prompt=[1], max_new_tokens=0)
+    with pytest.raises(InvalidRequestError, match="negative token"):
+        Request(rid=0, prompt=[1, -2])
+    with pytest.raises(InvalidRequestError, match="token ids"):
+        Request(rid=0, prompt=["not-a-token"])
+    with pytest.raises(InvalidRequestError, match="top_p"):
+        SamplingParams(top_p=0.0).validate()
+    with pytest.raises(InvalidRequestError, match="temperature"):
+        SamplingParams(temperature=float("nan")).validate()
+    assert isinstance(InvalidRequestError("x"), ValueError)
+    # a valid request with sampling attached validates both layers
+    Request(rid=1, prompt=[1, 2], sampling=SamplingParams(max_tokens=4))
+
+
+def test_scheduler_stop_token_ids_and_finish_reason():
+    s = Scheduler(max_batch=1, max_length=100)
+    run = s.bind(0, Request(rid=0, prompt=[1], max_new_tokens=99,
+                            stop_token_ids=(7, 9)), 0, 5)
+    assert not run.done
+    run = s.record(0, 9, 1)
+    assert run.done and run.finish_reason == "stop"
+    s.evict(0)
+    run = s.bind(0, Request(rid=1, prompt=[1], max_new_tokens=2), 2, 5)
+    run = s.record(0, 6, 3)
+    assert run.done and run.finish_reason == "length"
+
+
+# ------------------------------------------------------------- samplers ---
+def test_temperature_sampler_zero_temp_is_greedy():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 17)),
+                         jnp.float32)
+    got = sampling.temperature(logits, jax.random.PRNGKey(0), temp=0.0)
+    assert (np.asarray(got) == np.argmax(np.asarray(logits), -1)).all()
+
+
+def test_temperature_sampler_top_k_restricts_support():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+    top2 = np.argsort(-np.asarray(logits), -1)[:, :2]
+    for i in range(20):
+        got = np.asarray(sampling.temperature(
+            logits, jax.random.PRNGKey(i), temp=1.5, top_k=2))
+        for b in range(2):
+            assert got[b] in top2[b], (b, got[b], top2[b])
+
+
+def test_batched_sample_per_row_semantics():
+    """The jit-resident per-slot sampler: temp=0 rows are argmax, top_k=1
+    and top_p->0 rows collapse to argmax at any temperature, and draws are
+    keyed by (seed, pos) only — row placement does not matter."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(4, 64)) * 3, jnp.float32)
+    amax = np.argmax(np.asarray(logits), -1)
+    got = np.asarray(sampling.sample(
+        logits,
+        temp=jnp.asarray([0.0, 1.0, 2.0, 1.3], jnp.float32),
+        top_k=jnp.asarray([0, 1, 0, 5], jnp.int32),
+        top_p=jnp.asarray([1.0, 1.0, 1e-6, 1.0], jnp.float32),
+        seed=jnp.asarray([4, 5, 6, 7], jnp.uint32),
+        pos=jnp.asarray([0, 1, 2, 3], jnp.int32)))
+    assert got[0] == amax[0]          # temp 0 -> greedy
+    assert got[1] == amax[1]          # top_k 1 -> greedy at any temp
+    assert got[2] == amax[2]          # top_p -> 0 -> greedy at any temp
+    top5 = set(np.argsort(-np.asarray(logits[3]))[:5].tolist())
+    assert int(got[3]) in top5        # top_k 5 restricts the support
+
+    # (seed, pos) keying: move the sampled row to a different slot in a
+    # different batch — identical draw
+    moved = np.asarray(sampling.sample(
+        jnp.asarray(np.stack([np.asarray(logits[2]), np.asarray(logits[3])])),
+        temp=jnp.asarray([1.7, 1.3], jnp.float32),
+        top_k=jnp.asarray([0, 5], jnp.int32),
+        top_p=jnp.asarray([1.0, 1.0], jnp.float32),
+        seed=jnp.asarray([9, 7], jnp.uint32),
+        pos=jnp.asarray([0, 3], jnp.int32)))
+    assert moved[1] == got[3]
 
 
 # ----------------------------------------------------- poisson generator ---
