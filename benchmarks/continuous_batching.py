@@ -8,14 +8,24 @@ occupancy, pages-scanned-per-step (vs the full-width dense-equivalent
 scan), preemptions, and pool HBM bytes vs the contiguous
 ``max_batch x width`` reservation.
 
+Tail latency is a first-class metric: every row carries per-request
+TTFT / inter-token-latency (ITL) p50/p99 read off the engine's wall-clock
+token stamps.  ``--workload adversary`` replays the head-of-line trace —
+a steady stream of short decoders with very long prompts landing
+mid-stream — once with whole-prompt prefill and once with chunked prefill
+(``--prefill-chunk`` / ``--max-step-tokens``), writing both rows to the
+same JSON artifact so the ITL-p99 spike shrinking under chunking is a
+machine-checkable regression signal.
+
 Traffic goes through the ``LLM`` frontend (``EngineCore.step()``
-underneath): the Poisson trace is replayed via ``LLM.generate(...,
+underneath): the trace is replayed via ``LLM.generate(...,
 arrivals=...)`` and metrics are read off ``llm.report``.
 
 Runs end-to-end on CPU (the SHA Pallas kernel path stays available via
 --impl kernel, interpret mode).  Emits `name,config,value` rows for
-benchmarks.run and one JSON row per policy to results/continuous_batching
-.json (and stdout) for machine consumption.
+benchmarks.run and one JSON row per policy (x chunking variant under the
+adversary workload) to results/continuous_batching.json (and stdout) for
+machine consumption.
 """
 from __future__ import annotations
 
@@ -29,10 +39,43 @@ import numpy as np
 
 from benchmarks.common import get_toy_model
 from repro.models import init_serve_cache
-from repro.serving import (LLM, SamplingParams, make_serving_jits,
+from repro.serving import (LLM, Request, SamplingParams, make_serving_jits,
                            poisson_requests)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def adversary_requests(n: int, *, vocab_size: int, cache_width: int,
+                       seed: int = 0):
+    """The head-of-line latency trace: a steady stream of short prompts
+    decoding long answers, with one very long prompt (~70% of the cache
+    width) landing mid-stream every 6 requests — early enough that the
+    preceding shorts are still mid-decode (and a slot is free), so under
+    whole-prompt prefill the entire prompt runs inside one step and every
+    concurrent decoder's inter-token gap absorbs it; chunked prefill
+    bounds that gap by the chunk."""
+    rng = np.random.default_rng(seed)
+    long_len = int(cache_width * 0.7)
+    reqs = []
+    for i in range(n):
+        if i % 6 == 2:                     # the long-prompt adversary
+            plen, mnew = long_len, 4
+        else:
+            plen = int(rng.integers(4, 9))
+            mnew = int(rng.integers(32, 49))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab_size, size=plen).tolist(),
+            max_new_tokens=mnew, arrival=3 * i))
+    return reqs
+
+
+def _latency_fields(rep):
+    """TTFT / ITL wall-clock percentiles (ms) over all requests' gaps."""
+    ttft = list(rep.ttft_wall_s().values())
+    gaps = [g for gaps in rep.itl_wall_s().values() for g in gaps]
+    pct = lambda xs, q: round(float(np.percentile(xs, q)) * 1e3, 3) if xs else None
+    return {"ttft_ms_p50": pct(ttft, 50), "ttft_ms_p99": pct(ttft, 99),
+            "itl_ms_p50": pct(gaps, 50), "itl_ms_p99": pct(gaps, 99)}
 
 
 def _contiguous_hbm_bytes(cfg, max_batch: int, width: int) -> int:
@@ -44,7 +87,8 @@ def _contiguous_hbm_bytes(cfg, max_batch: int, width: int) -> int:
 
 
 def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
-                impl=None, page_w=None, num_pages=None):
+                impl=None, page_w=None, num_pages=None, prefill_chunk=None,
+                max_step_tokens=None, warmup=None):
     kw = {}
     if pol is not None:
         if impl:
@@ -55,7 +99,9 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
 
     def _llm():
         return LLM(cfg, params, cache_width=cache_width, page_w=page_w,
-                   num_pages=num_pages, max_batch=max_batch, _jits=jits, **kw)
+                   num_pages=num_pages, max_batch=max_batch,
+                   prefill_chunk=prefill_chunk,
+                   max_step_tokens=max_step_tokens, _jits=jits, **kw)
 
     def _run(llm, trace):
         outs = llm.generate([r.prompt for r in trace],
@@ -65,7 +111,11 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
         assert all(o is not None and o.finished for o in outs)
         return llm.report
 
-    _run(_llm(), reqs[:2])                            # jit warmup
+    # jit warmup — the warmup trace must cover every prompt-length bucket
+    # of the measured trace (in particular the adversary's long prompt, in
+    # BOTH the chunked and whole-prompt variants), or compile time pollutes
+    # the measured ITL tail
+    _run(_llm(), warmup if warmup is not None else reqs[:2])
     llm = _llm()
     report = _run(llm, reqs)
     assert llm.decode_jit_traces() <= 1, "continuous batching re-jitted!"
@@ -74,14 +124,34 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
 
 def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         impl: str = "gather", seed: int = 0, page_w: int = 16,
-        page_share: float = 0.5):
+        page_share: float = 0.5, workload: str = "poisson",
+        prefill_chunk=None, max_step_tokens=None):
     if num_requests < 1:
         raise SystemExit("--num-requests must be >= 1")
     cfg, params, routers, pol = get_toy_model()
-    cache_width = 64
-    reqs = poisson_requests(num_requests, rate, vocab_size=cfg.vocab_size,
-                            prompt_len=(4, 16), max_new_tokens=(8, 24),
-                            seed=seed)
+    cache_width = 256 if workload == "adversary" else 64
+    if workload == "adversary":
+        reqs = adversary_requests(num_requests, vocab_size=cfg.vocab_size,
+                                  cache_width=cache_width, seed=seed)
+        # warmup covers the short buckets AND the long-prompt bucket so
+        # neither variant compiles inside the measured run
+        warmup = [dataclasses.replace(reqs[0], arrival=0),
+                  dataclasses.replace(reqs[2], arrival=0)]
+        chunk = prefill_chunk if prefill_chunk is not None else 16
+        budget = (max_step_tokens if max_step_tokens is not None
+                  else chunk + max_batch)
+        # dense only: the HOL spike is a scheduling property, not a policy
+        # one, and the CI smoke stays fast
+        variants = [("dense", None, "whole_prompt", None, None),
+                    ("dense", None, "chunked", chunk, budget)]
+    else:
+        reqs = poisson_requests(num_requests, rate, vocab_size=cfg.vocab_size,
+                                prompt_len=(4, 16), max_new_tokens=(8, 24),
+                                seed=seed)
+        warmup = None
+        variant = ("chunked" if prefill_chunk is not None else "whole_prompt")
+        variants = [("dense", None, variant, prefill_chunk, max_step_tokens),
+                    ("polar", pol, variant, prefill_chunk, max_step_tokens)]
     # paged pool: provision page_share of the contiguous full reservation —
     # the memory-scales-with-tokens-in-flight demonstration (preemptions,
     # if the trace ever exceeds it, are recorded, not fatal)
@@ -93,19 +163,27 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         num_pages = max(pages_per_slot, int(full * page_share))
     contig_hbm = _contiguous_hbm_bytes(cfg, max_batch, cache_width)
     rows, json_rows = [], []
-    for name, policy in [("dense", None), ("polar", pol)]:
+    for name, policy, variant, chunk, budget in variants:
         rep = _serve_once(cfg, params, routers, policy, reqs,
                           max_batch=max_batch, cache_width=cache_width,
                           impl=impl if name == "polar" else None,
                           page_w=page_w if paged else None,
-                          num_pages=num_pages)
+                          num_pages=num_pages, prefill_chunk=chunk,
+                          max_step_tokens=budget, warmup=warmup)
         assert len(rep.tokens) == num_requests
         row = {
             "benchmark": "continuous_batching",
+            "workload": workload,
             "policy": name,
             "impl": impl if name == "polar" else "dense",
+            "variant": variant,
+            "prefill_chunk": chunk,
+            "max_step_tokens": budget,
+            "chunks_run": rep.chunks_run,
+            "prefill_tokens": rep.prefill_tokens,
+            **_latency_fields(rep),
             "num_requests": num_requests,
-            "poisson_rate": rate,
+            "poisson_rate": rate if workload == "poisson" else None,
             "max_batch": max_batch,
             "decode_steps": rep.steps,
             "tokens_decoded": rep.tokens_decoded,
@@ -130,18 +208,30 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
             "contiguous_pool_hbm_bytes": contig_hbm,
         }
         json_rows.append(row)
-        rows.append(("cb_decode_tok_per_s", f"{name}_mb{max_batch}",
-                     row["decode_tok_per_s"]))
-        rows.append(("cb_mean_queue_steps", f"{name}_mb{max_batch}",
-                     row["mean_queue_steps"]))
+        label = f"{name}_{variant}_mb{max_batch}"
+        rows.append(("cb_decode_tok_per_s", label, row["decode_tok_per_s"]))
+        rows.append(("cb_mean_queue_steps", label, row["mean_queue_steps"]))
+        if row["itl_ms_p99"] is not None:
+            rows.append(("cb_itl_ms_p99", label, row["itl_ms_p99"]))
+            rows.append(("cb_ttft_ms_p99", label, row["ttft_ms_p99"]))
         if row["page_scan_ratio"] is not None:
-            rows.append(("cb_page_scan_ratio", f"{name}_mb{max_batch}",
+            rows.append(("cb_page_scan_ratio", label,
                          row["page_scan_ratio"]))
-            rows.append(("cb_pool_hbm_vs_contiguous", f"{name}_mb{max_batch}",
+            rows.append(("cb_pool_hbm_vs_contiguous", label,
                          round(row["pool_hbm_bytes"] / contig_hbm, 3)))
-    tps = {r["policy"]: r["decode_tok_per_s"] for r in json_rows}
-    rows.append(("cb_polar_vs_dense_speedup", f"mb{max_batch}",
-                 round(tps["polar"] / tps["dense"], 3)))
+    if workload == "poisson":
+        tps = {r["policy"]: r["decode_tok_per_s"] for r in json_rows}
+        rows.append(("cb_polar_vs_dense_speedup", f"mb{max_batch}",
+                     round(tps["polar"] / tps["dense"], 3)))
+    else:
+        # the adversary acceptance signal: chunking must shrink the
+        # head-of-line ITL spike, strictly
+        itl = {r["variant"]: r["itl_ms_p99"] for r in json_rows}
+        assert itl["chunked"] < itl["whole_prompt"], (
+            f"chunked ITL p99 {itl['chunked']}ms did not beat whole-prompt "
+            f"{itl['whole_prompt']}ms")
+        rows.append(("cb_adversary_itl_p99_shrink", f"mb{max_batch}",
+                     round(itl["whole_prompt"] / itl["chunked"], 3)))
 
     os.makedirs(RESULTS, exist_ok=True)
     out_path = os.path.join(RESULTS, "continuous_batching.json")
@@ -167,10 +257,23 @@ def main():
     ap.add_argument("--page-share", type=float, default=0.5,
                     help="physical pages as a fraction of the contiguous "
                          "max_batch x width reservation")
+    ap.add_argument("--workload", default="poisson",
+                    choices=["poisson", "adversary"],
+                    help="poisson: mixed-length async trace; adversary: "
+                         "short decoders + mid-stream long prompts, run "
+                         "whole-prompt AND chunked into one artifact")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per chunked-prefill step "
+                         "(adversary default: 16)")
+    ap.add_argument("--max-step-tokens", type=int, default=None,
+                    help="per-step token budget, decode-first "
+                         "(adversary default: prefill_chunk + max_batch)")
     args = ap.parse_args()
     for name, config, value in run(args.num_requests, args.rate,
                                    args.max_batch, args.impl, args.seed,
-                                   args.page_w, args.page_share):
+                                   args.page_w, args.page_share,
+                                   args.workload, args.prefill_chunk,
+                                   args.max_step_tokens):
         print(f"{name},{config},{value}")
 
 

@@ -1,8 +1,10 @@
 """Pure-JAX model substrate."""
-from repro.models.model import (decode_step, first_attn_layer_id, forward,
-                                init_cache, init_params, init_routers,
-                                init_serve_cache, prepare_model_config)
+from repro.models.model import (chunked_prefill_unsupported, decode_step,
+                                first_attn_layer_id, forward, init_cache,
+                                init_params, init_routers, init_serve_cache,
+                                prefill_chunk, prepare_model_config)
 
-__all__ = ["forward", "decode_step", "init_params", "init_routers",
-           "init_cache", "init_serve_cache", "prepare_model_config",
-           "first_attn_layer_id"]
+__all__ = ["forward", "decode_step", "prefill_chunk", "init_params",
+           "init_routers", "init_cache", "init_serve_cache",
+           "prepare_model_config", "first_attn_layer_id",
+           "chunked_prefill_unsupported"]

@@ -286,6 +286,146 @@ def attn_full(p, x, cfg, *, cos, sin, cache=None, head_select=None,
     return linear(out, p["wo"]), new_cache, head_norms
 
 
+# ------------------------------------------------------ chunked prefill ---
+def _chunk_write_positions(offset, C, n_valid):
+    """Global write positions for one prefill chunk plus a validity mask:
+    rows >= n_valid are shape padding and must not write (their K/V would
+    land beyond the prompt, possibly past the logical width)."""
+    pos = offset + jnp.arange(C)
+    return pos, jnp.arange(C) < n_valid
+
+
+def _chunk_scores_mask(offset, C, kw, window):
+    """(C, kw) causal mask at global query rows [offset, offset+C)."""
+    return _causal_mask(kw, window, row0=offset, rows=C)
+
+
+def attn_chunk(p, x, cfg, *, cos, sin, cache, slot, offset, n_valid, kw,
+               page_row=None) -> Tuple[jnp.ndarray, dict]:
+    """One prefill chunk appended into an existing serve cache at a nonzero
+    offset — the substrate for chunked prefill interleaved with decode.
+
+    x (1, C, d) holds chunk tokens at global positions [offset, offset+C);
+    rows >= ``n_valid`` are padding (their writes are dropped, their outputs
+    garbage the caller ignores).  The chunk's K/V is scattered into
+    ``slot``'s cache — contiguous (max_batch, Hkv, W, dh) layout, or the
+    physical page pool (P+1, Hkv, page_w, dh) routed through ``page_row``
+    (the slot's page-table row; unallocated logical pages hold the sink id,
+    so stray writes land in the sink) — and the chunk then attends over the
+    first ``kw`` cache positions (static key-extent bucket >= offset +
+    n_valid; one jit trace per bucket keeps recompiles bounded) under the
+    global causal mask.  Quantized KV is unsupported: the whole-prompt path
+    attends full-precision K/V, so a chunked prefix read back as int8 codes
+    would break parity (the engine gates on this).
+    """
+    B, C, d = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qpg = H // Hkv
+    paged = page_row is not None
+
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, C, H, dh)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, C, Hkv, dh)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, C, Hkv, dh)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    pos, ok = _chunk_write_positions(offset, C, n_valid)
+    k0 = k[0].astype(cache["k"].dtype)            # (C, Hkv, dh)
+    v0 = v[0].astype(cache["v"].dtype)
+    if paged:
+        page_w = cache["k"].shape[2]
+        sink = cache["k"].shape[0] - 1
+        lpage = jnp.clip(pos // page_w, 0, page_row.shape[0] - 1)
+        phys = jnp.where(ok, page_row[lpage], sink)
+        within = jnp.mod(pos, page_w)
+        new_cache = {"k": cache["k"].at[phys, :, within].set(k0),
+                     "v": cache["v"].at[phys, :, within].set(v0)}
+        kp = kw // page_w                          # kw is a page multiple
+        kc = jnp.moveaxis(new_cache["k"][page_row[:kp]], 1, 0)
+        kc = kc.reshape(1, Hkv, kw, dh)
+        vc = jnp.moveaxis(new_cache["v"][page_row[:kp]], 1, 0)
+        vc = vc.reshape(1, Hkv, kw, dh)
+    else:
+        W = cache["k"].shape[2]
+        wpos = jnp.where(ok, pos, W)               # W = out of bounds: drop
+        new_cache = {"k": cache["k"].at[slot, :, wpos].set(k0, mode="drop"),
+                     "v": cache["v"].at[slot, :, wpos].set(v0, mode="drop")}
+        kc = jax.lax.dynamic_slice(new_cache["k"], (slot, 0, 0, 0),
+                                   (1, Hkv, kw, dh))
+        vc = jax.lax.dynamic_slice(new_cache["v"], (slot, 0, 0, 0),
+                                   (1, Hkv, kw, dh))
+
+    qg = q.reshape(B, C, Hkv, qpg, dh)
+    s = jnp.einsum("bsgqd,bgtd->bgqst", qg, kc).astype(jnp.float32) / (dh ** 0.5)
+    s = _softcap(s, cfg.logit_soft_cap)
+    mask = _chunk_scores_mask(offset, C, kw, cfg.sliding_window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgqst,bgtd->bsgqd", pr, vc)
+    return linear(out.reshape(B, C, H * dh), p["wo"]), new_cache
+
+
+def mla_chunk(p, x, cfg, *, cos, sin, cache, slot, offset, n_valid, kw,
+              page_row=None) -> Tuple[jnp.ndarray, dict]:
+    """MLA prefill chunk appended into an existing latent serve cache (see
+    :func:`attn_chunk`).  The prefix's k_nope/v are re-expanded from the
+    cached ``ckv`` latents each chunk — the same expansion ``mla_full`` runs
+    over the whole prompt, so chunked and whole-prompt prefill agree."""
+    m = cfg.mla
+    B, C, d = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+    paged = page_row is not None
+
+    q = linear(_rms(p["q_norm"], linear(x, p["wq_a"])), p["wq_b"])
+    q = q.reshape(B, C, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = linear(x, p["wkv_a"])
+    ckv = _rms(p["kv_norm"], kv_a[..., :r])                       # (B, C, r)
+    k_rope = kv_a[..., r:]                                        # (B, C, rope_d)
+    if cos is not None:
+        q_rope = apply_rope(q_rope, cos, sin)
+        k_rope = apply_rope(k_rope, cos, sin, head_axis=False)
+
+    pos, ok = _chunk_write_positions(offset, C, n_valid)
+    ckv0 = ckv[0].astype(cache["ckv"].dtype)
+    krope0 = k_rope[0].astype(cache["krope"].dtype)
+    if paged:
+        page_w = cache["ckv"].shape[1]
+        sink = cache["ckv"].shape[0] - 1
+        lpage = jnp.clip(pos // page_w, 0, page_row.shape[0] - 1)
+        phys = jnp.where(ok, page_row[lpage], sink)
+        within = jnp.mod(pos, page_w)
+        new_cache = {"ckv": cache["ckv"].at[phys, within].set(ckv0),
+                     "krope": cache["krope"].at[phys, within].set(krope0)}
+        kp = kw // page_w
+        ckv_c = new_cache["ckv"][page_row[:kp]].reshape(1, kw, r)
+        krope_c = new_cache["krope"][page_row[:kp]].reshape(1, kw, rope_d)
+    else:
+        W = cache["ckv"].shape[1]
+        wpos = jnp.where(ok, pos, W)
+        new_cache = {
+            "ckv": cache["ckv"].at[slot, wpos].set(ckv0, mode="drop"),
+            "krope": cache["krope"].at[slot, wpos].set(krope0, mode="drop")}
+        ckv_c = jax.lax.dynamic_slice(new_cache["ckv"], (slot, 0, 0),
+                                      (1, kw, r))
+        krope_c = jax.lax.dynamic_slice(new_cache["krope"], (slot, 0, 0),
+                                        (1, kw, rope_d))
+
+    kv = linear(ckv_c.astype(x.dtype), p["wkv_b"]).reshape(1, kw, H, nope + vd)
+    k_nope, v_c = kv[..., :nope], kv[..., nope:]
+    s = (jnp.einsum("bshd,bthd->bsht", q_nope, k_nope)
+         + jnp.einsum("bshd,btd->bsht", q_rope, krope_c.astype(q_rope.dtype)))
+    s = s.astype(jnp.float32) / ((nope + rope_d) ** 0.5)
+    mask = _chunk_scores_mask(offset, C, kw, cfg.sliding_window)
+    s = jnp.where(mask[None, :, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, -1).astype(x.dtype)
+    out = jnp.einsum("bsht,bthd->bshd", pr, v_c)
+    return linear(out.reshape(B, C, H * vd), p["wo"]), new_cache
+
+
 def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
                 head_select=None, sha_kernel: bool = False,
                 page_table=None) -> Tuple[jnp.ndarray, dict]:

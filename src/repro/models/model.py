@@ -359,6 +359,33 @@ def _layer_full(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
     return x, new_c, aux
 
 
+def _layer_chunk(lp, spec, x, *, cfg, cos, sin, cache, slot, offset, n_valid,
+                 kw, page_row):
+    """One layer over a prefill chunk.  Serving prefill is dense (no policy
+    or routers — same as the whole-prompt serving prefill), so the only
+    difference from _layer_full is the cache: K/V appends into the slot's
+    pool cache at ``offset`` instead of a fresh per-request buffer."""
+    h = apply_norm(lp["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        out, new_c = attn.attn_chunk(lp["mixer"], h, cfg, cos=cos, sin=sin,
+                                     cache=cache, slot=slot, offset=offset,
+                                     n_valid=n_valid, kw=kw, page_row=page_row)
+    elif spec.mixer == "mla":
+        out, new_c = attn.mla_chunk(lp["mixer"], h, cfg, cos=cos, sin=sin,
+                                    cache=cache, slot=slot, offset=offset,
+                                    n_valid=n_valid, kw=kw, page_row=page_row)
+    else:  # recurrent mixers are rejected by chunked_prefill_unsupported
+        raise NotImplementedError(f"chunked prefill over {spec.mixer!r}")
+    x = x + out
+    h2 = apply_norm(lp["norm2"], x, cfg.norm)
+    if spec.ffn == "moe":
+        out2, _ = moe_apply(lp["ffn"], h2, cfg)
+    else:
+        ffcfg = cfg if not cfg.dense_ff else cfg.replace(d_ff=cfg.dense_ff)
+        out2, _ = mlp_apply(lp["ffn"], h2, ffcfg)
+    return x + out2, new_c
+
+
 def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
                   slot_pos, pos, k_blocks, force_dense, active=None,
                   page_table=None):
@@ -437,7 +464,7 @@ def _segment_mlp_k(cfg, policy, seg_idx):
 
 def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
                   slot_pos, pos, collect, remat=False, active=None,
-                  page_table=None):
+                  page_table=None, chunk=None):
     """Apply all segments via lax.scan.  Returns (x, new_layer_caches, aux)."""
     force_dense = _segment_force_dense(cfg, policy)
     new_caches: Dict[str, Any] = {}
@@ -467,6 +494,9 @@ def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
                                             slot_pos=slot_pos, pos=pos, k_blocks=kb,
                                             force_dense=fd, active=active,
                                             page_table=page_table)
+                elif mode == "chunk":
+                    x_c, nc = _layer_chunk(lp, spec, x_c, cfg=cfg, cos=cos,
+                                           sin=sin, cache=lc, **chunk)
                 else:
                     x_c, nc, aux = _layer_full(lp, spec, x_c, cfg=cfg, policy=policy,
                                                router_p=rp, cos=cos, sin=sin, cache=lc,
@@ -643,4 +673,69 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             "slot_pos": slot_pos.at[jnp.mod(pos, W)].set(pos),
             "pos": pos + 1,
         }
+    return logits, new_cache
+
+
+def chunked_prefill_unsupported(cfg: ModelConfig) -> Optional[str]:
+    """Why chunked prefill cannot run for this config (None = supported).
+
+    Recurrent mixers carry a running state, not a positional cache — a
+    chunk cannot resume mid-prompt from the serve pool.  Quantized KV would
+    make later chunks attend int8 prefix codes where whole-prompt prefill
+    attends full-precision K/V (a parity break, not just noise).  MoE with
+    capacity-based routing drops tokens as a function of sequence length,
+    so per-chunk routing would drop different tokens than the whole-prompt
+    pass (dense combine is length-invariant and stays supported)."""
+    for spec in cfg.layer_specs:
+        if spec.mixer not in ("attn", "mla"):
+            return (f"recurrent mixer {spec.mixer!r} has no positional "
+                    "cache to resume mid-prompt")
+        if spec.ffn == "moe" and cfg.moe.impl != "dense":
+            return ("MoE capacity routing is sequence-length dependent; "
+                    "chunked routing would diverge from whole-prompt")
+    if cfg.kv_quant:
+        return "kv_quant: chunks would attend a quantized prefix"
+    return None
+
+
+def prefill_chunk(params, cfg: ModelConfig, *, tokens, cache, slot, offset,
+                  n_valid, kw: int):
+    """One chunk of prefill appended into a serve cache (init_serve_cache).
+
+    ``tokens`` (1, C) sit at global positions [offset, offset + C) of pool
+    slot ``slot``; rows >= ``n_valid`` are shape padding (their K/V writes
+    are dropped — paged caches route them to the sink page).  The chunk's
+    K/V lands in the slot's contiguous row or its physical pages at the
+    right offset, then the chunk attends over the first ``kw`` cache
+    positions.  ``kw`` is a *static* key-extent bucket >= offset + n_valid
+    (the engine rounds up to a page-aligned power of two), so the number of
+    jit traces stays O(log width) regardless of prompt mix.  Serving
+    prefill is dense — no policy/routers — matching the whole-prompt
+    serving prefill path, so chunked and whole-prompt serving agree
+    token-for-token.
+
+    Returns (logits (1, C, V), new_cache).  ``lengths``/``active`` are not
+    advanced here; the engine activates the slot once the prompt completes.
+    """
+    B, C = tokens.shape
+    positions = offset + jnp.arange(C)
+    pos_ids = None
+    if cfg.pos_emb == "mrope":
+        pos_ids = jnp.broadcast_to(positions[None, None], (3, B, C))
+    cos, sin = _trig(cfg, positions, pos_ids)
+    x = _embed(params, cfg, tokens, None, positions)
+
+    page_table = cache.get("page_table")
+    page_row = None if page_table is None else page_table[slot]
+    x, new_caches, _, _ = _run_segments(
+        params, cfg, x, mode="chunk", policy=None, routers=None,
+        cache=cache, cos=cos, sin=sin, slot_pos=None, pos=None, collect=False,
+        chunk=dict(slot=slot, offset=offset, n_valid=n_valid, kw=kw,
+                   page_row=page_row))
+
+    logits = _lm_head(params, cfg, x)
+    new_cache = {"layers": new_caches, "lengths": cache["lengths"],
+                 "active": cache["active"]}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return logits, new_cache

@@ -3,7 +3,7 @@
 Frontends
 ---------
 ``LLM(cfg, params, *, routers, policy, max_batch, cache_width, page_w,
-num_pages)`` (llm.py)
+num_pages, prefill_chunk, max_step_tokens)`` (llm.py)
     ``generate(prompts, params)``   blocking; one final ``RequestOutput``
                                     per prompt, in order.
     ``stream(prompts, params)``     iterator of incremental
@@ -28,6 +28,19 @@ Core
         (temperature / top-k / top-p / seed) runs *inside* the single
         jitted decode step via per-slot parameter arrays, so mixed
         sampling configs keep ``decode_jit_traces() == 1``.
+    ``prefill_chunk=C``  chunked prefill: the FCFS head request's prompt
+        is fed ``C`` tokens per ``step()`` (a ``SlotRun`` in the
+        ``prefill`` phase carries the cursor) while the same step keeps
+        dispatching the batched decode — long prompts no longer freeze
+        the batch for one giant step.  Chunk attention extents are
+        bucketed (``prefill_jit_traces()`` stays O(log cache_width)).
+    ``max_step_tokens=B``  per-step token budget, decode-first: decode
+        always dispatches; the chunk gets ``min(C, B - n_decoding)``
+        tokens, bounding per-step latency (ITL) by the budget.  Requires
+        ``prefill_chunk``.
+    TTFT/ITL series live on the report: ``first_token_step``,
+    ``token_steps`` / ``token_walls``, ``ttft_steps()`` /
+    ``ttft_wall_s()`` / ``itl_wall_s()``.
 
 Data types
 ----------

@@ -44,19 +44,28 @@ import numpy as np
 from repro.core.policy import PolarPolicy
 from repro.models import (decode_step, forward, init_cache,
                           prepare_model_config)
+from repro.models.model import chunked_prefill_unsupported, prefill_chunk
 from repro.serving import sampling
 from repro.serving.kv_pool import KVPool, PagedKVPool
 from repro.serving.params import (FINISH_ABORT, FINISH_REJECT, FINISH_STOP,
                                   InvalidRequestError, RequestOutput,
                                   SamplingParams)
-from repro.serving.scheduler import Request, Scheduler, SlotRun
+from repro.serving.scheduler import (PHASE_DECODE, PHASE_PREFILL, Request,
+                                     Scheduler, SlotRun)
+
+# the prefill-completion (first-token) sampler, jitted once per process:
+# running it eagerly costs hundreds of ms per admission on CPU, which
+# swamps every wall-clock latency metric the report carries
+_SAMPLE_ONE = jax.jit(sampling.sample)
 
 
 @dataclass
 class EngineStats:
-    prefill_s: float = 0.0
+    prefill_s: float = 0.0           # accounted per chunk, not per prompt
     decode_s: float = 0.0
     tokens_decoded: int = 0
+    prefill_chunks: int = 0          # chunk-prefill dispatches executed
+    prefill_tokens: int = 0          # prompt tokens pushed through prefill
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -87,6 +96,18 @@ class ServeReport:
     page_w: Optional[int] = None          # None = contiguous pool
     num_pages: Optional[int] = None
     pool_hbm_bytes: int = 0               # KV-cache bytes actually reserved
+    # ------------------------------------------ latency / chunk accounting -
+    # rid -> step clock at which the first token was sampled.  A rid is
+    # *absent* (never 0) until its prefill completes — rejected requests and
+    # requests aborted mid-prefill stay absent for good.
+    first_token_step: Dict[int, int] = field(default_factory=dict)
+    arrival_wall: Dict[int, float] = field(default_factory=dict)
+    token_steps: Dict[int, List[int]] = field(default_factory=dict)
+    token_walls: Dict[int, List[float]] = field(default_factory=dict)
+    prefill_chunk: Optional[int] = None   # None = whole-prompt prefill
+    max_step_tokens: Optional[int] = None
+    chunks_run: int = 0
+    prefill_tokens: int = 0
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -99,6 +120,28 @@ class ServeReport:
         waits = [step - self.arrival[r] for r, step in self.admitted_step.items()]
         return float(np.mean(waits)) if waits else 0.0
 
+    def ttft_steps(self) -> Dict[int, int]:
+        """Time-to-first-token in engine steps (first_token_step - arrival),
+        over requests whose prefill completed."""
+        return {r: s - self.arrival[r]
+                for r, s in self.first_token_step.items() if r in self.arrival}
+
+    def ttft_wall_s(self) -> Dict[int, float]:
+        """Wall-clock TTFT: first token *emission* minus arrival visibility.
+        Arrival walls are stamped when a request becomes schedulable, so in
+        trace replays this measures engine-induced delay, not the trace."""
+        return {r: walls[0] - self.arrival_wall[r]
+                for r, walls in self.token_walls.items()
+                if walls and r in self.arrival_wall}
+
+    def itl_wall_s(self) -> Dict[int, List[float]]:
+        """Per-request inter-token gaps (wall seconds).  This — not the step
+        clock — is where a head-of-line whole-prompt prefill shows up: the
+        prefill runs *inside* one step, stretching one gap for every
+        concurrently decoding request."""
+        return {r: [b - a for a, b in zip(walls, walls[1:])]
+                for r, walls in self.token_walls.items() if len(walls) > 1}
+
     @property
     def pages_scanned_per_step(self) -> float:
         return self.pages_scanned / self.decode_steps_run if self.decode_steps_run else 0.0
@@ -109,13 +152,20 @@ class ServeReport:
 
 
 def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
-    """(prefill_jit, decode_jit) for one prepared config + policy.
+    """(prefill_jit, decode_jit, chunk_jit) for one prepared config + policy.
 
     The decode jit fuses the model step with the per-slot sampler: it takes
     the sampling-parameter arrays alongside the cache's ``lengths`` /
     ``active`` / ``page_table`` leaves and returns sampled tokens directly,
     so heterogeneous per-request sampling configs are data, not code — one
     trace covers them all.
+
+    The chunk jit is the chunked-prefill entry point: it resumes a
+    partially filled serve cache, appending one (1, prefill_chunk) token
+    chunk for one slot at a traced offset and attending over a *static*
+    key-extent bucket ``kw`` (static_argnums) — the engine rounds
+    offset + n up to a page-aligned power of two, so the number of chunk
+    traces is O(log cache_width) regardless of the prompt-length mix.
     """
     def _prefill(params, tokens, embeds, cache):
         return forward(params, cfg, tokens=tokens, embeds=embeds, cache=cache)
@@ -126,7 +176,12 @@ def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
         toks = sampling.sample(logits, **samp)
         return toks, cache
 
-    return jax.jit(_prefill), jax.jit(_decode)
+    def _chunk(params, tokens, cache, slot, offset, n_valid, kw):
+        return prefill_chunk(params, cfg, tokens=tokens, cache=cache,
+                             slot=slot, offset=offset, n_valid=n_valid, kw=kw)
+
+    return (jax.jit(_prefill), jax.jit(_decode),
+            jax.jit(_chunk, static_argnums=(6,)))
 
 
 class EngineCore:
@@ -137,6 +192,18 @@ class EngineCore:
     preempted (``decode_jit_traces() == 1``).  The step clock advances by
     one per batched decode and fast-forwards across idle gaps in simulated
     arrival traces.
+
+    With ``prefill_chunk`` set, prefill is *chunked*: the FCFS head request
+    still admits alone, but each ``step()`` feeds at most ``prefill_chunk``
+    of its prompt tokens straight into the pool cache (a ``SlotRun`` in the
+    ``prefill`` phase holds the partial-prefill cursor) while the same step
+    dispatches the batched decode for every decoding slot — so a long
+    prompt no longer freezes the whole batch for one giant step.
+    ``max_step_tokens`` budgets the step *decode-first*: the decode batch
+    always dispatches, and the chunk gets
+    ``min(prefill_chunk, max_step_tokens - n_decoding)`` tokens, which
+    bounds per-step latency (hence ITL) by the budget instead of by the
+    longest prompt in the queue.
     """
 
     def __init__(self, cfg, params, *, routers=None,
@@ -144,6 +211,8 @@ class EngineCore:
                  max_batch: int = 4, cache_width: int = 2048,
                  page_w: Optional[int] = 16,
                  num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 max_step_tokens: Optional[int] = None,
                  stats: Optional[EngineStats] = None,
                  _jits=None):
         self.cfg = cfg
@@ -152,9 +221,26 @@ class EngineCore:
         self.policy = policy
         self.max_batch = int(max_batch)
         self.cache_width = int(cache_width)
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+            why = chunked_prefill_unsupported(cfg)
+            if why is not None:
+                raise ValueError(f"chunked prefill unsupported: {why}")
+        if max_step_tokens is not None:
+            if prefill_chunk is None:
+                raise ValueError(
+                    "max_step_tokens requires prefill_chunk: a whole-prompt "
+                    "prefill cannot be split to honor a token budget")
+            if max_step_tokens < 1:
+                raise ValueError(
+                    f"max_step_tokens must be >= 1, got {max_step_tokens}")
+        self.prefill_chunk = prefill_chunk
+        self.max_step_tokens = max_step_tokens
+        self._prefilling: Optional[int] = None   # slot mid-chunked-prefill
         self.stats = stats if stats is not None else EngineStats()
-        self._prefill, self._decode = (_jits if _jits is not None
-                                       else make_serving_jits(cfg, policy))
+        self._prefill, self._decode, self._chunk = (
+            _jits if _jits is not None else make_serving_jits(cfg, policy))
         if page_w is None:
             self.pool = KVPool(cfg, max_batch, cache_width)
         else:
@@ -169,6 +255,8 @@ class EngineCore:
             self.report.page_w = self.pool.page_w
             self.report.num_pages = self.pool.num_pages
         self.report.pool_hbm_bytes = self.pool.hbm_bytes()
+        self.report.prefill_chunk = prefill_chunk
+        self.report.max_step_tokens = max_step_tokens
         # per-slot sampling parameters, lowered from SamplingParams at
         # admission; devices see them as (max_batch,) leaves next to the
         # pool's lengths/active arrays
@@ -228,6 +316,8 @@ class EngineCore:
         if slot is not None:
             self.sched.drop(slot)
             self.pool.release(slot)
+            if slot == self._prefilling:     # aborted mid-chunked-prefill
+                self._prefilling = None
             hit = True
         if hit:
             self.report.aborted.append(rid)
@@ -259,7 +349,9 @@ class EngineCore:
             return False
         for d in (self._tokens, self._emitted, self.report.tokens,
                   self.report.arrival, self.report.admitted_step,
-                  self.report.finished_step):
+                  self.report.finished_step, self.report.first_token_step,
+                  self.report.arrival_wall, self.report.token_steps,
+                  self.report.token_walls):
             d.pop(rid, None)
         return True
 
@@ -268,13 +360,22 @@ class EngineCore:
         hold this at one while requests join/leave/abort)."""
         return self._decode._cache_size()
 
+    def prefill_jit_traces(self) -> int:
+        """Number of compiled prefill variants across both entry points:
+        whole-prompt power-of-two buckets plus chunked-prefill key-extent
+        buckets.  Both are bucketed, so a mixed short/long prompt workload
+        must keep this O(log cache_width) — the trace-budget guard CI
+        asserts on it."""
+        return self._prefill._cache_size() + self._chunk._cache_size()
+
     # ------------------------------------------------------------- step ---
     def step(self) -> List[RequestOutput]:
         """Advance the engine: deliver pending reject/abort outputs, run at
-        most one prefill admission (strict FCFS head-of-line), then one
-        batched decode dispatch over every occupied slot.  Returns the
-        outputs produced this step (token deltas; finished requests carry
-        their ``finish_reason``)."""
+        most one prefill admission (strict FCFS head-of-line — a whole
+        prompt, or one ``prefill_chunk``-token chunk under the
+        ``max_step_tokens`` budget), then one batched decode dispatch over
+        every decoding slot.  Returns the outputs produced this step (token
+        deltas; finished requests carry their ``finish_reason``)."""
         outs, self._pending = self._pending, []
         sched, pool = self.sched, self.pool
         if not sched.running:
@@ -283,6 +384,11 @@ class EngineCore:
                 return outs
             if nxt > self.clock:
                 self.clock = nxt               # fast-forward the idle gap
+        now = time.perf_counter()
+        for r in sched.waiting:                # stamp arrival visibility
+            if r.arrival > self.clock:
+                break                          # waiting is arrival-sorted
+            self.report.arrival_wall.setdefault(r.rid, now)
 
         # ---- decode-growth page reservation (paged pool only) ------------
         # runs BEFORE admission so a just-admitted request cannot be picked
@@ -294,6 +400,8 @@ class EngineCore:
                 if slot not in sched.running:     # victim of a preemption
                     continue
                 run = sched.running[slot]
+                if run.phase != PHASE_DECODE:     # chunks reserve their own
+                    continue
                 while not pool.reserve(slot, run.length):
                     victim = self._pick_victim(exclude=slot)
                     # num_pages >= pages_per_slot guarantees a lone request
@@ -302,47 +410,75 @@ class EngineCore:
                     self._preempt(victim)
 
         # ---- at most one admission: FCFS head into a free slot -----------
-        req = sched.peek_arrived(self.clock)
-        if req is not None and pool.can_admit(len(req.prompt)):
-            sched.pop_head()
-            slot = pool.claim()
-            tok, layers, L = self._prefill_request(req)
-            pool.insert(layers, slot, L)
-            self._lower_sampling(slot, req.sampling)
-            run = sched.bind(slot, req, self.clock, tok)
-            # first admission only: queueing delay must not absorb the
-            # residency time of a later-preempted request
-            self.report.admitted_step.setdefault(req.rid, self.clock)
-            self.report.slots_served += 1
-            if run.done:                          # e.g. max_tokens == 1
-                outs.append(self._finish(run))
+        if self.prefill_chunk is None:
+            req = sched.peek_arrived(self.clock)
+            if req is not None and pool.can_admit(len(req.prompt)):
+                sched.pop_head()
+                slot = pool.claim()
+                tok, layers, L = self._prefill_request(req)
+                pool.insert(layers, slot, L)
+                self._lower_sampling(slot, req.sampling)
+                run = sched.bind(slot, req, self.clock, tok)
+                # first admission only: queueing delay must not absorb the
+                # residency time of a later-preempted request
+                self.report.admitted_step.setdefault(req.rid, self.clock)
+                self.report.first_token_step.setdefault(req.rid, self.clock)
+                self.report.slots_served += 1
+                if run.done:                      # e.g. max_tokens == 1
+                    outs.append(self._finish(run))
+        else:
+            n_decoding = sum(1 for r in sched.running.values()
+                             if r.phase == PHASE_DECODE)
+            chunk_budget = self.prefill_chunk
+            if self.max_step_tokens is not None:
+                # decode-first budget: the batched decode always dispatches;
+                # the budget throttles only how much prefill rides along
+                chunk_budget = min(chunk_budget,
+                                   max(0, self.max_step_tokens - n_decoding))
+            if self._prefilling is None and chunk_budget > 0:
+                req = sched.peek_arrived(self.clock)
+                # gate on the whole prompt's pages even though chunks
+                # allocate lazily: admitting into a pool that cannot hold
+                # the prompt would guarantee preemption churn
+                if req is not None and pool.can_admit(len(req.prompt)):
+                    sched.pop_head()
+                    slot = pool.claim()
+                    sched.bind_prefill(slot, req, self.clock)
+                    pool.stage(slot, len(req.prompt))
+                    self.report.admitted_step.setdefault(req.rid, self.clock)
+                    self.report.slots_served += 1
+                    self._prefilling = slot
+            if self._prefilling is not None and chunk_budget > 0:
+                outs.extend(self._run_chunk(self._prefilling, chunk_budget))
 
         # ---- one batched decode + in-jit per-slot sampling ---------------
-        if sched.running:
+        decoding = [s for s, r in sched.running.items()
+                    if r.phase == PHASE_DECODE]
+        if decoding:
             cur = np.zeros((self.max_batch,), np.int32)
-            for slot, run in sched.running.items():
-                cur[slot] = run.pending
+            for slot in decoding:
+                cur[slot] = sched.running[slot].pending
             td = time.perf_counter()
             toks, pool.cache = self._decode(
                 self.params, self.routers, jnp.asarray(cur), pool.cache,
                 self._samp_arrays())
             toks = np.asarray(toks)
             self.stats.decode_s += time.perf_counter() - td
-            n_active = len(sched.running)
+            n_active = len(decoding)
             self.stats.tokens_decoded += n_active
             self.report.tokens_decoded += n_active
             self.report.decode_steps_run += 1
             if self.paged:   # live pages this step covers vs full width
                 self.report.pages_scanned += sum(
-                    r.length // pool.page_w + 1
-                    for r in sched.running.values())
+                    sched.running[s].length // pool.page_w + 1
+                    for s in decoding)
                 self.report.pages_scanned_dense_equiv += (
                     n_active * pool.pages_per_slot)
                 self.report.peak_pages_in_use = max(
                     self.report.peak_pages_in_use, pool.pages_in_use)
                 self.report.occupancy_sum += pool.pages_in_use / pool.num_pages
             self.clock += 1
-            for slot in list(sched.running):
+            for slot in decoding:
                 self._pos[slot] += 1
                 run = sched.record(slot, int(toks[slot]), self.clock)
                 if run.done:
@@ -353,6 +489,76 @@ class EngineCore:
                         outs.append(out)
         self.report.steps = self.clock
         return outs
+
+    def _run_chunk(self, slot: int, chunk_budget: int) -> List[RequestOutput]:
+        """Feed the next prompt chunk (at most ``chunk_budget`` tokens) of
+        the in-flight prefill into the pool cache.  On the final chunk,
+        sample the first token and flip the slot into the decode phase so
+        this same step's batched decode already includes it."""
+        sched, pool = self.sched, self.pool
+        run = sched.running[slot]
+        req = run.request
+        L = len(req.prompt)
+        off = run.prefilled
+        n = min(chunk_budget, L - off)
+        # pages covering this chunk's writes — plus, on the final chunk, the
+        # page of the request's first decode write (position L), mirroring
+        # what whole-prompt insert() reserves.  When the pool is tight the
+        # prefill must not evict an *older* request (it is the youngest by
+        # FCFS): it defers the chunk instead — decoding rivals keep making
+        # progress, and if pressure persists the decode growth loop preempts
+        # this very slot (youngest victim), releasing its pages
+        if self.paged:
+            last_pos = off + n - 1 if off + n < L else L
+            for pidx in range(off // pool.page_w, last_pos // pool.page_w + 1):
+                while not pool.reserve(slot, pidx * pool.page_w):
+                    victim = self._pick_victim(exclude=slot)
+                    assert victim is not None, "page pool exhausted"
+                    vrun = sched.running[victim]
+                    if ((vrun.admitted_step, vrun.request.rid)
+                            < (run.admitted_step, req.rid)):
+                        return []          # all rivals older: back off
+                    self._preempt(victim)
+        C = self.prefill_chunk
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = req.prompt[off:off + n]
+        kw = self._kw_bucket(off + n)
+        t0 = time.perf_counter()
+        logits, pool.cache = self._chunk(
+            self.params, jnp.asarray(toks), pool.cache, jnp.int32(slot),
+            jnp.int32(off), jnp.int32(n), kw)
+        logits.block_until_ready()     # honest per-chunk prefill accounting
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += n
+        self.report.chunks_run += 1
+        self.report.prefill_tokens += n
+        run.prefilled = off + n
+        if run.prefilled < L:
+            return []
+        # ---- prompt complete: first token, decode phase, this step -------
+        p = req.sampling if req.sampling is not None else SamplingParams()
+        tok = self._sample_one(logits[0, n - 1], p, pos=0)
+        pool.activate(slot, L)
+        self._lower_sampling(slot, req.sampling)
+        run = sched.begin_decode(slot, tok, self.clock)
+        self.report.first_token_step.setdefault(req.rid, self.clock)
+        self._prefilling = None
+        if run.done:                              # e.g. max_tokens == 1
+            return [self._finish(run)]
+        return []
+
+    def _kw_bucket(self, end: int) -> int:
+        """Static key-extent bucket for a chunk whose last valid query sits
+        at global position ``end - 1``: the next power of two >= end,
+        rounded up to a page multiple, capped at the pool width — so chunk
+        traces stay O(log cache_width)."""
+        kw = 8
+        while kw < end:
+            kw *= 2
+        if self.paged:
+            kw = -(-kw // self.pool.page_w) * self.pool.page_w
+        return min(kw, self.pool.width)
 
     # -------------------------------------------------------- internals ---
     def _lower_sampling(self, slot: int, p: Optional[SamplingParams]) -> None:
@@ -373,7 +579,7 @@ class EngineCore:
     def _sample_one(self, logits, p: SamplingParams, pos: int) -> int:
         """Sample one token from one row with the request's params (used at
         prefill; same math as the in-decode batched sampler at ``pos``)."""
-        return int(sampling.sample(
+        return int(_SAMPLE_ONE(
             logits[None],
             temp=jnp.asarray([p.temperature], jnp.float32),
             top_k=jnp.asarray([p.top_k], jnp.int32),
@@ -412,6 +618,8 @@ class EngineCore:
     def _preempt(self, slot: int) -> None:
         self.sched.requeue(slot, self.clock)
         self.pool.release(slot)
+        if slot == self._prefilling:   # pool pressure hit a half-prefilled
+            self._prefilling = None    # slot: its chunks recompute later
         self.report.preemptions += 1
 
     def _emit(self, run: SlotRun, *, finished: bool) -> RequestOutput:
@@ -425,6 +633,12 @@ class EngineCore:
         new = [int(t) for t in gen[self._emitted[rid]:]]
         self._tokens[rid].extend(new)
         self._emitted[rid] = max(self._emitted[rid], len(gen))
+        if new:                        # per-token latency series (TTFT/ITL)
+            now = time.perf_counter()
+            self.report.token_steps.setdefault(rid, []).extend(
+                [self.clock] * len(new))
+            self.report.token_walls.setdefault(rid, []).extend(
+                [now] * len(new))
         return RequestOutput(rid=rid, new_token_ids=new,
                              token_ids=list(self._tokens[rid]),
                              finished=finished,
@@ -449,7 +663,10 @@ class Engine:
                  cache_width: int = 2048,
                  page_w: Optional[int] = 16,
                  num_pages: Optional[int] = None,
-                 sampler: Callable = sampling.greedy):
+                 prefill_chunk: Optional[int] = None,
+                 max_step_tokens: Optional[int] = None,
+                 sampler: Callable = sampling.greedy,
+                 _jits=None):
         # NOTE: cfg must already be prepare_model_config(cfg, policy)'d if
         # params were initialized with the split layout.
         self.cfg = cfg
@@ -459,11 +676,15 @@ class Engine:
         self.cache_width = cache_width
         self.page_w = page_w               # None -> contiguous KVPool
         self.num_pages = num_pages         # None -> full provisioning
+        self.prefill_chunk = prefill_chunk
+        self.max_step_tokens = max_step_tokens
         self.sampler = sampler             # fixed-batch generate() only
         self.stats = EngineStats()
-        # one shared jit pair: every serve() call reuses the same compiled
-        # decode step, so slot churn across calls never re-jits
-        self._prefill, self._decode = make_serving_jits(cfg, policy)
+        # one shared jit triple: every serve() call reuses the same compiled
+        # prefill/decode/chunk steps, so slot churn across calls never
+        # re-jits (pass ``_jits`` to share traces across engines too)
+        self._prefill, self._decode, self._chunk = (
+            _jits if _jits is not None else make_serving_jits(cfg, policy))
 
         def _decode_logits(params, routers, tokens, cache):
             return decode_step(params, cfg, tokens=tokens, cache=cache,
@@ -514,8 +735,11 @@ class Engine:
         return EngineCore(self.cfg, self.params, routers=self.routers,
                           policy=self.policy, max_batch=max_batch,
                           cache_width=self.cache_width, page_w=self.page_w,
-                          num_pages=self.num_pages, stats=self.stats,
-                          _jits=(self._prefill, self._decode))
+                          num_pages=self.num_pages,
+                          prefill_chunk=self.prefill_chunk,
+                          max_step_tokens=self.max_step_tokens,
+                          stats=self.stats,
+                          _jits=(self._prefill, self._decode, self._chunk))
 
     def serve(self, requests: Sequence[Request], *, max_batch: int = 4,
               max_steps: Optional[int] = None) -> ServeReport:

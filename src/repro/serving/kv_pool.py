@@ -105,6 +105,25 @@ class KVPool:
         self.cache = self._insert(self.cache, single_layers,
                                   jnp.int32(slot), jnp.int32(length))
 
+    def stage(self, slot: int, length: int) -> None:
+        """Park an in-flight chunked-prefill slot's decode-write cursor at
+        ``length`` (the prompt's first decode position) while the slot stays
+        inactive.  The fixed-shape decode dispatch writes *something* for
+        every slot each step; position ``length`` is the one spot the
+        request's own first decode write will overwrite anyway, and the
+        causal mask keeps every chunk from reading it — so concurrent
+        decodes cannot stomp the partially written prompt."""
+        assert 0 <= length < self.width, (length, self.width)
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(length)
+
+    def activate(self, slot: int, length: int) -> None:
+        """Flip ``slot`` live at ``length`` once chunked prefill has written
+        its K/V into the pool in place — the chunked analogue of ``insert``
+        (which copies a whole prefilled sequence in)."""
+        assert 0 <= length < self.width, (length, self.width)
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(length)
+        self.cache["active"] = self.cache["active"].at[slot].set(True)
+
     def release(self, slot: int) -> None:
         self.cache = self._release(self.cache, jnp.int32(slot))
         heapq.heappush(self._free, slot)   # deterministic lowest-first reuse
@@ -280,6 +299,27 @@ class PagedKVPool:
         self.cache["page_table"] = (
             self.cache["page_table"].at[slot, idx].set(phys))
         return True
+
+    def stage(self, slot: int, length: int) -> None:
+        """Park an in-flight chunked-prefill slot's decode-write cursor at
+        ``length`` while it stays inactive (see :meth:`KVPool.stage`).
+        Until the final chunk reserves the page covering ``length`` the
+        stray decode writes route to the sink page; afterwards they land at
+        position ``length``, which the first real decode overwrites."""
+        assert 0 <= length < self.width, (length, self.width)
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(length)
+
+    def activate(self, slot: int, length: int) -> None:
+        """Flip ``slot`` live at ``length`` after chunked prefill wrote the
+        prompt's K/V page by page (``reserve`` allocated along the way).
+        Every page covering [0, length] — prompt plus the first decode
+        write — must already be bound."""
+        assert 0 <= length < self.width, (length, self.width)
+        n = self.pages_needed(length)
+        assert (self._table[slot, :n] >= 0).all(), (
+            "chunked prefill must reserve its pages before activation")
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(length)
+        self.cache["active"] = self.cache["active"].at[slot].set(True)
 
     def release(self, slot: int) -> None:
         for p in self._table[slot]:

@@ -46,13 +46,17 @@ class LLM:
     def __init__(self, cfg, params, *, routers=None, policy=None,
                  max_batch: int = 4, cache_width: int = 2048,
                  page_w: Optional[int] = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 max_step_tokens: Optional[int] = None,
                  _jits=None):
-        # _jits: a (prefill, decode) pair from make_serving_jits, so several
-        # LLM instances (e.g. a warmup and a measured run) can share one
-        # compiled decode step
+        # _jits: a (prefill, decode, chunk) triple from make_serving_jits,
+        # so several LLM instances (e.g. a warmup and a measured run) can
+        # share one set of compiled steps
         self.core = EngineCore(cfg, params, routers=routers, policy=policy,
                                max_batch=max_batch, cache_width=cache_width,
                                page_w=page_w, num_pages=num_pages,
+                               prefill_chunk=prefill_chunk,
+                               max_step_tokens=max_step_tokens,
                                _jits=_jits)
         self._next_rid = 0
 

@@ -54,9 +54,19 @@ class Request:
         return token == self.eos_id or token in self.stop_token_ids
 
 
+PHASE_PREFILL = "prefill"
+PHASE_DECODE = "decode"
+
+
 @dataclass
 class SlotRun:
-    """Live per-slot state while a request occupies a KV-pool slot."""
+    """Live per-slot state while a request occupies a KV-pool slot.
+
+    With chunked prefill a slot passes through two phases: ``prefill``
+    (``prefilled`` prompt tokens are in the pool cache, no token sampled
+    yet) and ``decode`` (the whole prompt is in, ``pending`` is the next
+    input token).  Whole-prompt admission binds straight into ``decode``.
+    """
     request: Request
     slot: int
     admitted_step: int
@@ -65,6 +75,9 @@ class SlotRun:
     generated: List[int] = field(default_factory=list)
     finished_step: Optional[int] = None
     finish_reason: Optional[str] = None   # "stop" | "length" once done
+    phase: str = PHASE_DECODE
+    prefilled: int = 0               # prompt tokens already in the cache
+    first_token_step: Optional[int] = None   # None until sampled (TTFT)
 
     @property
     def done(self) -> bool:
@@ -129,8 +142,34 @@ class Scheduler:
         """Occupy ``slot``; the prefill already produced ``first_token``."""
         run = SlotRun(request=request, slot=slot, admitted_step=step,
                       length=len(request.prompt), pending=first_token,
-                      generated=[first_token])
+                      generated=[first_token], prefilled=len(request.prompt),
+                      first_token_step=step)
         self.running[slot] = run
+        self._maybe_finish(run, step)
+        return run
+
+    def bind_prefill(self, slot: int, request: Request, step: int) -> SlotRun:
+        """Occupy ``slot`` in the ``prefill`` phase: no prompt tokens are in
+        the cache yet; the engine feeds chunks and calls
+        :meth:`begin_decode` once the prompt completes."""
+        run = SlotRun(request=request, slot=slot, admitted_step=step,
+                      length=0, pending=-1, generated=[],
+                      phase=PHASE_PREFILL)
+        self.running[slot] = run
+        return run
+
+    def begin_decode(self, slot: int, first_token: int, step: int) -> SlotRun:
+        """Transition a chunk-prefilled slot to the ``decode`` phase with its
+        freshly sampled first token (the TTFT event)."""
+        run = self.running[slot]
+        assert run.phase == PHASE_PREFILL
+        assert run.prefilled == len(run.request.prompt), (
+            run.prefilled, len(run.request.prompt))
+        run.phase = PHASE_DECODE
+        run.length = len(run.request.prompt)
+        run.pending = first_token
+        run.generated = [first_token]
+        run.first_token_step = step
         self._maybe_finish(run, step)
         return run
 

@@ -1,0 +1,433 @@
+"""Chunked prefill under a per-step token budget.
+
+The load-bearing claims:
+* chunked prefill is *semantically invisible*: byte-identical greedy tokens
+  to whole-prompt prefill for every chunk width — one short of the prompt,
+  equal to it, and one that divides neither the prompt nor the page width
+  (``prefill_chunk % page_w != 0``) — across dense / Polar gather / Polar
+  Pallas-kernel decode paths and paged / contiguous pools (acceptance
+  criterion of the chunked-prefill PR), including the MLA cache layout;
+* ``max_step_tokens`` budgets the step decode-first: concurrently decoding
+  requests emit one token *every* step while a long prompt chunks through,
+  instead of stalling behind one giant head-of-line prefill;
+* half-prefilled slots are first-class citizens of the recovery paths:
+  pool-pressure preemption and mid-prefill aborts release their pages and
+  the engine still produces exact solo tokens / stays quiescent;
+* chunk traces are bucketed: a mixed short/long prompt workload keeps the
+  compiled prefill-variant count O(log cache_width) and the decode trace at
+  exactly one;
+* accounting satellites: ``Stats.prefill_s`` accrues per chunk,
+  ``chunks_run == ceil(L / chunk)``, and ``first_token_step`` is *absent*
+  (never 0) for rejected and mid-prefill-aborted requests.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import default_policy
+from repro.models import init_params, init_routers, prepare_model_config
+from repro.serving import (LLM, Engine, Request, SamplingParams,
+                           make_serving_jits)
+from repro.serving.scheduler import PHASE_PREFILL
+
+KEY = jax.random.PRNGKey(0)
+CACHE_W = 32
+
+# one model per policy kind, shared across every engine in the module.
+# Jit triples are shared only among engines of identical pool geometry
+# (pass jits=...): the decode trace is keyed by the cache's shapes, so
+# sharing across geometries would break decode_jit_traces() == 1 asserts.
+_SETUP = {}
+
+
+def _setup(policy_kind):
+    if policy_kind in _SETUP:
+        return _SETUP[policy_kind]
+    cfg0 = get_smoke_config("opt-125m").replace(dtype="float32",
+                                                param_dtype="float32")
+    if policy_kind == "dense":
+        cfg, pol, routers = cfg0, None, None
+        params = init_params(KEY, cfg, max_seq_len=72)
+    else:
+        pol = dataclasses.replace(default_policy(cfg0, impl="gather"),
+                                  attn_density=0.5, mlp_sparse=False)
+        if policy_kind == "kernel":
+            pol = dataclasses.replace(pol, impl="kernel")
+        cfg = prepare_model_config(cfg0, pol)
+        params = init_params(KEY, cfg, max_seq_len=72)
+        routers = init_routers(jax.random.PRNGKey(1), cfg, pol)
+    _SETUP[policy_kind] = (cfg, params, routers, pol)
+    return _SETUP[policy_kind]
+
+
+def _jits(policy_kind):
+    cfg, _, _, pol = _setup(policy_kind)
+    return make_serving_jits(cfg, pol)
+
+
+def _engine(policy_kind, jits=None, **kw):
+    cfg, params, routers, pol = _setup(policy_kind)
+    kw.setdefault("cache_width", CACHE_W)
+    return Engine(cfg, params, routers=routers, policy=pol,
+                  _jits=jits, **kw)
+
+
+def _requests(cfg):
+    """Two mid-stream requests; rid 0's 9-token prompt is the chunk target."""
+    rng = np.random.default_rng(3)
+    return [Request(rid=0,
+                    prompt=rng.integers(0, cfg.vocab_size, size=9).tolist(),
+                    max_new_tokens=5),
+            Request(rid=1,
+                    prompt=rng.integers(0, cfg.vocab_size, size=4).tolist(),
+                    max_new_tokens=4, arrival=1)]
+
+
+# --------------------------------------------- chunked == whole-prompt ----
+@pytest.mark.parametrize("policy_kind", ["dense", "polar", "kernel"])
+def test_chunked_matches_whole_prompt(policy_kind):
+    """Acceptance criterion: identical greedy tokens at chunk widths one
+    short of the prompt (8), equal to it (9), and misaligned with both the
+    prompt and the page boundary (5 on page_w=8), on paged and contiguous
+    pools."""
+    cfg = _setup(policy_kind)[0]
+    reqs = _requests(cfg)
+    for page_w in (8, None):
+        jits = _jits(policy_kind)
+        ref = _engine(policy_kind, jits=jits,
+                      page_w=page_w).serve(reqs, max_batch=2)
+        for chunk in (8, 9, 5):
+            eng = _engine(policy_kind, jits=jits, page_w=page_w,
+                          prefill_chunk=chunk)
+            rep = eng.serve(reqs, max_batch=2)
+            assert rep.tokens == ref.tokens, (page_w, chunk)
+            # per-prompt chunk count: ceil(9/chunk) + ceil(4/chunk)
+            assert rep.chunks_run == -(-9 // chunk) + -(-4 // chunk)
+            assert rep.prefill_tokens == 13
+            assert eng.decode_jit_traces() == 1
+
+
+def test_chunked_mla_matches_whole_prompt():
+    """The MLA cache layout (latent ckv/krope leaves, per-chunk prefix
+    re-expansion) must survive chunking too."""
+    cfg0 = get_smoke_config("deepseek-v3-671b")
+    cfg = cfg0.replace(dtype="float32", param_dtype="float32",
+                       moe=dataclasses.replace(cfg0.moe, impl="dense"),
+                       mtp=False)
+    params = init_params(KEY, cfg, max_seq_len=CACHE_W + 8)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=0,
+                    prompt=rng.integers(0, cfg.vocab_size, size=7).tolist(),
+                    max_new_tokens=4)]
+    for page_w in (8, None):
+        jits = make_serving_jits(cfg, None)
+        ref = Engine(cfg, params, cache_width=CACHE_W, page_w=page_w,
+                     _jits=jits).serve(reqs, max_batch=1)
+        rep = Engine(cfg, params, cache_width=CACHE_W, page_w=page_w,
+                     prefill_chunk=3, _jits=jits).serve(reqs, max_batch=1)
+        assert rep.tokens == ref.tokens, page_w
+        assert rep.chunks_run == 3
+
+
+def test_llm_frontend_chunked_parity():
+    """The knobs thread through the ``LLM`` frontend unchanged."""
+    cfg, params, routers, pol = _setup("dense")
+    jits = _jits("dense")
+    reqs = _requests(cfg)
+    prompts = [r.prompt for r in reqs]
+    sp = [SamplingParams(max_tokens=r.max_new_tokens) for r in reqs]
+    arr = [r.arrival for r in reqs]
+    ref = LLM(cfg, params, cache_width=CACHE_W, _jits=jits).generate(
+        prompts, sp, arrivals=arr)
+    llm = LLM(cfg, params, cache_width=CACHE_W, prefill_chunk=4,
+              max_step_tokens=6, _jits=jits)
+    outs = llm.generate(prompts, sp, arrivals=arr)
+    assert [o.token_ids for o in outs] == [o.token_ids for o in ref]
+    assert llm.report.chunks_run == 3 + 1
+    assert llm.report.max_step_tokens == 6
+
+
+# ------------------------------------------------- token-budget latency ---
+def test_budget_interleaves_decode_with_long_prefill():
+    """Decode-first budget: while a 28-token prompt chunks through, the
+    already-decoding request emits one token on *every* step — the
+    head-of-line prefill never stalls the batch."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(7)
+    long_prompt = rng.integers(0, cfg.vocab_size, size=28).tolist()
+    eng = _engine("dense", cache_width=64, page_w=8,
+                  prefill_chunk=4, max_step_tokens=6)
+    core = eng.make_core(max_batch=2)
+    core.add_request(0, [1, 2, 3], SamplingParams(max_tokens=20))
+    core.add_request(1, long_prompt, SamplingParams(max_tokens=3), arrival=1)
+    while not core.done:
+        core.step()
+    rep = core.report
+    steps0 = rep.token_steps[0]
+    # one token per step, no gap: the ITL-in-steps series is consecutive
+    assert steps0[1:] == list(range(steps0[1], steps0[1] + len(steps0) - 1))
+    # with one decoding slot the budget leaves 6-1=5 >= prefill_chunk=4
+    # tokens per chunk: 28/4 = 7 chunks + 1 for rid 0's own prompt
+    assert rep.chunks_run == 7 + 1
+    assert rep.first_token_step[1] - rep.admitted_step[1] == 6  # 7 chunks
+    solo = _engine("dense", cache_width=64, page_w=8).serve(
+        [Request(rid=1, prompt=long_prompt, max_new_tokens=3)], max_batch=1)
+    assert rep.tokens[1] == solo.tokens[1]
+    assert core.pool.is_quiescent()
+
+
+def test_max_step_tokens_throttles_chunk_width():
+    """With several slots decoding, the chunk shrinks below prefill_chunk
+    (budget minus decoders), so the long prompt takes more chunks than
+    ceil(L / prefill_chunk) — and still matches whole-prompt tokens."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=0, prompt=[1, 2, 3], max_new_tokens=18),
+            Request(rid=1, prompt=[4, 5], max_new_tokens=18),
+            Request(rid=2,
+                    prompt=rng.integers(0, cfg.vocab_size, size=20).tolist(),
+                    max_new_tokens=3, arrival=1)]
+    jits = _jits("dense")
+    ref = _engine("dense", jits=jits, cache_width=64,
+                  page_w=8).serve(reqs, max_batch=3)
+    eng = _engine("dense", jits=jits, cache_width=64, page_w=8,
+                  prefill_chunk=4, max_step_tokens=4)
+    rep = eng.serve(reqs, max_batch=3)
+    assert rep.tokens == ref.tokens
+    # rids 0+1 decode while rid 2 prefills -> chunk width 4-2=2, so rid 2
+    # needs 10 chunks, strictly more than ceil(20/4)=5 (plus one chunk each
+    # for the two short prompts)
+    assert rep.chunks_run > 5 + 2
+    assert eng.decode_jit_traces() == 1
+
+
+# ------------------------------------------ recovery: preempt / abort ----
+def test_preemption_of_half_prefilled_request():
+    """Pool pressure while a long prompt is mid-prefill: the half-prefilled
+    slot is the youngest, gets preempted, releases its pages, and still
+    finishes later with its exact solo tokens."""
+    reqs = [Request(rid=0, prompt=[1, 2, 3], max_new_tokens=12),
+            Request(rid=1, prompt=list(range(1, 11)), max_new_tokens=4,
+                    arrival=1)]
+    solo = {r.rid: _engine("dense", cache_width=16, page_w=4).serve(
+                [dataclasses.replace(r, arrival=0)],
+                max_batch=1).tokens[r.rid] for r in reqs}
+    eng = _engine("dense", cache_width=16, page_w=4, num_pages=5,
+                  prefill_chunk=1)
+    core = eng.make_core(max_batch=2)
+    for r in reqs:
+        core.add_request(r.rid, r.prompt,
+                         SamplingParams(max_tokens=r.max_new_tokens),
+                         arrival=r.arrival)
+    victim_phases = []
+    prev = 0
+    while not core.done:
+        before = {r.request.rid: r.phase
+                  for r in core.sched.running.values()}
+        core.step()
+        if core.report.preemptions > prev:
+            prev = core.report.preemptions
+            requeued = {r.rid for r in core.sched.waiting}
+            victim_phases += [ph for rid, ph in before.items()
+                              if rid in requeued]
+    assert core.report.preemptions >= 1
+    assert PHASE_PREFILL in victim_phases     # a half-prefilled slot died
+    assert core.report.tokens == solo
+    assert core.pool.is_quiescent()
+    assert core.decode_jit_traces() == 1
+
+
+def test_abort_mid_prefill_releases_everything():
+    """Aborting the in-flight prefill frees its slot and pages immediately,
+    leaves ``first_token_step`` absent, and un-blocks the next request."""
+    cfg = _setup("dense")[0]
+    eng = _engine("dense", page_w=8, prefill_chunk=2)
+    core = eng.make_core(max_batch=1)
+    rng = np.random.default_rng(2)
+    core.add_request(0, rng.integers(0, cfg.vocab_size, size=12).tolist(),
+                     SamplingParams(max_tokens=4))
+    core.step()
+    core.step()
+    run = core.sched.running[core._prefilling]
+    assert run.phase == PHASE_PREFILL and 0 < run.prefilled < 12
+    pages_held = core.pool.pages_in_use
+    assert pages_held > 0
+    assert core.abort(0)
+    assert core._prefilling is None
+    assert core.pool.pages_in_use == 0
+    core.add_request(1, [7, 8, 9], SamplingParams(max_tokens=3))
+    outs = []
+    while not core.done:
+        outs.extend(core.step())
+    reasons = {o.rid: o.finish_reason for o in outs if o.finished}
+    assert reasons == {0: "abort", 1: "length"}
+    # mid-prefill abort: no first token was ever sampled
+    assert 0 not in core.report.first_token_step
+    assert 1 in core.report.first_token_step
+    assert core.report.tokens.get(0) is None and not core._tokens[0]
+    assert core.pool.is_quiescent()
+
+
+def test_first_token_step_absent_for_rejected():
+    eng = _engine("dense", prefill_chunk=2)
+    core = eng.make_core(max_batch=1)
+    assert not core.add_request(0, [], None)            # empty prompt
+    outs = core.step()
+    assert [o.finish_reason for o in outs] == ["reject"]
+    assert 0 not in core.report.first_token_step
+    assert core.done
+
+
+# ------------------------------------------------------- accounting ------
+def test_per_chunk_stats_accounting():
+    """``prefill_s`` accrues per chunk and the chunk counters are exact."""
+    cfg = _setup("dense")[0]
+    eng = _engine("dense", page_w=8, prefill_chunk=4)
+    core = eng.make_core(max_batch=1)
+    rng = np.random.default_rng(4)
+    core.add_request(0, rng.integers(0, cfg.vocab_size, size=9).tolist(),
+                     SamplingParams(max_tokens=2))
+    before = core.stats.prefill_s
+    core.step()                                 # chunk 1 of ceil(9/4)=3
+    mid = core.stats.prefill_s
+    assert mid > before
+    assert core.stats.prefill_chunks == 1 and core.report.chunks_run == 1
+    assert 0 not in core.report.first_token_step      # prefill incomplete
+    while not core.done:
+        core.step()
+    assert core.stats.prefill_s > mid           # later chunks kept accruing
+    assert core.stats.prefill_chunks == 3
+    assert core.stats.prefill_tokens == 9 == core.report.prefill_tokens
+    assert core.report.ttft_steps()[0] == core.report.first_token_step[0]
+    assert len(core.report.itl_wall_s()[0]) == 1      # 2 tokens -> 1 gap
+
+
+def test_chunk_trace_budget():
+    """Trace-budget guard: a mixed short/long prompt workload compiles at
+    most one chunk variant per power-of-two key-extent bucket (O(log
+    cache_width)), and exactly one decode variant."""
+    cfg = _setup("dense")[0]
+    params = _setup("dense")[1]
+    eng = Engine(cfg, params, cache_width=64, page_w=8, prefill_chunk=8)
+    rng = np.random.default_rng(9)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=L).tolist(),
+                    max_new_tokens=2)
+            for i, L in enumerate([5, 9, 23, 40, 57])]
+    core = eng.make_core(max_batch=2)
+    for r in reqs:
+        core.add_request(r.rid, r.prompt,
+                         SamplingParams(max_tokens=r.max_new_tokens))
+    while not core.done:
+        core.step()
+    assert len(core.report.tokens) == 5
+    # kw buckets at width 64: {8, 16, 32, 64} -> at most 4 chunk traces;
+    # the whole-prompt prefill entry is never traced in chunked mode
+    assert core.prefill_jit_traces() <= 4
+    assert core.decode_jit_traces() == 1
+
+
+def test_knob_validation():
+    for kw, msg in [(dict(prefill_chunk=0), "prefill_chunk"),
+                    (dict(max_step_tokens=4), "requires prefill_chunk"),
+                    (dict(prefill_chunk=2, max_step_tokens=0),
+                     "max_step_tokens")]:
+        with pytest.raises(ValueError, match=msg):
+            _engine("dense", **kw).make_core(max_batch=1)
+    cfg = _setup("dense")[0].replace(kv_quant=True)
+    params = _setup("dense")[1]
+    with pytest.raises(ValueError, match="kv_quant"):
+        Engine(cfg, params, cache_width=CACHE_W,
+               prefill_chunk=2).make_core(max_batch=1)
+
+
+# ------------------------------------------------ property: interleaving --
+def _check_interleaving(reqs, aborts):
+    """Property body: random add_request/abort/step interleavings
+    (mid-prefill aborts, pool-pressure preemption of half-prefilled slots
+    included) must drain quiescent with no slot or page leaks, every
+    request must reach a terminal state, and first admissions must be
+    strictly FCFS.  ``reqs`` is [(prompt_len, max_tokens, arrival)],
+    ``aborts`` is [(rid, abort_at_step)]."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(42)
+    if "interleave" not in _SETUP:    # same geometry every scenario: share
+        _SETUP["interleave"] = _jits("dense")
+    # undersized pool (6 pages of 4 vs 2 slots x 4 pages demand) + chunk=2:
+    # long-prompt pairs contend for pages and preempt mid-prefill
+    eng = _engine("dense", jits=_SETUP["interleave"], cache_width=16,
+                  page_w=4, num_pages=6, prefill_chunk=2, max_step_tokens=3)
+    core = eng.make_core(max_batch=2)
+    for rid, (plen, mnew, arr) in enumerate(reqs):
+        core.add_request(rid, rng.integers(0, cfg.vocab_size,
+                                           size=plen).tolist(),
+                         SamplingParams(max_tokens=mnew), arrival=arr)
+    abort_at = {step: rid for rid, step in aborts}
+    first_admitted, seen, outs, steps = [], set(), [], 0
+    while not core.done and steps < 300:
+        if steps in abort_at:
+            core.abort(abort_at[steps])
+        outs.extend(core.step())
+        for slot, run in core.sched.running.items():
+            rid = run.request.rid
+            if rid not in seen:
+                seen.add(rid)
+                first_admitted.append(rid)
+        steps += 1
+    assert core.done, "engine failed to drain"
+    # every request reached exactly one terminal state
+    terminal = {o.rid for o in outs if o.finished}
+    assert terminal == set(range(len(reqs)))
+    # no leaks: slots and pages all returned
+    assert core.pool.is_quiescent()
+    assert core.pool.num_free == 2
+    if core.paged:
+        assert core.pool.free_pages == core.pool.num_pages
+        assert (core.pool.page_table() == -1).all()
+    # strict FCFS: first admissions happen in (arrival, rid) queue order
+    assert first_admitted == sorted(first_admitted,
+                                    key=lambda rid: (reqs[rid][2], rid))
+    assert core.decode_jit_traces() == 1
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_interleaving_drains_clean(seed):
+    """Seeded-random interleavings (always runs, even without hypothesis):
+    the same drain/leak/FCFS property over 8 scenario seeds."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(2, 5))
+    reqs = [(int(rng.integers(1, 11)), int(rng.integers(1, 6)),
+             int(rng.integers(0, 4))) for _ in range(n)]
+    aborts = [(int(rid), int(rng.integers(0, 13)))
+              for rid in rng.permutation(n)[:int(rng.integers(0, 3))]]
+    _check_interleaving(reqs, aborts)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def _traffic(draw):
+        n = draw(st.integers(2, 4))
+        reqs = [(draw(st.integers(1, 10)),          # prompt length
+                 draw(st.integers(1, 5)),           # max_tokens
+                 draw(st.integers(0, 3)))           # arrival
+                for _ in range(n)]
+        aborts = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, 12)),
+            max_size=2, unique_by=lambda t: t[0]))
+        return reqs, aborts
+
+    @given(_traffic())
+    @settings(max_examples=12, deadline=None)
+    def test_random_interleaving_property(traffic):
+        """Hypothesis-driven search over the same interleaving property."""
+        _check_interleaving(*traffic)
+except ImportError:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                             "(requirements-dev.txt)")
+    def test_random_interleaving_property():
+        pass
