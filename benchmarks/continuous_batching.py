@@ -125,10 +125,19 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
 def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         impl: str = "gather", seed: int = 0, page_w: int = 16,
         page_share: float = 0.5, workload: str = "poisson",
-        prefill_chunk=None, max_step_tokens=None):
+        prefill_chunk=None, max_step_tokens=None, kv_quant: bool = False):
     if num_requests < 1:
         raise SystemExit("--num-requests must be >= 1")
     cfg, params, routers, pol = get_toy_model()
+    if kv_quant:
+        # int8-KV pool: all paged decode streams through the quant kernel.
+        # Chunked prefill is gated off on quant pools (see
+        # chunked_prefill_unsupported), and the adversary workload always
+        # runs a chunked variant.
+        if prefill_chunk is not None or workload == "adversary":
+            raise SystemExit("--kv-quant cannot run chunked prefill "
+                             "(int8 pools gate it off)")
+        cfg = cfg.replace(kv_quant=True)
     cache_width = 256 if workload == "adversary" else 64
     if workload == "adversary":
         reqs = adversary_requests(num_requests, vocab_size=cfg.vocab_size,
@@ -206,6 +215,13 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
             "preemptions": rep.preemptions,
             "pool_hbm_bytes": rep.pool_hbm_bytes,
             "contiguous_pool_hbm_bytes": contig_hbm,
+            "kv_quant": kv_quant,
+            # modeled attention KV I/O (engine-side byte accounting):
+            # streaming layers are charged live pages x group fraction,
+            # gather-oracle layers the full-width view they materialize
+            "hbm_read_bytes": rep.hbm_read_bytes,
+            "hbm_read_bytes_per_step": round(rep.hbm_read_bytes_per_step, 1),
+            "gather_bytes_avoided": rep.gather_bytes_avoided,
         }
         json_rows.append(row)
         label = f"{name}_{variant}_mb{max_batch}"
@@ -219,6 +235,10 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
                          row["page_scan_ratio"]))
             rows.append(("cb_pool_hbm_vs_contiguous", label,
                          round(row["pool_hbm_bytes"] / contig_hbm, 3)))
+            rows.append(("cb_hbm_read_bytes_per_step", label,
+                         row["hbm_read_bytes_per_step"]))
+            rows.append(("cb_gather_bytes_avoided", label,
+                         row["gather_bytes_avoided"]))
     if workload == "poisson":
         tps = {r["policy"]: r["decode_tok_per_s"] for r in json_rows}
         rows.append(("cb_polar_vs_dense_speedup", f"mb{max_batch}",
@@ -251,6 +271,15 @@ def main():
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--impl", default="gather", choices=["gather", "kernel"],
                     help="polar decode path: XLA gather or Pallas SHA kernel")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["kernel", "gather", "xla"],
+                    help="force the polar attention decode path (wins over "
+                         "--impl): kernel = Pallas paged/compact SHA, "
+                         "gather = XLA head-gather (paged: the "
+                         "_gather_pages oracle), xla = masked dense XLA")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="serve from the int8-KV pool (paged decode streams "
+                         "through the in-kernel-dequant Pallas path)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--page-w", type=int, default=16,
                     help="KV page size (0 = contiguous slot pool)")
@@ -269,11 +298,15 @@ def main():
                     help="per-step token budget, decode-first "
                          "(adversary default: prefill_chunk + max_batch)")
     args = ap.parse_args()
+    impl = args.impl
+    if args.attn_impl is not None:      # forcing flag wins over --impl
+        impl = {"xla": "mask"}.get(args.attn_impl, args.attn_impl)
     for name, config, value in run(args.num_requests, args.rate,
-                                   args.max_batch, args.impl, args.seed,
+                                   args.max_batch, impl, args.seed,
                                    args.page_w, args.page_share,
                                    args.workload, args.prefill_chunk,
-                                   args.max_step_tokens):
+                                   args.max_step_tokens,
+                                   kv_quant=args.kv_quant):
         print(f"{name},{config},{value}")
 
 

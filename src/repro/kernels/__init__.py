@@ -1,8 +1,13 @@
 """Pallas TPU kernels for the paper's two compute hot-spots:
 
 * sha — Selective Head/Group FlashAttention decode (paper Alg. 1), in a
-  contiguous-cache variant and a paged variant whose K/V index maps route
-  through a scalar-prefetched page table (length-proportional I/O)
+  contiguous-cache variant (head-major, zero layout copies) and paged
+  variants whose K/V index maps route through a scalar-prefetched page
+  table (length-proportional I/O): fp pool, int8 pool with in-kernel
+  dequantization, and a paged chunk-prefill kernel
+* mla — paged Multi-head Latent Attention decode/chunk kernels streaming
+  the rank-r latent pool page-by-page (expansion fused via the absorbed
+  contraction order)
 * select_gemm — fused Selective GEMM MLP (paper Alg. 3 + fused 2nd GEMM)
 
 Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper) and
@@ -11,9 +16,16 @@ ref.py (pure-jnp oracle).  Execution mode is decided by
 ``REPRO_PALLAS_INTERPRET=0/1`` or ``runtime.set_pallas_interpret``
 overrides it.
 """
+from repro.kernels.mla import mla_paged_attention, mla_paged_chunk_attention
 from repro.kernels.select_gemm import select_gemm_ref, selective_mlp
-from repro.kernels.sha import (select_group_attention, select_head_attention,
-                               select_head_attention_paged, sha_ref)
+from repro.kernels.sha import (paged_chunk_attention, select_group_attention,
+                               select_head_attention,
+                               select_head_attention_hm,
+                               select_head_attention_paged,
+                               select_head_attention_paged_quant, sha_ref)
 
 __all__ = ["selective_mlp", "select_gemm_ref", "select_head_attention",
-           "select_head_attention_paged", "select_group_attention", "sha_ref"]
+           "select_head_attention_hm", "select_head_attention_paged",
+           "select_head_attention_paged_quant", "paged_chunk_attention",
+           "select_group_attention", "mla_paged_attention",
+           "mla_paged_chunk_attention", "sha_ref"]

@@ -1,0 +1,3 @@
+from repro.kernels.mla.ops import mla_paged_attention, mla_paged_chunk_attention
+
+__all__ = ["mla_paged_attention", "mla_paged_chunk_attention"]

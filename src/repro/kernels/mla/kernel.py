@@ -1,0 +1,240 @@
+"""Paged MLA (Multi-head Latent Attention) decode + chunk kernels, Pallas.
+
+MLA caches a rank-``r`` latent ``ckv`` plus a small rotary key ``krope``
+per position — already ~an order of magnitude smaller than a GQA cache.
+What the XLA serve path lost was the *paged* saving: it gathered the
+slot's pages into a contiguous (B, W, r) view every step and attended the
+full logical width.  These kernels stream the latent pool page-by-page
+through a scalar-prefetched page table with the latent expansion fused
+into the contraction order:
+
+    scores = (q_nope W_uk) . ckv + q_rope . krope      -- absorbed form
+    ctx    = softmax(scores) . ckv                      (B, H, r)
+    out    = ctx . W_uv                                 -- caller-side
+
+so per-position work inside the kernel is rank-``r`` (never the expanded
+``H x (nope + vd)``), and dead pages are skipped under ``pl.when`` with
+their index maps collapsed onto the pool's sink page — I/O is
+``ceil(length / page_w)`` latent pages per sequence.  The absorbed and
+naive ("re-expand every position") variants are the same contraction
+reassociated, so one kernel serves both ``cfg.mla.absorb`` settings.
+
+* ``mla_pallas_paged`` — decode: grid (B, max_pages), online softmax in
+  VMEM scratch over pages; all heads share each latent page (MLA has no
+  per-head K/V, so head-sparsity saves FLOPs via fewer query rows, not
+  page I/O).
+* ``mla_chunk_pallas_paged`` — chunked prefill: grid (kw / page_w,) for
+  the single prefilling slot, with the global causal mask built in-kernel
+  from the chunk's row offset; only allocated pages are visited.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import runtime
+
+NEG_INF = -1e30
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return runtime.pallas_interpret() if interpret is None else interpret
+
+
+# ------------------------------------------------------ paged MLA decode ---
+def _mla_paged_kernel(pt_ref, len_ref, qa_ref, qr_ref, ckv_ref, kr_ref,
+                      o_ref, acc_ref, m_ref, l_ref, *, page_w: int,
+                      scale: float):
+    b = pl.program_id(0)
+    w = pl.program_id(1)
+    n_w = pl.num_programs(1)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(w * page_w < length)
+    def _page():
+        qa = qa_ref[0]                               # (H, r)
+        qr = qr_ref[0]                               # (H, rope_d)
+        ckv = ckv_ref[0]                             # (page_w, r)
+        kr = kr_ref[0]                               # (page_w, rope_d)
+        s = (jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+        s = s * scale                                # (H, page_w), no soft cap
+        kv_pos = w * page_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p.astype(ckv.dtype), ckv,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(w == n_w - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def mla_pallas_paged(q_abs, q_rope, ckv_pages, krope_pages, page_table,
+                     lengths, *, scale: float,
+                     interpret: Optional[bool] = None):
+    """Latent-space paged MLA decode.
+
+    q_abs (B, H, r) — queries pre-absorbed through W_uk (for head-sparse
+    gather decode, H is k_sel pre-gathered rows); q_rope (B, H, rope_d);
+    ckv_pages (P, page_w, r) / krope_pages (P, page_w, rope_d) — the
+    physical latent pool; page_table (B, max_pages) int32 (sink-padded);
+    lengths (B,); ``scale`` the static (nope + rope_d) ** -0.5 logit scale.
+
+    Returns latent context ctx (B, H, r) in q_abs.dtype; the caller
+    expands ``ctx . W_uv`` outside (a tiny rank-r GEMM).  Sequences with
+    length 0 produce zero rows.
+    """
+    B, H, r = q_abs.shape
+    P, page_w, _ = ckv_pages.shape
+    rope_d = q_rope.shape[-1]
+    max_pages = page_table.shape[1]
+    interpret = _resolve_interpret(interpret)
+    grid = (B, max_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, r), lambda b, w, pt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, H, rope_d), lambda b, w, pt, ln: (b, 0, 0)),
+            # one physical latent page, routed through the page table
+            pl.BlockSpec((1, page_w, r), lambda b, w, pt, ln: (pt[b, w], 0, 0)),
+            pl.BlockSpec((1, page_w, rope_d),
+                         lambda b, w, pt, ln: (pt[b, w], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, r), lambda b, w, pt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, r), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_mla_paged_kernel, page_w=page_w,
+                               scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, r), q_abs.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q_abs, q_rope, ckv_pages, krope_pages)
+
+
+# ------------------------------------------------------- paged MLA chunk ---
+def _mla_chunk_paged_kernel(pr_ref, meta_ref, qa_ref, qr_ref, ckv_ref, kr_ref,
+                            o_ref, acc_ref, m_ref, l_ref, *, page_w: int,
+                            heads: int, scale: float, window):
+    w = pl.program_id(0)
+    n_w = pl.num_programs(0)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    offset = meta_ref[0]
+    end = meta_ref[0] + meta_ref[1]
+
+    @pl.when(w * page_w < end)
+    def _page():
+        qa = qa_ref[...]                             # (C*H, r)
+        qr = qr_ref[...]                             # (C*H, rope_d)
+        ckv = ckv_ref[0]                             # (page_w, r)
+        kr = kr_ref[0]
+        s = (jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+        s = s * scale
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // heads
+        kv_pos = w * page_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        limit = offset + row
+        mask = kv_pos <= limit
+        if window is not None:
+            mask &= (limit - kv_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p.astype(ckv.dtype), ckv,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(w == n_w - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def mla_chunk_pallas_paged(q_abs, q_rope, ckv_pages, krope_pages, page_row,
+                           meta, *, heads: int, scale: float,
+                           interpret: Optional[bool] = None, window=None):
+    """Chunked-prefill MLA attention streaming one slot's latent pages.
+
+    q_abs (C*H, r) — chunk queries pre-absorbed through W_uk, row
+    ``c * heads + h``; q_rope (C*H, rope_d); ckv_pages (P, page_w, r) /
+    krope_pages (P, page_w, rope_d) — the pool AFTER the chunk's latent
+    writes; page_row (kp,) int32 — the slot's page-table row truncated to
+    the kw bucket; meta (2,) int32 = [offset, n_valid].  Grid (kp,); pages
+    at or past offset + n_valid are skipped.  Returns latent ctx
+    (C*H, r); rows with c >= n_valid are garbage padding.
+    """
+    R, r = q_abs.shape
+    P, page_w, _ = ckv_pages.shape
+    rope_d = q_rope.shape[-1]
+    kp = page_row.shape[0]
+    interpret = _resolve_interpret(interpret)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(kp,),
+        in_specs=[
+            pl.BlockSpec((R, r), lambda w, pr, meta: (0, 0)),
+            pl.BlockSpec((R, rope_d), lambda w, pr, meta: (0, 0)),
+            pl.BlockSpec((1, page_w, r), lambda w, pr, meta: (pr[w], 0, 0)),
+            pl.BlockSpec((1, page_w, rope_d),
+                         lambda w, pr, meta: (pr[w], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, r), lambda w, pr, meta: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R, r), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_mla_chunk_paged_kernel, page_w=page_w,
+                               heads=heads, scale=float(scale),
+                               window=int(window) if window else None)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, r), q_abs.dtype),
+        interpret=interpret,
+    )(page_row, meta, q_abs, q_rope, ckv_pages, krope_pages)

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the paged MLA Pallas kernels."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mla.kernel import mla_chunk_pallas_paged, mla_pallas_paged
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_paged_attention(q_abs, q_rope, ckv_pages, krope_pages, page_table,
+                        lengths, *, scale: float,
+                        interpret: Optional[bool] = None):
+    """Latent context over a paged MLA cache (see mla_pallas_paged).
+
+    q_abs (B, H, r); q_rope (B, H, rope_d); ckv_pages (P, page_w, r);
+    krope_pages (P, page_w, rope_d); page_table (B, max_pages) int32
+    (sink-padded); lengths (B,).  Returns ctx (B, H, r) — the caller
+    applies the W_uv output expansion.
+    """
+    return mla_pallas_paged(q_abs, q_rope, ckv_pages, krope_pages,
+                            page_table.astype(jnp.int32),
+                            lengths.astype(jnp.int32),
+                            scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("heads", "scale", "interpret", "window"))
+def mla_paged_chunk_attention(q_abs, q_rope, ckv_pages, krope_pages,
+                              page_row, offset, n_valid, *, heads: int,
+                              scale: float,
+                              interpret: Optional[bool] = None, window=None):
+    """Chunk-prefill latent context over one slot's pages (see
+    mla_chunk_pallas_paged).
+
+    q_abs (C, H, r); q_rope (C, H, rope_d); page_row (kp,) int32;
+    offset/n_valid traced int32 scalars.  Returns ctx (C, H, r); rows
+    >= n_valid are padding garbage the caller drops.
+    """
+    C, H, r = q_abs.shape
+    rope_d = q_rope.shape[-1]
+    meta = jnp.stack([offset, n_valid]).astype(jnp.int32)
+    ctx = mla_chunk_pallas_paged(q_abs.reshape(C * H, r),
+                                 q_rope.reshape(C * H, rope_d),
+                                 ckv_pages, krope_pages,
+                                 page_row.astype(jnp.int32), meta,
+                                 heads=heads, scale=scale,
+                                 interpret=interpret, window=window)
+    return ctx.reshape(C, H, r)

@@ -1,7 +1,11 @@
-from repro.kernels.sha.ops import (select_group_attention,
+from repro.kernels.sha.ops import (paged_chunk_attention,
+                                   select_group_attention,
                                    select_head_attention,
-                                   select_head_attention_paged)
+                                   select_head_attention_hm,
+                                   select_head_attention_paged,
+                                   select_head_attention_paged_quant)
 from repro.kernels.sha.ref import sha_ref
 
-__all__ = ["select_head_attention", "select_head_attention_paged",
-           "select_group_attention", "sha_ref"]
+__all__ = ["select_head_attention", "select_head_attention_hm",
+           "select_head_attention_paged", "select_head_attention_paged_quant",
+           "paged_chunk_attention", "select_group_attention", "sha_ref"]

@@ -5,11 +5,14 @@ TPU adaptation (DESIGN §3): the per-sequence ``batch_head_index`` is a
 scalar-prefetch operand; it drives the K/V BlockSpec index_maps, so ONLY
 active groups' KV blocks are streamed HBM->VMEM — the paper's I/O saving.
 
-Two variants:
+Four variants:
 
-* ``sha_pallas_compact`` — contiguous per-sequence KV (B, W, G, dh).
-  Grid = (B, k_sel, ceil(W / block_w)); every KV block of every sequence
-  is visited, masked by ``lengths``.
+* ``sha_pallas_compact`` — contiguous per-sequence KV in the cache-native
+  head-major layout (B, G, W, dh); the BlockSpec index maps fold the old
+  per-step ``transpose(0, 2, 1, 3)`` away, so steady-state decode streams
+  the serve cache with zero layout copies.  Grid =
+  (B, k_sel, ceil(W / block_w)); every KV block of every sequence is
+  visited, masked by ``lengths``.
 * ``sha_pallas_paged`` — paged KV pool (P, G, page_w, dh) indexed through a
   scalar-prefetched per-slot page table.  Grid = (B, k_sel, max_pages);
   pages at or past ``lengths[b]`` contribute nothing (compute is skipped
@@ -18,10 +21,20 @@ Two variants:
   streaming stale pages).  HBM->VMEM traffic is therefore proportional to
   ``k_sel x ceil(length / page_w)`` per sequence — decode attention cost
   scales with tokens actually in flight, not the maximum cache width.
+* ``sha_pallas_paged_quant`` — the paged variant over an int8 pool:
+  codes (P, G, page_w, dh) int8 + per-(page, g, position) f32 scales
+  (P, G, page_w) ride as separate operands through the SAME page-table
+  index maps, and dequantization happens in-kernel after the page lands
+  in VMEM.  kv_quant decode therefore reads ~half the bytes AND skips
+  dead pages, instead of gathering a contiguous view and dequantizing it.
+* ``sha_chunk_pallas_paged`` — chunked-prefill attention that streams only
+  the allocated pages of one slot (grid (G, kw/page_w), causal mask built
+  in-kernel from the chunk's global row offset), replacing the gather of
+  the full static key-extent bucket.
 
-Both use online-softmax accumulation in VMEM scratch across the innermost
-(kv) grid dimension and write output compact (B, k_sel, qpg, dh); the
-wrappers scatter to (B, G, qpg, dh).
+All use online-softmax accumulation in VMEM scratch across the innermost
+(kv) grid dimension; the decode variants write output compact
+(B, k_sel, qpg, dh) and the wrappers scatter to (B, G, qpg, dh).
 """
 from __future__ import annotations
 
@@ -56,8 +69,8 @@ def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0, 0]                                  # (qpg, dh)
-    k = k_ref[0, :, 0]                               # (block_w, dh)
-    v = v_ref[0, :, 0]
+    k = k_ref[0, 0]                                  # (block_w, dh)
+    v = v_ref[0, 0]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -84,23 +97,26 @@ def _sha_kernel(bhi_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 def sha_pallas_compact(q, k, v, bhi, lengths, *, block_w: int = 256,
                        interpret: Optional[bool] = None, soft_cap: float = 0.0):
-    """q (B,G,qpg,dh), k/v (B,W,G,dh), bhi (B,k_sel), lengths (B,)
-    -> compact O (B, k_sel, qpg, dh).
+    """q (B,G,qpg,dh), k/v (B,G,W,dh) head-major (the serve-cache layout),
+    bhi (B,k_sel), lengths (B,) -> compact O (B, k_sel, qpg, dh).
 
-    ``block_w`` is clamped to W; when the width is not a multiple of the
-    block, K/V are zero-padded up to the next block boundary — the padded
-    tail sits at positions >= W, which the ``lengths`` mask (lengths <= W)
-    already excludes, so no caller-visible semantics change.
+    The K/V index maps select (batch, group) directly in the cache-native
+    head-major layout, so decode feeds the cache to the kernel without a
+    per-step transpose.  ``block_w`` is clamped to W; when the width is not
+    a multiple of the block, K/V are zero-padded up to the next block
+    boundary — the padded tail sits at positions >= W, which the
+    ``lengths`` mask (lengths <= W) already excludes, so no caller-visible
+    semantics change.
     """
     B, G, qpg, dh = q.shape
-    W = k.shape[1]
+    W = k.shape[2]
     k_sel = bhi.shape[1]
     interpret = _resolve_interpret(interpret)
     block_w = min(block_w, W)
     if W % block_w:
         pad = block_w - W % block_w
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
         W += pad
     grid = (B, k_sel, W // block_w)
     scale = dh ** -0.5
@@ -111,10 +127,10 @@ def sha_pallas_compact(q, k, v, bhi, lengths, *, block_w: int = 256,
         in_specs=[
             pl.BlockSpec((1, 1, qpg, dh),
                          lambda b, j, w, bhi, ln: (b, bhi[b, j], 0, 0)),
-            pl.BlockSpec((1, block_w, 1, dh),
-                         lambda b, j, w, bhi, ln: (b, w, bhi[b, j], 0)),
-            pl.BlockSpec((1, block_w, 1, dh),
-                         lambda b, j, w, bhi, ln: (b, w, bhi[b, j], 0)),
+            pl.BlockSpec((1, 1, block_w, dh),
+                         lambda b, j, w, bhi, ln: (b, bhi[b, j], w, 0)),
+            pl.BlockSpec((1, 1, block_w, dh),
+                         lambda b, j, w, bhi, ln: (b, bhi[b, j], w, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, qpg, dh),
                                lambda b, j, w, bhi, ln: (b, j, 0, 0)),
@@ -227,3 +243,214 @@ def sha_pallas_paged(q, k_pages, v_pages, bhi, page_table, lengths, *,
         out_shape=jax.ShapeDtypeStruct((B, k_sel, qpg, dh), q.dtype),
         interpret=interpret,
     )(page_table, bhi, lengths, q, k_pages, v_pages)
+
+
+# ------------------------------------------------- paged SHA, int8 pool ---
+def _sha_paged_quant_kernel(pt_ref, bhi_ref, len_ref, q_ref, k_ref, v_ref,
+                            ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                            page_w: int, scale: float, soft_cap: float):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+    n_w = pl.num_programs(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(w * page_w < length)
+    def _page():
+        q = q_ref[0, 0]                              # (qpg, dh) f32
+        # in-kernel dequantization: the page lands in VMEM as int8 codes +
+        # per-position f32 scales (half the HBM bytes of an fp page), and
+        # is widened only on-chip.
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q.astype(jnp.float32), k,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if soft_cap:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        kv_pos = w * page_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(w == n_w - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def sha_pallas_paged_quant(q, k_pages, v_pages, k_scale, v_scale, bhi,
+                           page_table, lengths, *,
+                           interpret: Optional[bool] = None,
+                           soft_cap: float = 0.0):
+    """Length-proportional SHA decode over an int8 paged KV pool.
+
+    q (B, G, qpg, dh); k_pages/v_pages (P, G, page_w, dh) int8 codes;
+    k_scale/v_scale (P, G, page_w) f32 per-position dequant scales — four
+    operands all routed through the same scalar-prefetched ``page_table``
+    (B, max_pages), so a dead page costs nothing in any of them; bhi
+    (B, k_sel); lengths (B,).  Dequantization (codes * scale) runs inside
+    the kernel after the page is resident in VMEM.
+
+    Returns compact O (B, k_sel, qpg, dh).  Note the scale blocks are
+    (1, 1, page_w) — narrower than the f32 (8, 128) native tile, fine in
+    interpret mode; a Mosaic build wanting full lanes can widen them to
+    (1, 1, page_w, 1) without touching the math.
+    """
+    B, G, qpg, dh = q.shape
+    P, _, page_w, _ = k_pages.shape
+    k_sel = bhi.shape[1]
+    max_pages = page_table.shape[1]
+    interpret = _resolve_interpret(interpret)
+    grid = (B, k_sel, max_pages)
+    scale = dh ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qpg, dh),
+                         lambda b, j, w, pt, bhi, ln: (b, bhi[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, page_w, dh),
+                         lambda b, j, w, pt, bhi, ln: (pt[b, w], bhi[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, page_w, dh),
+                         lambda b, j, w, pt, bhi, ln: (pt[b, w], bhi[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, page_w),
+                         lambda b, j, w, pt, bhi, ln: (pt[b, w], bhi[b, j], 0)),
+            pl.BlockSpec((1, 1, page_w),
+                         lambda b, j, w, pt, bhi, ln: (pt[b, w], bhi[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpg, dh),
+                               lambda b, j, w, pt, bhi, ln: (b, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qpg, dh), jnp.float32),
+            pltpu.VMEM((qpg, 1), jnp.float32),
+            pltpu.VMEM((qpg, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_sha_paged_quant_kernel, page_w=page_w,
+                               scale=scale, soft_cap=float(soft_cap or 0.0))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, k_sel, qpg, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, bhi, lengths, q, k_pages, v_pages, k_scale, v_scale)
+
+
+# ------------------------------------------------- paged chunk attention ---
+def _sha_chunk_paged_kernel(pr_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
+                            acc_ref, m_ref, l_ref, *, page_w: int, qpg: int,
+                            scale: float, soft_cap: float, window):
+    w = pl.program_id(1)
+    n_w = pl.num_programs(1)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    offset = meta_ref[0]
+    end = meta_ref[0] + meta_ref[1]                  # offset + n_valid
+
+    @pl.when(w * page_w < end)                       # skip unallocated pages
+    def _page():
+        q = q_ref[0]                                 # (C*qpg, dh)
+        k = k_ref[0, 0]                              # (page_w, dh)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if soft_cap:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        # global causal mask at query rows offset + (row // qpg); padding
+        # rows (c >= n_valid) only ever see visited (written) pages, so
+        # their garbage output is finite and the caller drops it.
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // qpg
+        kv_pos = w * page_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        limit = offset + row
+        mask = kv_pos <= limit
+        if window is not None:
+            mask &= (limit - kv_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(w == n_w - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def sha_chunk_pallas_paged(q, k_pages, v_pages, page_row, meta, *,
+                           qpg: int, interpret: Optional[bool] = None,
+                           soft_cap: float = 0.0, window=None):
+    """Chunked-prefill attention streaming one slot's allocated pages.
+
+    q (G, C*qpg, dh) — the chunk's queries regrouped kv-head-major, row
+    ``c * qpg + i`` holding query head i of chunk row c; k_pages/v_pages
+    (P, G, page_w, dh); page_row (kp,) int32 — the slot's page-table row
+    truncated to the kw bucket (kp = kw // page_w, unallocated entries =
+    sink id); meta (2,) int32 = [offset, n_valid].  Grid is (G, kp): pages
+    at or past ``offset + n_valid`` are skipped under ``pl.when`` (their
+    index collapses onto whatever page_row holds there, conventionally the
+    sink), so a chunk scans ceil((offset + n_valid) / page_w) pages per
+    group instead of attending the full gathered kw bucket.
+
+    Returns (G, C*qpg, dh); rows with c >= n_valid are garbage padding.
+    """
+    G, R, dh = q.shape
+    P, _, page_w, _ = k_pages.shape
+    kp = page_row.shape[0]
+    interpret = _resolve_interpret(interpret)
+    grid = (G, kp)
+    scale = dh ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, R, dh), lambda g, w, pr, meta: (g, 0, 0)),
+            pl.BlockSpec((1, 1, page_w, dh),
+                         lambda g, w, pr, meta: (pr[w], g, 0, 0)),
+            pl.BlockSpec((1, 1, page_w, dh),
+                         lambda g, w, pr, meta: (pr[w], g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, dh), lambda g, w, pr, meta: (g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R, dh), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _sha_chunk_paged_kernel, page_w=page_w, qpg=qpg, scale=scale,
+        soft_cap=float(soft_cap or 0.0),
+        window=int(window) if window else None)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, R, dh), q.dtype),
+        interpret=interpret,
+    )(page_row, meta, q, k_pages, v_pages)

@@ -7,7 +7,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sha.kernel import sha_pallas_compact, sha_pallas_paged
+from repro.kernels.sha.kernel import (sha_chunk_pallas_paged,
+                                      sha_pallas_compact, sha_pallas_paged,
+                                      sha_pallas_paged_quant)
 
 
 def _scatter_groups(o_sel, bhi, B, G, qpg, dh):
@@ -29,7 +31,27 @@ def select_head_attention(q, k, v, bhi, lengths, *, block_w: int = 256,
     tanh logit capping inside the kernel (0 = off).  ``interpret=None``
     defers to ``runtime.pallas_interpret()`` (compile on TPU, interpret
     elsewhere).
+
+    The kernel itself consumes the head-major (B, G, W, dh) cache layout;
+    this wrapper keeps the historical width-major K/V interface for tests
+    and benchmarks.  Decode calls :func:`select_head_attention_hm` with the
+    serve cache directly and pays no layout copy.
     """
+    o_sel = select_head_attention_hm(q, k.transpose(0, 2, 1, 3),
+                                     v.transpose(0, 2, 1, 3), bhi, lengths,
+                                     block_w=block_w, interpret=interpret,
+                                     soft_cap=soft_cap)
+    return o_sel
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret", "soft_cap"))
+def select_head_attention_hm(q, k, v, bhi, lengths, *, block_w: int = 256,
+                             interpret: Optional[bool] = None,
+                             soft_cap: float = 0.0):
+    """:func:`select_head_attention` over head-major K/V (B, G, W, dh) —
+    the contiguous serve-cache layout, streamed with zero layout copies
+    (the old per-step ``transpose(0, 2, 1, 3)`` is folded into the
+    BlockSpec index maps)."""
     B, G, qpg, dh = q.shape
     o_sel = sha_pallas_compact(q, k, v, bhi, lengths,
                                block_w=block_w, interpret=interpret,
@@ -51,6 +73,51 @@ def select_head_attention_paged(q, k_pages, v_pages, bhi, page_table, lengths,
     o_sel = sha_pallas_paged(q, k_pages, v_pages, bhi, page_table, lengths,
                              interpret=interpret, soft_cap=soft_cap)
     return _scatter_groups(o_sel, bhi, B, G, qpg, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "soft_cap"))
+def select_head_attention_paged_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                      bhi, page_table, lengths, *,
+                                      interpret: Optional[bool] = None,
+                                      soft_cap: float = 0.0):
+    """Length-proportional SHA over an int8 paged pool with in-kernel
+    dequantization (see sha_pallas_paged_quant).
+
+    q (B, G, qpg, dh); k_pages/v_pages (P, G, page_w, dh) int8;
+    k_scale/v_scale (P, G, page_w) f32; page_table (B, max_pages) int32
+    (sink-padded); bhi (B, k_sel); lengths (B,).  Returns (B, G, qpg, dh)
+    with inactive groups zero.
+    """
+    B, G, qpg, dh = q.shape
+    o_sel = sha_pallas_paged_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                   bhi, page_table, lengths,
+                                   interpret=interpret, soft_cap=soft_cap)
+    return _scatter_groups(o_sel, bhi, B, G, qpg, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "soft_cap", "window"))
+def paged_chunk_attention(q, k_pages, v_pages, page_row, offset, n_valid, *,
+                          interpret: Optional[bool] = None,
+                          soft_cap: float = 0.0, window=None):
+    """Chunked-prefill attention over one slot's allocated pages.
+
+    q (C, H, dh) — the chunk's queries (rows >= n_valid are padding);
+    k_pages/v_pages (P, G, page_w, dh) — the physical pool AFTER the
+    chunk's K/V writes; page_row (kp,) int32 — the slot's page-table row
+    truncated to the kw bucket; offset/n_valid traced int32 scalars.
+    Streams ceil((offset + n_valid) / page_w) pages per group instead of
+    gathering the full kw bucket.  Returns (C, H, dh).
+    """
+    C, H, dh = q.shape
+    G = k_pages.shape[1]
+    qpg = H // G
+    qg = q.reshape(C, G, qpg, dh).transpose(1, 0, 2, 3).reshape(G, C * qpg, dh)
+    meta = jnp.stack([offset, n_valid]).astype(jnp.int32)
+    o = sha_chunk_pallas_paged(qg, k_pages, v_pages,
+                               page_row.astype(jnp.int32), meta, qpg=qpg,
+                               interpret=interpret, soft_cap=soft_cap,
+                               window=window)
+    return o.reshape(G, C, qpg, dh).transpose(1, 0, 2, 3).reshape(C, H, dh)
 
 
 select_group_attention = select_head_attention  # GQA alias (paper SGA)

@@ -145,7 +145,14 @@ def _write_paged(buf, update, pos, page_table, page_w: int):
 def _gather_pages(buf, page_table):
     """Contiguous per-slot view of paged KV: (P, Hkv, page_w[, dh]) +
     page_table (B, max_pages) -> (B, Hkv, max_pages*page_w[, dh]).  Sink
-    entries surface garbage positions; callers mask with ``lengths``."""
+    entries surface garbage positions; callers mask with ``lengths``.
+
+    Only the plain-fp XLA decode impls (dense/gather/mask policies without
+    the Pallas kernel) still read through this view — it is the parity
+    oracle the paged kernel tests compare against.  kv_quant, MLA, and
+    ``impl="kernel"`` paths (decode AND prefill chunks) stream pages
+    natively; XLA-impl fp chunks gather their slot's kw bucket directly
+    from ``page_row`` (single-slot, not through this helper)."""
     g = buf[page_table]                       # (B, Sp, Hkv, pw[, dh])
     g = jnp.moveaxis(g, 1, 2)                 # (B, Hkv, Sp, pw[, dh])
     return g.reshape(g.shape[:2] + (-1,) + g.shape[4:])
@@ -301,7 +308,8 @@ def _chunk_scores_mask(offset, C, kw, window):
 
 
 def attn_chunk(p, x, cfg, *, cos, sin, cache, slot, offset, n_valid, kw,
-               page_row=None) -> Tuple[jnp.ndarray, dict]:
+               page_row=None, sha_kernel: bool = False
+               ) -> Tuple[jnp.ndarray, dict]:
     """One prefill chunk appended into an existing serve cache at a nonzero
     offset — the substrate for chunked prefill interleaved with decode.
 
@@ -342,6 +350,19 @@ def attn_chunk(p, x, cfg, *, cos, sin, cache, slot, offset, n_valid, kw,
         new_cache = {"k": cache["k"].at[phys, :, within].set(k0),
                      "v": cache["v"].at[phys, :, within].set(v0)}
         kp = kw // page_w                          # kw is a page multiple
+        if sha_kernel:
+            # stream only this slot's allocated pages — the Pallas chunk
+            # kernel skips pages at or past offset + n_valid, so a chunk
+            # reads ceil((offset + n) / page_w) pages, not the full bucket
+            from repro.kernels.sha import paged_chunk_attention
+            out = paged_chunk_attention(
+                q[0], new_cache["k"], new_cache["v"], page_row[:kp],
+                jnp.asarray(offset), jnp.asarray(n_valid),
+                soft_cap=float(cfg.logit_soft_cap or 0.0),
+                window=cfg.sliding_window)
+            return linear(out.reshape(B, C, H * dh), p["wo"]), new_cache
+        # XLA impls keep the gathered-bucket parity path (cheap under XLA,
+        # and the interpret-mode chunk kernel would dominate CPU step time)
         kc = jnp.moveaxis(new_cache["k"][page_row[:kp]], 1, 0)
         kc = kc.reshape(1, Hkv, kw, dh)
         vc = jnp.moveaxis(new_cache["v"][page_row[:kp]], 1, 0)
@@ -400,9 +421,21 @@ def mla_chunk(p, x, cfg, *, cos, sin, cache, slot, offset, n_valid, kw,
         within = jnp.mod(pos, page_w)
         new_cache = {"ckv": cache["ckv"].at[phys, within].set(ckv0),
                      "krope": cache["krope"].at[phys, within].set(krope0)}
+        # stream the slot's latent pages via the Pallas MLA chunk kernel
+        # (absorbed contraction; pages past offset + n_valid are skipped)
+        from repro.kernels.mla import mla_paged_chunk_attention
         kp = kw // page_w
-        ckv_c = new_cache["ckv"][page_row[:kp]].reshape(1, kw, r)
-        krope_c = new_cache["krope"][page_row[:kp]].reshape(1, kw, rope_d)
+        wkv_b = p["wkv_b"].reshape(r, H, nope + vd)
+        w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+        q_abs = jnp.einsum("chn,rhn->chr", q_nope[0],
+                           w_uk.astype(q_nope.dtype))
+        ctx = mla_paged_chunk_attention(
+            q_abs, q_rope[0], new_cache["ckv"], new_cache["krope"],
+            page_row[:kp], jnp.asarray(offset), jnp.asarray(n_valid),
+            heads=H, scale=(nope + rope_d) ** -0.5,
+            window=cfg.sliding_window)
+        out = jnp.einsum("chr,rhv->chv", ctx, w_uv.astype(ctx.dtype))
+        return linear(out.reshape(B, C, H * vd), p["wo"]), new_cache
     else:
         W = cache["ckv"].shape[1]
         wpos = jnp.where(ok, pos, W)
@@ -484,21 +517,49 @@ def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
     else:
         valid = jnp.asarray(slot_pos >= 0).at[jnp.mod(pos, W)].set(True)  # (W,)
 
-    if (sha_kernel and not cfg.kv_quant
-            and head_select is not None and head_select[0] == "gather"):
+    if paged and cfg.kv_quant:
+        # int8 pool: the quant kernel streams codes + scales page-by-page
+        # with in-kernel dequantization, so EVERY selection mode (dense /
+        # mask / gather / kernel) reads half the bytes and skips dead pages
+        # — no paged kv_quant decode ever gathers a contiguous view.
+        from repro.kernels.sha import select_head_attention_paged_quant
+        lengths = (pos + 1).astype(jnp.int32)
+        qg = q.reshape(B, Hkv, qpg, dh)
+        is_gather = head_select is not None and head_select[0] == "gather"
+        bhi = (head_select[1] if is_gather else
+               jnp.broadcast_to(jnp.arange(Hkv, dtype=jnp.int32)[None, :],
+                                (B, Hkv)))
+        out = select_head_attention_paged_quant(
+            qg, new_cache["k"], new_cache["v"], new_cache["k_scale"],
+            new_cache["v_scale"], bhi, page_table, lengths,
+            soft_cap=float(cfg.logit_soft_cap or 0.0))
+        if not is_gather:
+            out = _apply_group_mask(out, head_select)
+        out = out.reshape(B, 1, H * dh).astype(x.dtype)
+        return linear(out, p["wo"]), new_cache
+
+    if sha_kernel and not cfg.kv_quant and (
+            (head_select is not None and head_select[0] == "gather")
+            or (paged and head_select is None)):
         # Pallas Selective Head Attention: per-sequence ``lengths`` drive the
         # kernel's ragged masking (lengths[b] == valid prefix of row b).
-        from repro.kernels.sha import (select_head_attention,
+        # Paged force-dense layers (head_select None, e.g. the paper's dense
+        # first attention layer) also stream here with bhi = all groups, so
+        # an impl="kernel" serve never gathers the pool.
+        from repro.kernels.sha import (select_head_attention_hm,
                                        select_head_attention_paged)
         lengths = ((pos + 1) if per_seq
                    else jnp.full((B,), pos + 1)).astype(jnp.int32)
         qg = q.reshape(B, Hkv, qpg, dh)
         soft_cap = float(cfg.logit_soft_cap or 0.0)
+        bhi = (head_select[1] if head_select is not None else
+               jnp.broadcast_to(jnp.arange(Hkv, dtype=jnp.int32)[None, :],
+                                (B, Hkv)))
         if paged:
             # pool layout streams straight into the kernel: no gather, and
             # only pages below lengths[b] are visited (length-proportional)
             out = select_head_attention_paged(qg, new_cache["k"],
-                                              new_cache["v"], head_select[1],
+                                              new_cache["v"], bhi,
                                               page_table, lengths,
                                               soft_cap=soft_cap)
         else:
@@ -506,20 +567,18 @@ def attn_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos,
             # pad-to-block fallback is only for widths with no sane divisor
             block_w = next((bw for bw in (256, 128, 64, 32, 16)
                             if W % bw == 0), 256)
-            out = select_head_attention(qg, new_cache["k"].transpose(0, 2, 1, 3),
-                                        new_cache["v"].transpose(0, 2, 1, 3),
-                                        head_select[1], lengths,
-                                        block_w=block_w, soft_cap=soft_cap)
+            # head-major kernel: the serve cache layout feeds the BlockSpec
+            # index maps directly — no per-step transpose
+            out = select_head_attention_hm(qg, new_cache["k"],
+                                           new_cache["v"], bhi, lengths,
+                                           block_w=block_w, soft_cap=soft_cap)
         out = out.reshape(B, 1, H * dh).astype(x.dtype)
         return linear(out, p["wo"]), new_cache
 
-    if paged:  # contiguous per-slot views for the XLA paths
+    if paged:  # contiguous per-slot views: the XLA parity-oracle paths
         kc = _gather_pages(new_cache["k"], page_table)
         vc = _gather_pages(new_cache["v"], page_table)
         ksc = vsc = None
-        if cfg.kv_quant:
-            ksc = _gather_pages(new_cache["k_scale"], page_table)
-            vsc = _gather_pages(new_cache["v_scale"], page_table)
     else:
         kc, vc = new_cache["k"], new_cache["v"]
         ksc, vsc = new_cache.get("k_scale"), new_cache.get("v_scale")
@@ -625,8 +684,10 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None,
     (paper-faithful port of the reference impl); absorbed folds wkv_b into
     the query/output — the beyond-paper optimization measured in §Perf.
     With ``page_table`` the latent cache is a physical page pool (P, page_w,
-    r); writes scatter into the slot's current page and the attention math
-    runs over a gathered contiguous view.
+    r); writes scatter into the slot's current page and the attention runs
+    in the Pallas paged MLA kernel, which streams latent pages through the
+    page table (absorbed contraction order, length-proportional I/O) — no
+    gathered contiguous view.
     """
     m = cfg.mla
     B = x.shape[0]
@@ -653,7 +714,6 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None,
     assert not paged or per_seq, "paged cache requires per-sequence positions"
     if paged:
         page_w = cache["ckv"].shape[1]
-        W = page_table.shape[1] * page_w                            # logical
         bidx = jnp.arange(B)
         phys = page_table[bidx, pos // page_w]
         off = jnp.mod(pos, page_w)
@@ -661,10 +721,8 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None,
         krope_p = cache["krope"].at[phys, off].set(
             k_rope.astype(cache["krope"].dtype))
         new_cache = {"ckv": ckv_p, "krope": krope_p}
-        # contiguous per-slot views for the attention math below
-        ckv_c = ckv_p[page_table].reshape(B, W, -1)
-        krope_c = krope_p[page_table].reshape(B, W, -1)
-        valid = jnp.arange(W)[None, :] <= pos[:, None]              # (B, W)
+        valid = None       # the paged kernel masks by lengths itself
+        ckv_c = krope_c = None
     else:
         W = cache["ckv"].shape[1]
         if per_seq:
@@ -682,7 +740,9 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None,
                 cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), slot, axis=1)
             valid = jnp.asarray(slot_pos >= 0).at[slot].set(True)
         new_cache = {"ckv": ckv_c, "krope": krope_c}
-    vmask = valid[None, None] if valid.ndim == 1 else valid[:, None]
+    vmask = None
+    if valid is not None:
+        vmask = valid[None, None] if valid.ndim == 1 else valid[:, None]
 
     wkv_b = p["wkv_b"].reshape(r, H, nope + vd)
     w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]               # (r,H,nope),(r,H,vd)
@@ -700,6 +760,31 @@ def mla_decode(p, x, cfg, *, cos, sin, cache, slot_pos, pos, head_select=None,
         w_uv_s = jnp.einsum("bkh,rhv->brkv", onehot, w_uv.astype(onehot.dtype))
     else:
         q_rope_h = q_rope
+
+    if paged:
+        # Stream the latent page pool directly (no gathered view): the
+        # Pallas kernel runs the absorbed contraction order — the same
+        # attention reassociated — so it serves both cfg.mla.absorb
+        # settings; only pages below lengths[b] are visited.
+        from repro.kernels.mla import mla_paged_attention
+        lengths = (pos + 1).astype(jnp.int32)
+        if gather:
+            q_abs = jnp.einsum("bhn,brhn->bhr", q_nope,
+                               w_uk_s.astype(q_nope.dtype))
+        else:
+            q_abs = jnp.einsum("bhn,rhn->bhr", q_nope,
+                               w_uk.astype(q_nope.dtype))
+        ctx = mla_paged_attention(q_abs, q_rope_h, new_cache["ckv"],
+                                  new_cache["krope"], page_table, lengths,
+                                  scale=scale)
+        if gather:
+            o_sel = jnp.einsum("bhr,brhv->bhv", ctx, w_uv_s.astype(ctx.dtype))
+            out_h = jnp.einsum("bkh,bkv->bhv", onehot.astype(o_sel.dtype), o_sel)
+        else:
+            out_h = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(ctx.dtype))
+            if head_select is not None:  # mask
+                out_h = out_h * head_select[1][..., None].astype(out_h.dtype)
+        return linear(out_h.reshape(B, 1, H * vd), p["wo"]), new_cache
 
     if m.absorb:
         # scores = (q_nope W_uk^T) . ckv  +  q_rope . k_rope

@@ -360,16 +360,19 @@ def _layer_full(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
 
 
 def _layer_chunk(lp, spec, x, *, cfg, cos, sin, cache, slot, offset, n_valid,
-                 kw, page_row):
+                 kw, page_row, sha_kernel=False):
     """One layer over a prefill chunk.  Serving prefill is dense (no policy
     or routers — same as the whole-prompt serving prefill), so the only
     difference from _layer_full is the cache: K/V appends into the slot's
-    pool cache at ``offset`` instead of a fresh per-request buffer."""
+    pool cache at ``offset`` instead of a fresh per-request buffer.
+    ``sha_kernel`` (policy.impl == "kernel") routes paged fp chunks through
+    the Pallas paged chunk kernel; MLA chunks always stream."""
     h = apply_norm(lp["norm1"], x, cfg.norm)
     if spec.mixer == "attn":
         out, new_c = attn.attn_chunk(lp["mixer"], h, cfg, cos=cos, sin=sin,
                                      cache=cache, slot=slot, offset=offset,
-                                     n_valid=n_valid, kw=kw, page_row=page_row)
+                                     n_valid=n_valid, kw=kw, page_row=page_row,
+                                     sha_kernel=sha_kernel)
     elif spec.mixer == "mla":
         out, new_c = attn.mla_chunk(lp["mixer"], h, cfg, cos=cos, sin=sin,
                                     cache=cache, slot=slot, offset=offset,
@@ -393,8 +396,9 @@ def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
     sel = _head_selection(spec, cfg, policy, router_p, h, "decode", force_dense)
 
     if spec.mixer == "attn":
-        sha = (policy is not None and policy.impl == "kernel"
-               and not force_dense)
+        # force_dense layers keep the flag: on a paged pool the kernel
+        # streams them densely (bhi = all groups) instead of gathering
+        sha = policy is not None and policy.impl == "kernel"
         out, new_c = attn.attn_decode(lp["mixer"], h, cfg, cos=cos, sin=sin,
                                       cache=cache, slot_pos=slot_pos, pos=pos,
                                       head_select=sel, sha_kernel=sha,
@@ -699,7 +703,7 @@ def chunked_prefill_unsupported(cfg: ModelConfig) -> Optional[str]:
 
 
 def prefill_chunk(params, cfg: ModelConfig, *, tokens, cache, slot, offset,
-                  n_valid, kw: int):
+                  n_valid, kw: int, policy=None):
     """One chunk of prefill appended into a serve cache (init_serve_cache).
 
     ``tokens`` (1, C) sit at global positions [offset, offset + C) of pool
@@ -731,7 +735,8 @@ def prefill_chunk(params, cfg: ModelConfig, *, tokens, cache, slot, offset,
         params, cfg, x, mode="chunk", policy=None, routers=None,
         cache=cache, cos=cos, sin=sin, slot_pos=None, pos=None, collect=False,
         chunk=dict(slot=slot, offset=offset, n_valid=n_valid, kw=kw,
-                   page_row=page_row))
+                   page_row=page_row,
+                   sha_kernel=policy is not None and policy.impl == "kernel"))
 
     logits = _lm_head(params, cfg, x)
     new_cache = {"layers": new_caches, "lengths": cache["lengths"],

@@ -46,6 +46,7 @@ from repro.models import (decode_step, forward, init_cache,
                           prepare_model_config)
 from repro.models.model import chunked_prefill_unsupported, prefill_chunk
 from repro.serving import sampling
+from repro.serving.io_accounting import attn_io_model
 from repro.serving.kv_pool import KVPool, PagedKVPool
 from repro.serving.params import (FINISH_ABORT, FINISH_REJECT, FINISH_STOP,
                                   InvalidRequestError, RequestOutput,
@@ -66,6 +67,8 @@ class EngineStats:
     tokens_decoded: int = 0
     prefill_chunks: int = 0          # chunk-prefill dispatches executed
     prefill_tokens: int = 0          # prompt tokens pushed through prefill
+    hbm_read_bytes: int = 0          # modeled KV-pool bytes read (paged)
+    gather_bytes_avoided: int = 0    # gathered-view bytes NOT materialized
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -96,6 +99,8 @@ class ServeReport:
     page_w: Optional[int] = None          # None = contiguous pool
     num_pages: Optional[int] = None
     pool_hbm_bytes: int = 0               # KV-cache bytes actually reserved
+    hbm_read_bytes: int = 0               # modeled KV bytes attention read
+    gather_bytes_avoided: int = 0         # gathered-view bytes NOT materialized
     # ------------------------------------------ latency / chunk accounting -
     # rid -> step clock at which the first token was sampled.  A rid is
     # *absent* (never 0) until its prefill completes — rejected requests and
@@ -147,6 +152,10 @@ class ServeReport:
         return self.pages_scanned / self.decode_steps_run if self.decode_steps_run else 0.0
 
     @property
+    def hbm_read_bytes_per_step(self) -> float:
+        return self.hbm_read_bytes / self.decode_steps_run if self.decode_steps_run else 0.0
+
+    @property
     def page_occupancy_mean(self) -> float:
         return self.occupancy_sum / self.decode_steps_run if self.decode_steps_run else 0.0
 
@@ -178,7 +187,8 @@ def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
 
     def _chunk(params, tokens, cache, slot, offset, n_valid, kw):
         return prefill_chunk(params, cfg, tokens=tokens, cache=cache,
-                             slot=slot, offset=offset, n_valid=n_valid, kw=kw)
+                             slot=slot, offset=offset, n_valid=n_valid, kw=kw,
+                             policy=policy)
 
     return (jax.jit(_prefill), jax.jit(_decode),
             jax.jit(_chunk, static_argnums=(6,)))
@@ -254,6 +264,13 @@ class EngineCore:
         if self.paged:
             self.report.page_w = self.pool.page_w
             self.report.num_pages = self.pool.num_pages
+            self._io = attn_io_model(
+                cfg, policy, page_w=self.pool.page_w,
+                pages_per_slot=self.pool.pages_per_slot,
+                max_batch=self.max_batch,
+                routers_present=routers is not None)
+        else:
+            self._io = None
         self.report.pool_hbm_bytes = self.pool.hbm_bytes()
         self.report.prefill_chunk = prefill_chunk
         self.report.max_step_tokens = max_step_tokens
@@ -469,11 +486,17 @@ class EngineCore:
             self.report.tokens_decoded += n_active
             self.report.decode_steps_run += 1
             if self.paged:   # live pages this step covers vs full width
-                self.report.pages_scanned += sum(
-                    sched.running[s].length // pool.page_w + 1
-                    for s in decoding)
+                live = sum(sched.running[s].length // pool.page_w + 1
+                           for s in decoding)
+                self.report.pages_scanned += live
                 self.report.pages_scanned_dense_equiv += (
                     n_active * pool.pages_per_slot)
+                if self._io is not None:
+                    read, avoided = self._io.decode_bytes(live)
+                    self.report.hbm_read_bytes += read
+                    self.report.gather_bytes_avoided += avoided
+                    self.stats.hbm_read_bytes += read
+                    self.stats.gather_bytes_avoided += avoided
                 self.report.peak_pages_in_use = max(
                     self.report.peak_pages_in_use, pool.pages_in_use)
                 self.report.occupancy_sum += pool.pages_in_use / pool.num_pages
@@ -533,6 +556,12 @@ class EngineCore:
         self.stats.prefill_tokens += n
         self.report.chunks_run += 1
         self.report.prefill_tokens += n
+        if self._io is not None:
+            read, avoided = self._io.chunk_bytes(kw, off + n)
+            self.report.hbm_read_bytes += read
+            self.report.gather_bytes_avoided += avoided
+            self.stats.hbm_read_bytes += read
+            self.stats.gather_bytes_avoided += avoided
         run.prefilled = off + n
         if run.prefilled < L:
             return []

@@ -1,0 +1,127 @@
+"""Host-side attention I/O model for the paged serving engine.
+
+The paper's decode-attention claim is an I/O claim: with head sparsity AND
+paging, a step reads ``k_sel x ceil(len / page_w)`` pages per sequence per
+layer instead of the full logical cache width.  PR 2 measured the *page
+scan* side (``pages_scanned`` vs dense-equivalent); this module turns the
+same host-side bookkeeping into bytes so the kernel-path work (native
+paged int8 / MLA / chunk kernels replacing ``_gather_pages``) is measured,
+not asserted:
+
+* ``hbm_read_bytes`` — KV-pool bytes the attention paths pull from HBM per
+  step, per the static per-layer routing the engine actually runs: layers
+  whose decode streams pages (Pallas paged kernels: fp16 ``impl="kernel"``,
+  all int8-KV modes, all MLA modes) are charged only their live pages
+  (times the selected-group fraction where head selection gathers); layers
+  on the XLA parity-oracle path are charged the full-width gathered view
+  ``_gather_pages`` materializes.
+* ``gather_bytes_avoided`` — the bytes of that transient full-width view
+  that streaming layers did NOT materialize (what the same step would have
+  copied before this change).
+
+The model is an accounting mirror of ``models/attention.py`` routing, kept
+host-side so the jitted step stays untouched; `launch/roofline.py` divides
+the per-step bytes by HBM bandwidth for a memory-bound step-time estimate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LayerIO:
+    """Per-(attn|mla)-layer decode I/O coefficients, all in bytes."""
+    kind: str          # "attn" | "attn_quant" | "mla"
+    streams: bool      # decode streams pages (Pallas) vs gathers full width
+    group_frac: float  # fraction of each page decode reads (k_sel/G, else 1)
+    page_bytes: int    # bytes of one full physical page across all operands
+
+
+@dataclass(frozen=True)
+class AttnIOModel:
+    """Byte model for one engine configuration (see module docstring)."""
+    layers: Tuple[LayerIO, ...]
+    page_w: int
+    pages_per_slot: int
+    max_batch: int
+
+    def decode_bytes(self, live_pages: int) -> Tuple[int, int]:
+        """(hbm_read_bytes, gather_bytes_avoided) for one decode dispatch.
+
+        ``live_pages`` = sum over decoding slots of ceil((len+1) / page_w)
+        — the quantity the engine already tracks as ``pages_scanned``.
+        """
+        full = self.max_batch * self.pages_per_slot  # logical table pages
+        read = avoided = 0.0
+        for L in self.layers:
+            if L.streams:
+                read += L.page_bytes * L.group_frac * live_pages
+                avoided += L.page_bytes * full
+            else:
+                read += L.page_bytes * full          # the gathered view
+        return int(read), int(avoided)
+
+    def chunk_bytes(self, kw: int, end: int) -> Tuple[int, int]:
+        """(hbm_read_bytes, gather_bytes_avoided) for one prefill chunk.
+
+        ``kw`` is the static key-extent bucket (page multiple), ``end`` the
+        live extent (offset + chunk tokens).  Chunks are dense (all groups)
+        and single-slot.  Streaming layers (fp attn under impl="kernel",
+        MLA always) scan ceil(end / page_w) pages via the Pallas chunk
+        kernels; XLA-impl fp layers gather the full kw bucket.
+        """
+        live = -(-end // self.page_w)
+        full = kw // self.page_w
+        read = avoided = 0.0
+        for L in self.layers:
+            if L.streams:
+                read += L.page_bytes * live
+                avoided += L.page_bytes * full
+            else:
+                read += L.page_bytes * full
+        return int(read), int(avoided)
+
+
+def attn_io_model(cfg, policy, *, page_w: int, pages_per_slot: int,
+                  max_batch: int,
+                  routers_present: bool = True) -> Optional["AttnIOModel"]:
+    """Build the byte model for a paged engine; None for recurrent-only
+    configs (nothing pageable to account)."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    specs = [s for s in cfg.layer_specs if s.mixer in ("attn", "mla")]
+    if not specs:
+        return None
+    layers = []
+    for i, spec in enumerate(specs):
+        if spec.mixer == "mla":
+            m = cfg.mla
+            page_bytes = page_w * (m.kv_lora_rank + m.qk_rope_head_dim) * itemsize
+            # all MLA paged decode modes stream; heads share latent pages
+            layers.append(LayerIO("mla", True, 1.0, page_bytes))
+            continue
+        G = cfg.num_kv_heads
+        force_dense = (policy is not None and policy.attn_sparse
+                       and policy.layer0_dense and i == 0)
+        k = (policy.attn_k(G)
+             if policy is not None and policy.attn_sparse else G)
+        # mirrors models/model.py _head_selection: decode head-gather needs
+        # sparse policy + routers + k < G + a gather-capable impl
+        selected = (policy is not None and policy.attn_sparse
+                    and routers_present and not force_dense and k < G
+                    and policy.impl in ("gather", "kernel"))
+        if cfg.kv_quant:
+            # int8 codes + f32 per-position scales, k and v
+            page_bytes = 2 * G * page_w * cfg.head_dim + 2 * G * page_w * 4
+            kind, streams = "attn_quant", True     # quant kernel, all modes
+        else:
+            page_bytes = 2 * G * page_w * cfg.head_dim * itemsize
+            kind = "attn"
+            # fp pool streams only under impl="kernel" (selected layers via
+            # head-gather, force-dense/unselected layers densely)
+            streams = policy is not None and policy.impl == "kernel"
+        group_frac = (k / G) if (selected and streams) else 1.0
+        layers.append(LayerIO(kind, streams, group_frac, page_bytes))
+    return AttnIOModel(tuple(layers), page_w, pages_per_slot, max_batch)

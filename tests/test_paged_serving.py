@@ -27,13 +27,24 @@ from repro.serving import Engine, PagedKVPool, Request, SamplingParams
 KEY = jax.random.PRNGKey(0)
 
 
-def _engine(policy_kind: str, *, cache_width=32, page_w=8, num_pages=None):
+def _engine(policy_kind: str, *, cache_width=32, page_w=8, num_pages=None,
+            kv_quant=False, prefill_chunk=None):
     """policy_kind: dense | polar (head sparsity, XLA gather) | kernel
-    (Pallas SHA).  page_w=None -> contiguous pool (parity oracle)."""
-    cfg0 = get_smoke_config("opt-125m").replace(dtype="float32",
-                                                param_dtype="float32")
-    kw = dict(cache_width=cache_width, page_w=page_w, num_pages=num_pages)
-    if policy_kind == "dense":
+    (Pallas SHA) | mla (latent cache, dense).  page_w=None -> contiguous
+    pool (parity oracle)."""
+    if policy_kind == "mla":
+        cfg0 = get_smoke_config("deepseek-v3-671b")
+        cfg0 = cfg0.replace(dtype="float32", param_dtype="float32",
+                            moe=dataclasses.replace(cfg0.moe, impl="dense"),
+                            mtp=False)
+    else:
+        cfg0 = get_smoke_config("opt-125m").replace(dtype="float32",
+                                                    param_dtype="float32")
+    if kv_quant:
+        cfg0 = cfg0.replace(kv_quant=True)
+    kw = dict(cache_width=cache_width, page_w=page_w, num_pages=num_pages,
+              prefill_chunk=prefill_chunk)
+    if policy_kind in ("dense", "mla"):
         return Engine(cfg0, init_params(KEY, cfg0, max_seq_len=cache_width + 8),
                       **kw), cfg0
     pol = dataclasses.replace(default_policy(cfg0, impl="gather"),
@@ -83,6 +94,69 @@ def test_paged_kernel_impl_matches_contiguous_gather():
     reqs = _requests(cfg, n=3)
     assert (eng_g.serve(reqs, max_batch=2).tokens
             == eng_k.serve(reqs, max_batch=2).tokens)
+
+
+@pytest.mark.parametrize("policy_kind", ["dense", "polar"])
+def test_paged_kv_quant_matches_contiguous(policy_kind):
+    """int8-KV: the paged pool decodes through the in-kernel-dequant Pallas
+    path while the contiguous pool runs the XLA quant math — identical
+    greedy tokens, and no gathered view anywhere on the paged side."""
+    eng_c, cfg = _engine(policy_kind, page_w=None, kv_quant=True)
+    eng_p, _ = _engine(policy_kind, page_w=8, kv_quant=True)
+    reqs = _requests(cfg, n=4)
+    out_c = eng_c.serve(reqs, max_batch=2)
+    out_p = eng_p.serve(reqs, max_batch=2)
+    assert out_c.tokens == out_p.tokens
+    assert eng_p.decode_jit_traces() == 1
+    # the quant kernel streams every layer: modeled read bytes are tracked
+    # and strictly below the full gathered view
+    assert 0 < out_p.hbm_read_bytes
+    assert out_p.gather_bytes_avoided > 0
+
+
+def test_paged_mla_matches_contiguous():
+    """MLA latent cache: paged decode streams ckv/krope pages through the
+    Pallas kernel; tokens must match the contiguous pool's XLA path."""
+    eng_c, cfg = _engine("mla", page_w=None)
+    eng_p, _ = _engine("mla", page_w=8)
+    reqs = _requests(cfg, n=3)
+    out_c = eng_c.serve(reqs, max_batch=2)
+    out_p = eng_p.serve(reqs, max_batch=2)
+    assert out_c.tokens == out_p.tokens
+    assert eng_p.decode_jit_traces() == 1
+    assert out_p.hbm_read_bytes > 0 and out_p.gather_bytes_avoided > 0
+
+
+def test_streaming_paths_never_call_gather_pages(monkeypatch):
+    """Acceptance criterion: no decode or chunk step on the paged pool
+    materializes the gathered contiguous view for the kv_quant, MLA, or
+    kernel-impl paths.  ``_gather_pages`` is traced (or not) when each
+    fresh engine's jits first run, so counting calls under a monkeypatch
+    observes exactly what the compiled steps do."""
+    import repro.models.attention as attention
+
+    calls = {"n": 0}
+    real = attention._gather_pages
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(attention, "_gather_pages", counting)
+
+    def _serve(kind, **ekw):
+        eng, cfg = _engine(kind, page_w=8, **ekw)
+        eng.serve(_requests(cfg, n=2), max_batch=2)
+
+    _serve("dense", kv_quant=True)     # int8 pool, all layers quant kernel
+    _serve("kernel")                   # fp16 pool, Pallas SHA (incl. dense
+    _serve("mla")                      # layer0)      and the MLA kernel
+    _serve("kernel", prefill_chunk=3)  # chunk steps stream under impl=kernel
+    _serve("mla", prefill_chunk=3)     # MLA chunk steps always stream
+    assert calls["n"] == 0, "a streaming path gathered the paged pool"
+    # positive control: the XLA gather-oracle path still reads through it
+    _serve("polar")
+    assert calls["n"] > 0
 
 
 def test_decode_growth_across_page_boundary():

@@ -8,8 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.mla import mla_paged_attention
 from repro.kernels.sha import (select_head_attention,
-                               select_head_attention_paged, sha_ref)
+                               select_head_attention_paged,
+                               select_head_attention_paged_quant, sha_ref)
 
 KEY = jax.random.PRNGKey(7)
 
@@ -183,6 +185,148 @@ def test_sha_paged_zero_length_rows_are_zero():
     bhi = _bhi(jax.random.fold_in(KEY, 14), B, G, 2)
     out = select_head_attention_paged(q, kp, vp, bhi, pt,
                                       jnp.zeros((B,), jnp.int32))
+    assert not np.asarray(out).any()
+
+
+# ------------------------------------------------------ paged int8 SHA ---
+def _quantize_pool(xp):
+    """Per-(page, group, position) symmetric int8 — the pool's scheme."""
+    scale = jnp.maximum(jnp.max(jnp.abs(xp), axis=-1), 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(xp / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _quant_paged_fixture(B, G, qpg, dh, page_w, pages_per_slot, num_pages,
+                         seed=0):
+    """int8 code pools + scales, plus the dequantized gathered contiguous
+    (B, W, G, dh) view — the ``_gather_pages`` oracle the quant kernel must
+    byte-match."""
+    q, kp, vp, pt, _, _, W = _paged_fixture(B, G, qpg, dh, page_w,
+                                            pages_per_slot, num_pages, seed)
+    kc8, ks = _quantize_pool(kp)
+    vc8, vs = _quantize_pool(vp)
+    kdq = kc8.astype(jnp.float32) * ks[..., None]
+    vdq = vc8.astype(jnp.float32) * vs[..., None]
+    kc = jnp.moveaxis(kdq[pt], 2, 1).reshape(B, G, W, dh).transpose(0, 2, 1, 3)
+    vc = jnp.moveaxis(vdq[pt], 2, 1).reshape(B, G, W, dh).transpose(0, 2, 1, 3)
+    return q, kc8, vc8, ks, vs, pt, kc, vc, W
+
+
+def test_sha_paged_quant_matches_gather_oracle():
+    """In-kernel dequant over scattered physical pages must match the
+    dequantize-then-gather oracle, for ragged lengths including a
+    non-divisible final page."""
+    B, G, qpg, dh, pw, Sp = 3, 4, 2, 32, 8, 4
+    q, kc8, vc8, ks, vs, pt, kc, vc, W = _quant_paged_fixture(
+        B, G, qpg, dh, pw, Sp, 16)
+    bhi = _bhi(jax.random.fold_in(KEY, 21), B, G, 2)
+    lengths = jnp.array([1, W // 2 + 3, W], jnp.int32)   # mid-page tail
+    out = select_head_attention_paged_quant(q, kc8, vc8, ks, vs, bhi, pt,
+                                            lengths)
+    ref = sha_ref(q, kc, vc, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_sha_paged_quant_sink_entries_are_inert():
+    """Dead logical pages redirected to the sink page (garbage codes AND
+    garbage scales) must not change the output."""
+    B, G, qpg, dh, pw, Sp = 2, 4, 1, 16, 8, 3
+    q, kc8, vc8, ks, vs, pt, kc, vc, W = _quant_paged_fixture(
+        B, G, qpg, dh, pw, Sp, 8, seed=2)
+    bhi = _bhi(jax.random.fold_in(KEY, 22), B, G, 2)
+    lengths = jnp.array([5, 9], jnp.int32)   # 1 and 2 live pages
+    out = select_head_attention_paged_quant(q, kc8, vc8, ks, vs, bhi, pt,
+                                            lengths)
+    pt_np = np.asarray(pt).copy()
+    pt_np[0, 1:] = 8
+    pt_np[1, 2:] = 8
+    out_sink = select_head_attention_paged_quant(
+        q, kc8, vc8, ks, vs, bhi, jnp.asarray(pt_np), lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_sink))
+    ref = sha_ref(q, kc, vc, bhi, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_sha_paged_quant_zero_length_rows_are_zero():
+    """Vacant slots visit no page and emit zeros (paged contract)."""
+    B, G, qpg, dh, pw, Sp = 2, 4, 2, 16, 8, 2
+    q, kc8, vc8, ks, vs, pt, _, _, _ = _quant_paged_fixture(
+        B, G, qpg, dh, pw, Sp, 6, seed=3)
+    bhi = _bhi(jax.random.fold_in(KEY, 23), B, G, 2)
+    out = select_head_attention_paged_quant(q, kc8, vc8, ks, vs, bhi, pt,
+                                            jnp.zeros((B,), jnp.int32))
+    assert not np.asarray(out).any()
+
+
+# ----------------------------------------------------------- paged MLA ---
+def _mla_paged_fixture(B, H, r, rope_d, page_w, pages_per_slot, num_pages,
+                       seed=0):
+    W = pages_per_slot * page_w
+    ks = jax.random.split(jax.random.fold_in(KEY, 200 + seed), 4)
+    q_abs = jax.random.normal(ks[0], (B, H, r), jnp.float32)
+    q_rope = jax.random.normal(ks[1], (B, H, rope_d), jnp.float32)
+    ckv = jax.random.normal(ks[2], (num_pages + 1, page_w, r), jnp.float32)
+    krope = jax.random.normal(ks[3], (num_pages + 1, page_w, rope_d),
+                              jnp.float32)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_pages)[:B * pages_per_slot]
+    pt = jnp.asarray(perm.reshape(B, pages_per_slot).astype(np.int32))
+    ckv_c = ckv[pt].reshape(B, W, r)          # the gather oracle's view
+    krope_c = krope[pt].reshape(B, W, rope_d)
+    return q_abs, q_rope, ckv, krope, pt, ckv_c, krope_c, W
+
+
+def _mla_ref(q_abs, q_rope, ckv_c, krope_c, lengths, scale):
+    """Gathered-contiguous absorbed MLA decode (the old XLA path's math)."""
+    s = (jnp.einsum("bhr,bwr->bhw", q_abs, ckv_c)
+         + jnp.einsum("bhd,bwd->bhw", q_rope, krope_c)) * scale
+    mask = jnp.arange(ckv_c.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhw,bwr->bhr", p, ckv_c)
+
+
+def test_mla_paged_matches_gather_oracle():
+    """Latent pages scattered across the pool: the MLA kernel's
+    page-table-routed streaming must match the gathered contiguous oracle
+    for ragged lengths including a non-divisible final page."""
+    B, H, r, rope_d, pw, Sp = 3, 4, 32, 16, 8, 4
+    q_abs, q_rope, ckv, krope, pt, ckv_c, krope_c, W = _mla_paged_fixture(
+        B, H, r, rope_d, pw, Sp, 16)
+    scale = (r + rope_d) ** -0.5
+    lengths = jnp.array([1, W // 2 + 3, W], jnp.int32)
+    out = mla_paged_attention(q_abs, q_rope, ckv, krope, pt, lengths,
+                              scale=scale)
+    ref = _mla_ref(q_abs, q_rope, ckv_c, krope_c, lengths, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_mla_paged_sink_entries_are_inert():
+    B, H, r, rope_d, pw, Sp = 2, 4, 16, 8, 8, 3
+    q_abs, q_rope, ckv, krope, pt, ckv_c, krope_c, W = _mla_paged_fixture(
+        B, H, r, rope_d, pw, Sp, 8, seed=2)
+    scale = (r + rope_d) ** -0.5
+    lengths = jnp.array([5, 9], jnp.int32)
+    out = mla_paged_attention(q_abs, q_rope, ckv, krope, pt, lengths,
+                              scale=scale)
+    pt_np = np.asarray(pt).copy()
+    pt_np[0, 1:] = 8
+    pt_np[1, 2:] = 8
+    out_sink = mla_paged_attention(q_abs, q_rope, ckv, krope,
+                                   jnp.asarray(pt_np), lengths, scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_sink))
+    ref = _mla_ref(q_abs, q_rope, ckv_c, krope_c, lengths, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_mla_paged_zero_length_rows_are_zero():
+    B, H, r, rope_d, pw, Sp = 2, 4, 16, 8, 8, 2
+    q_abs, q_rope, ckv, krope, pt, _, _, _ = _mla_paged_fixture(
+        B, H, r, rope_d, pw, Sp, 6, seed=3)
+    out = mla_paged_attention(q_abs, q_rope, ckv, krope, pt,
+                              jnp.zeros((B,), jnp.int32),
+                              scale=(r + rope_d) ** -0.5)
     assert not np.asarray(out).any()
 
 
