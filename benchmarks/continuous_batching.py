@@ -17,6 +17,17 @@ mid-stream — once with whole-prompt prefill and once with chunked prefill
 same JSON artifact so the ITL-p99 spike shrinking under chunking is a
 machine-checkable regression signal.
 
+``--workload shared-prefix`` measures prefix caching: N requests share
+one long system prompt (page-aligned) with short per-request suffixes,
+replayed once with the cache off and once with ``prefix_cache=True`` into
+the same artifact.  The cache-on row must save at least
+``(N - 1) x prefix_len`` prefill tokens and strictly beat the cache-off
+TTFT p50 (hit admissions skip the long prefill entirely) while producing
+byte-identical tokens — both are asserted, so the JSON is a
+machine-checkable regression signal.  Every row carries the prefix-cache
+counters (``prefix_hits`` / ``prefix_hit_tokens`` /
+``prefill_tokens_saved`` / ``cow_copies`` / ``cached_prefix_pages``).
+
 Traffic goes through the ``LLM`` frontend (``EngineCore.step()``
 underneath): the trace is replayed via ``LLM.generate(...,
 arrivals=...)`` and metrics are read off ``llm.report``.
@@ -69,6 +80,25 @@ def adversary_requests(n: int, *, vocab_size: int, cache_width: int,
     return reqs
 
 
+def shared_prefix_requests(n: int, *, vocab_size: int, prefix_len: int,
+                           seed: int = 0):
+    """The prefix-cache trace: every request opens with the same
+    ``prefix_len``-token system prompt (page-aligned by the caller) and
+    appends a short unique suffix — the serving fleet's common case.  With
+    the cache on, only request 0 pays the long prefill; every later
+    admission maps the cached pages and prefills just its suffix."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab_size, size=prefix_len).tolist()
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(0, vocab_size,
+                              size=int(rng.integers(2, 5))).tolist()
+        reqs.append(Request(
+            rid=i, prompt=prefix + suffix,
+            max_new_tokens=int(rng.integers(8, 13)), arrival=2 * i))
+    return reqs
+
+
 def _latency_fields(rep):
     """TTFT / ITL wall-clock percentiles (ms) over all requests' gaps."""
     ttft = list(rep.ttft_wall_s().values())
@@ -88,7 +118,7 @@ def _contiguous_hbm_bytes(cfg, max_batch: int, width: int) -> int:
 
 def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
                 impl=None, page_w=None, num_pages=None, prefill_chunk=None,
-                max_step_tokens=None, warmup=None):
+                max_step_tokens=None, prefix_cache=False, warmup=None):
     kw = {}
     if pol is not None:
         if impl:
@@ -101,7 +131,8 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
         return LLM(cfg, params, cache_width=cache_width, page_w=page_w,
                    num_pages=num_pages, max_batch=max_batch,
                    prefill_chunk=prefill_chunk,
-                   max_step_tokens=max_step_tokens, _jits=jits, **kw)
+                   max_step_tokens=max_step_tokens,
+                   prefix_cache=prefix_cache, _jits=jits, **kw)
 
     def _run(llm, trace):
         outs = llm.generate([r.prompt for r in trace],
@@ -138,7 +169,8 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
             raise SystemExit("--kv-quant cannot run chunked prefill "
                              "(int8 pools gate it off)")
         cfg = cfg.replace(kv_quant=True)
-    cache_width = 256 if workload == "adversary" else 64
+    cache_width = {"adversary": 256, "shared-prefix": 128}.get(workload, 64)
+    prefix_len = None
     if workload == "adversary":
         reqs = adversary_requests(num_requests, vocab_size=cfg.vocab_size,
                                   cache_width=cache_width, seed=seed)
@@ -151,16 +183,38 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
                   else chunk + max_batch)
         # dense only: the HOL spike is a scheduling property, not a policy
         # one, and the CI smoke stays fast
-        variants = [("dense", None, "whole_prompt", None, None),
-                    ("dense", None, "chunked", chunk, budget)]
+        variants = [("dense", None, "whole_prompt", None, None, False),
+                    ("dense", None, "chunked", chunk, budget, False)]
+    elif workload == "shared-prefix":
+        if not page_w:
+            raise SystemExit("--workload shared-prefix needs the paged pool "
+                             "(page_w > 0): the cache shares KV pages")
+        if kv_quant:
+            raise SystemExit("--kv-quant cannot run the prefix cache "
+                             "(hits resume through the chunked path, gated "
+                             "off on int8 pools)")
+        # a long page-aligned system prompt (~3/4 of the width)
+        prefix_len = (int(cache_width * 0.75) // page_w) * page_w
+        reqs = shared_prefix_requests(num_requests, vocab_size=cfg.vocab_size,
+                                      prefix_len=prefix_len, seed=seed)
+        # warmup: one cold long-prompt admission + one hit (compiles the
+        # chunk-resume trace the cache-on run relies on)
+        warmup = [dataclasses.replace(reqs[0], arrival=0),
+                  dataclasses.replace(reqs[1], arrival=0)]
+        # dense only, whole-prompt both ways: the same trace with the one
+        # knob flipped, so the TTFT delta is the cache's alone
+        variants = [("dense", None, "cache_off", None, None, False),
+                    ("dense", None, "cache_on", None, None, True)]
     else:
         reqs = poisson_requests(num_requests, rate, vocab_size=cfg.vocab_size,
                                 prompt_len=(4, 16), max_new_tokens=(8, 24),
                                 seed=seed)
         warmup = None
         variant = ("chunked" if prefill_chunk is not None else "whole_prompt")
-        variants = [("dense", None, variant, prefill_chunk, max_step_tokens),
-                    ("polar", pol, variant, prefill_chunk, max_step_tokens)]
+        variants = [("dense", None, variant, prefill_chunk,
+                     max_step_tokens, False),
+                    ("polar", pol, variant, prefill_chunk,
+                     max_step_tokens, False)]
     # paged pool: provision page_share of the contiguous full reservation —
     # the memory-scales-with-tokens-in-flight demonstration (preemptions,
     # if the trace ever exceeds it, are recorded, not fatal)
@@ -171,15 +225,17 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         full = max_batch * pages_per_slot
         num_pages = max(pages_per_slot, int(full * page_share))
     contig_hbm = _contiguous_hbm_bytes(cfg, max_batch, cache_width)
-    rows, json_rows = [], []
-    for name, policy, variant, chunk, budget in variants:
+    rows, json_rows, reps = [], [], {}
+    for name, policy, variant, chunk, budget, pcache in variants:
         rep = _serve_once(cfg, params, routers, policy, reqs,
                           max_batch=max_batch, cache_width=cache_width,
                           impl=impl if name == "polar" else None,
                           page_w=page_w if paged else None,
                           num_pages=num_pages, prefill_chunk=chunk,
-                          max_step_tokens=budget, warmup=warmup)
+                          max_step_tokens=budget, prefix_cache=pcache,
+                          warmup=warmup)
         assert len(rep.tokens) == num_requests
+        reps[variant] = rep
         row = {
             "benchmark": "continuous_batching",
             "workload": workload,
@@ -222,6 +278,14 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
             "hbm_read_bytes": rep.hbm_read_bytes,
             "hbm_read_bytes_per_step": round(rep.hbm_read_bytes_per_step, 1),
             "gather_bytes_avoided": rep.gather_bytes_avoided,
+            # ---------------------------------- prefix-cache counters -----
+            "prefix_cache": pcache,
+            "shared_prefix_len": prefix_len,
+            "prefix_hits": rep.prefix_hits,
+            "prefix_hit_tokens": rep.prefix_hit_tokens,
+            "prefill_tokens_saved": rep.prefill_tokens_saved,
+            "cow_copies": rep.cow_copies,
+            "cached_prefix_pages": rep.cached_prefix_pages,
         }
         json_rows.append(row)
         label = f"{name}_{variant}_mb{max_batch}"
@@ -243,6 +307,26 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         tps = {r["policy"]: r["decode_tok_per_s"] for r in json_rows}
         rows.append(("cb_polar_vs_dense_speedup", f"mb{max_batch}",
                      round(tps["polar"] / tps["dense"], 3)))
+    elif workload == "shared-prefix":
+        # the prefix-cache acceptance signals: sharing must be
+        # semantically invisible, every non-first admission must hit the
+        # full prefix, and hit admissions must strictly cut TTFT
+        assert reps["cache_on"].tokens == reps["cache_off"].tokens, (
+            "prefix sharing changed tokens")
+        saved = reps["cache_on"].prefill_tokens_saved
+        floor = (num_requests - 1) * prefix_len
+        assert saved >= floor, (
+            f"saved {saved} prefill tokens < (N-1) x prefix = {floor}")
+        ttft = {r["variant"]: r["ttft_ms_p50"] for r in json_rows}
+        assert ttft["cache_on"] < ttft["cache_off"], (
+            f"cache-on TTFT p50 {ttft['cache_on']}ms did not beat "
+            f"cache-off {ttft['cache_off']}ms")
+        rows.append(("cb_prefix_prefill_tokens_saved", f"mb{max_batch}",
+                     saved))
+        rows.append(("cb_prefix_hits", f"mb{max_batch}",
+                     reps["cache_on"].prefix_hits))
+        rows.append(("cb_prefix_ttft_p50_speedup", f"mb{max_batch}",
+                     round(ttft["cache_off"] / ttft["cache_on"], 3)))
     else:
         # the adversary acceptance signal: chunking must shrink the
         # head-of-line ITL spike, strictly
@@ -287,10 +371,13 @@ def main():
                     help="physical pages as a fraction of the contiguous "
                          "max_batch x width reservation")
     ap.add_argument("--workload", default="poisson",
-                    choices=["poisson", "adversary"],
+                    choices=["poisson", "adversary", "shared-prefix"],
                     help="poisson: mixed-length async trace; adversary: "
                          "short decoders + mid-stream long prompts, run "
-                         "whole-prompt AND chunked into one artifact")
+                         "whole-prompt AND chunked into one artifact; "
+                         "shared-prefix: one long system prompt across all "
+                         "requests, run cache-off AND cache-on into one "
+                         "artifact")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens per chunked-prefill step "
                          "(adversary default: 16)")

@@ -17,6 +17,13 @@ temperature/top-k next to top-p in the same compiled decode batch) and one
 request aborted mid-flight:
 
     PYTHONPATH=src python examples/serve_batched.py --stream
+
+With --shared-prefix, a prefix-cache demo: requests sharing one long
+system prompt are submitted one at a time to a ``prefix_cache=True``
+frontend, printing the hit counters live as each admission maps the
+cached pages instead of re-prefilling them:
+
+    PYTHONPATH=src python examples/serve_batched.py --shared-prefix
 """
 import argparse
 import dataclasses
@@ -130,6 +137,38 @@ def stream_demo(args, cfg, params, routers, pol):
           f"(mixed sampling configs, single compile)")
 
 
+def shared_prefix_demo(args, cfg, params, routers, pol):
+    """Prefix caching live: one long system prompt shared by every request,
+    the first pays the prefill, the rest map the cached pages."""
+    rng = np.random.default_rng(17)
+    page_w = args.page_w or 16
+    prefix_len = 6 * page_w
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len).tolist()
+    llm = LLM(cfg, params, routers=routers, policy=pol, cache_width=128,
+              max_batch=args.max_batch, page_w=page_w,
+              prefix_cache=True, watermark=args.watermark)
+    print(f"serving {args.num_requests} requests sharing a "
+          f"{prefix_len}-token system prompt (page_w {page_w}, "
+          f"watermark {args.watermark}):\n")
+    rep = llm.report
+    for i in range(args.num_requests):
+        suffix = rng.integers(0, cfg.vocab_size, size=3).tolist()
+        out = llm.generate([prefix + suffix],
+                           SamplingParams(max_tokens=8))[0]
+        rid = out.rid
+        ttft = rep.ttft_wall_s().get(rid)
+        print(f"  rid {rid}: {len(out.token_ids)} tokens, "
+              f"ttft {ttft * 1e3:7.1f} ms | hits {rep.prefix_hits:>2} | "
+              f"hit tokens {rep.prefix_hit_tokens:>4} | prefill saved "
+              f"{rep.prefill_tokens_saved:>4} | cow {rep.cow_copies} | "
+              f"cached pages {rep.cached_prefix_pages}")
+    saved = rep.prefill_tokens_saved
+    total = args.num_requests * (prefix_len + 3)
+    print(f"\n{saved}/{total} prompt tokens never prefilled "
+          f"({100 * saved / total:.0f}%) | decode traces: "
+          f"{llm.decode_jit_traces()}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=32)
@@ -138,6 +177,12 @@ def main():
                     help="continuous batching under Poisson arrivals")
     ap.add_argument("--stream", action="store_true",
                     help="stream tokens incrementally (with a mid-run abort)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="prefix-cache demo: shared system prompt, live "
+                         "hit counters")
+    ap.add_argument("--watermark", type=int, default=8,
+                    help="free-page floor for the prefix cache "
+                         "(--shared-prefix only)")
     ap.add_argument("--num-requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=0.5)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -149,7 +194,9 @@ def main():
 
     print("training / loading the toy OPT model + routers ...")
     cfg, params, routers, pol = get_toy_model()
-    if args.stream:
+    if args.shared_prefix:
+        shared_prefix_demo(args, cfg, params, routers, pol)
+    elif args.stream:
         stream_demo(args, cfg, params, routers, pol)
     elif args.continuous:
         continuous(args, cfg, params, routers, pol)

@@ -136,7 +136,14 @@ def _write_paged(buf, update, pos, page_table, page_w: int):
     1[, dh]); ``pos`` (B,) logical write positions.  Row b lands in page
     ``page_table[b, pos[b] // page_w]`` — the sink page for vacant slots
     (their table rows point there), so inactive rows never corrupt live
-    pages."""
+    pages.
+
+    Prefix sharing relies on the same indirection: every write routes
+    through the table, and ``PagedKVPool.reserve`` copy-on-writes a
+    shared page (fresh page + device copy + table swap) *before* the
+    dispatch, so by the time this scatter (or the chunk write path) runs,
+    the target page is guaranteed privately owned — the kernels stay
+    CoW-oblivious and the decode trace stays single."""
     bidx = jnp.arange(pos.shape[0])
     phys = page_table[bidx, pos // page_w]
     return buf.at[phys, :, jnp.mod(pos, page_w)].set(update[:, :, 0])

@@ -38,6 +38,26 @@ Core
         always dispatches; the chunk gets ``min(C, B - n_decoding)``
         tokens, bounding per-step latency (ITL) by the budget.  Requires
         ``prefill_chunk``.
+    ``prefix_cache=True``  radix-tree prompt cache over the paged pool
+        (prefix_cache.py): admission maps the longest page-aligned cached
+        prefix into the new request's page table (those tokens are never
+        prefilled — a whole-prompt hit recomputes only the last token for
+        its logits, copy-on-writing the shared page) and finished prefills
+        are retained in the tree, pages refcounted so aborts/finishes of
+        one sharer never free another's prefix.  Requires the paged pool
+        (``page_w`` set) — the contiguous pool raises a typed
+        ``InvalidRequestError`` — and a chunk-capable config (hits resume
+        through the chunked path).  Counters on stats/report:
+        ``prefix_hits``, ``prefix_hit_tokens``, ``prefill_tokens_saved``,
+        ``cow_copies``, ``cached_prefix_pages``.
+    ``watermark=K``  free-page floor for the cache (requires
+        ``prefix_cache=True``): each ``step()`` evicts LRU unreferenced
+        cached prefixes until ``free_pages >= K``; allocation pressure
+        additionally evicts on demand *before* any running request is
+        preempted (cached prefixes are the gentlest thing to shed).
+    ``is_quiescent()``  leak check: every slot free and, with a prefix
+        cache, every surviving page held exactly once by the cache
+        (``core.prefix_cache.clear()`` then empties the pool).
     TTFT/ITL series live on the report: ``first_token_step``,
     ``token_steps`` / ``token_walls``, ``ttft_steps()`` /
     ``ttft_wall_s()`` / ``itl_wall_s()``.
@@ -59,7 +79,11 @@ Infrastructure
 ``Scheduler``       FCFS admission, eviction, preemption requeue.
 ``KVPool`` / ``PagedKVPool``  fixed-shape slot pool; paged variant adds
                     page tables, allocate-on-decode growth, sink-page
-                    masking, O(log n) free lists.            (kv_pool.py)
+                    masking, O(log n) free lists, per-page refcounts with
+                    ``share`` / copy-on-write ``reserve``.   (kv_pool.py)
+``PrefixCache``     radix tree over token-ID sequences at page
+                    granularity: ``lookup`` / ``insert`` / LRU ``evict``
+                    of unreferenced runs.               (prefix_cache.py)
 ``sampling.sample`` batched per-row sampler (jit-resident).  (sampling.py)
 ``poisson_requests``  synthetic async-arrival traces.
 """
@@ -68,6 +92,7 @@ from repro.serving.engine import (Engine, EngineCore, EngineStats,
                                   make_serving_jits)
 from repro.serving.kv_pool import KVPool, PagedKVPool
 from repro.serving.llm import LLM
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.params import (InvalidRequestError, RequestOutput,
                                   SamplingParams)
 from repro.serving.scheduler import (Request, Scheduler, SlotRun,
@@ -76,5 +101,6 @@ from repro.serving import sampling
 
 __all__ = ["Engine", "EngineCore", "EngineStats", "ServeReport",
            "build_engine", "make_serving_jits", "KVPool", "PagedKVPool",
-           "LLM", "InvalidRequestError", "RequestOutput", "SamplingParams",
-           "Request", "Scheduler", "SlotRun", "poisson_requests", "sampling"]
+           "PrefixCache", "LLM", "InvalidRequestError", "RequestOutput",
+           "SamplingParams", "Request", "Scheduler", "SlotRun",
+           "poisson_requests", "sampling"]

@@ -48,6 +48,7 @@ from repro.models.model import chunked_prefill_unsupported, prefill_chunk
 from repro.serving import sampling
 from repro.serving.io_accounting import attn_io_model
 from repro.serving.kv_pool import KVPool, PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.params import (FINISH_ABORT, FINISH_REJECT, FINISH_STOP,
                                   InvalidRequestError, RequestOutput,
                                   SamplingParams)
@@ -69,6 +70,12 @@ class EngineStats:
     prefill_tokens: int = 0          # prompt tokens pushed through prefill
     hbm_read_bytes: int = 0          # modeled KV-pool bytes read (paged)
     gather_bytes_avoided: int = 0    # gathered-view bytes NOT materialized
+    # ------------------------------------------- prefix-cache accounting --
+    prefix_hits: int = 0             # admissions that mapped cached pages
+    prefix_hit_tokens: int = 0       # prompt tokens served from shared pages
+    prefill_tokens_saved: int = 0    # prompt tokens never pushed to prefill
+    cow_copies: int = 0              # copy-on-write page copies performed
+    cached_prefix_pages: int = 0     # pages the prefix cache holds (gauge)
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -113,6 +120,12 @@ class ServeReport:
     max_step_tokens: Optional[int] = None
     chunks_run: int = 0
     prefill_tokens: int = 0
+    # ------------------------------------------- prefix-cache accounting --
+    prefix_hits: int = 0                  # admissions that mapped cached pages
+    prefix_hit_tokens: int = 0            # prompt tokens served from shared pages
+    prefill_tokens_saved: int = 0         # prompt tokens never prefilled
+    cow_copies: int = 0                   # copy-on-write page copies
+    cached_prefix_pages: int = 0          # pages held by the cache (gauge)
 
     @property
     def decode_tok_per_s(self) -> float:
@@ -223,6 +236,8 @@ class EngineCore:
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 watermark: int = 0,
                  stats: Optional[EngineStats] = None,
                  _jits=None):
         self.cfg = cfg
@@ -237,6 +252,24 @@ class EngineCore:
             why = chunked_prefill_unsupported(cfg)
             if why is not None:
                 raise ValueError(f"chunked prefill unsupported: {why}")
+        if prefix_cache:
+            if page_w is None:
+                raise InvalidRequestError(
+                    "prefix_cache=True requires the paged KV pool: the "
+                    "contiguous pool (page_w=None) has no page tables to "
+                    "share cached prefixes through")
+            why = chunked_prefill_unsupported(cfg)
+            if why is not None:
+                raise ValueError(
+                    "prefix_cache unsupported: a cache hit resumes prefill "
+                    f"through the chunked path, but {why}")
+        if watermark:
+            if not prefix_cache:
+                raise ValueError(
+                    "watermark requires prefix_cache=True: without cached "
+                    "prefixes there is nothing to evict toward it")
+            if watermark < 0:
+                raise ValueError(f"watermark must be >= 0, got {watermark}")
         if max_step_tokens is not None:
             if prefill_chunk is None:
                 raise ValueError(
@@ -257,6 +290,13 @@ class EngineCore:
             self.pool = PagedKVPool(cfg, max_batch, cache_width,
                                     page_w=page_w, num_pages=num_pages)
         self.paged = isinstance(self.pool, PagedKVPool)
+        self._prefix = PrefixCache(self.pool) if prefix_cache else None
+        self.watermark = int(watermark)
+        if self.paged and self.watermark >= self.pool.num_pages:
+            raise ValueError(
+                f"watermark {watermark} >= num_pages {self.pool.num_pages}: "
+                "the pool could never hold a cached prefix")
+        self._cow_seen = 0               # pool.cow_copies already accounted
         self.sched = Scheduler(max_batch, max_length=cache_width - 1)
         self.clock = 0
         self.report = ServeReport(tokens={}, admitted_step={},
@@ -420,6 +460,11 @@ class EngineCore:
                 if run.phase != PHASE_DECODE:     # chunks reserve their own
                     continue
                 while not pool.reserve(slot, run.length):
+                    # pressure valve, gentlest first: unreferenced cached
+                    # prefixes are pure speculation — evict those before
+                    # any running request loses work to a preemption
+                    if self._prefix is not None and self._prefix.evict(1):
+                        continue
                     victim = self._pick_victim(exclude=slot)
                     # num_pages >= pages_per_slot guarantees a lone request
                     # can always grow once rivals are evicted
@@ -428,21 +473,7 @@ class EngineCore:
 
         # ---- at most one admission: FCFS head into a free slot -----------
         if self.prefill_chunk is None:
-            req = sched.peek_arrived(self.clock)
-            if req is not None and pool.can_admit(len(req.prompt)):
-                sched.pop_head()
-                slot = pool.claim()
-                tok, layers, L = self._prefill_request(req)
-                pool.insert(layers, slot, L)
-                self._lower_sampling(slot, req.sampling)
-                run = sched.bind(slot, req, self.clock, tok)
-                # first admission only: queueing delay must not absorb the
-                # residency time of a later-preempted request
-                self.report.admitted_step.setdefault(req.rid, self.clock)
-                self.report.first_token_step.setdefault(req.rid, self.clock)
-                self.report.slots_served += 1
-                if run.done:                      # e.g. max_tokens == 1
-                    outs.append(self._finish(run))
+            chunk_budget = None                   # whole-prompt mode
         else:
             n_decoding = sum(1 for r in sched.running.values()
                              if r.phase == PHASE_DECODE)
@@ -452,21 +483,59 @@ class EngineCore:
                 # the budget throttles only how much prefill rides along
                 chunk_budget = min(chunk_budget,
                                    max(0, self.max_step_tokens - n_decoding))
-            if self._prefilling is None and chunk_budget > 0:
-                req = sched.peek_arrived(self.clock)
-                # gate on the whole prompt's pages even though chunks
-                # allocate lazily: admitting into a pool that cannot hold
-                # the prompt would guarantee preemption churn
-                if req is not None and pool.can_admit(len(req.prompt)):
-                    sched.pop_head()
-                    slot = pool.claim()
-                    sched.bind_prefill(slot, req, self.clock)
+        if self._prefilling is None and (chunk_budget is None
+                                         or chunk_budget > 0):
+            req = sched.peek_arrived(self.clock)
+            # gate on the whole prompt's pages even though chunks allocate
+            # lazily: admitting into a pool that cannot hold the prompt
+            # would guarantee preemption churn.  With a prefix cache the
+            # gate counts hit pages as already paid and cold cached pages
+            # as reclaimable-on-demand
+            plan = self._admission_plan(req) if req is not None else None
+            if plan is not None:
+                cursor, pages = plan
+                sched.pop_head()
+                slot = pool.claim()
+                if pages or chunk_budget is not None:
+                    # chunked prefill — with a hit, the cached prefix maps
+                    # into this slot's page table and the cursor starts
+                    # past it (those tokens are never prefilled)
+                    sched.bind_prefill(slot, req, self.clock,
+                                       prefilled=cursor)
+                    if pages:
+                        pool.share(slot, pages)
+                        self._account_hit(cursor, pages)
                     pool.stage(slot, len(req.prompt))
-                    self.report.admitted_step.setdefault(req.rid, self.clock)
-                    self.report.slots_served += 1
                     self._prefilling = slot
-            if self._prefilling is not None and chunk_budget > 0:
-                outs.extend(self._run_chunk(self._prefilling, chunk_budget))
+                else:
+                    if self._prefix is not None:
+                        # the admission gate counted cold cached pages as
+                        # available, but insert() pops the free list
+                        # directly — make the shortfall real before it does
+                        short = pool.pages_needed(len(req.prompt)) - pool.free_pages
+                        if short > 0:
+                            self._prefix.evict(short)
+                    tok, layers, L = self._prefill_request(req)
+                    pool.insert(layers, slot, L)
+                    self._insert_prefix(slot, req)
+                    self._lower_sampling(slot, req.sampling)
+                    run = sched.bind(slot, req, self.clock, tok)
+                    self.report.first_token_step.setdefault(req.rid,
+                                                            self.clock)
+                    if run.done:                  # e.g. max_tokens == 1
+                        outs.append(self._finish(run))
+                # first admission only: queueing delay must not absorb the
+                # residency time of a later-preempted request
+                self.report.admitted_step.setdefault(req.rid, self.clock)
+                self.report.slots_served += 1
+        if self._prefilling is not None and (chunk_budget is None
+                                             or chunk_budget > 0):
+            run = sched.running[self._prefilling]
+            # whole-prompt mode reaches here only via a prefix hit: the
+            # remainder goes through the chunk path in one piece
+            budget = (chunk_budget if chunk_budget is not None
+                      else len(run.request.prompt) - run.prefilled)
+            outs.extend(self._run_chunk(self._prefilling, budget))
 
         # ---- one batched decode + in-jit per-slot sampling ---------------
         decoding = [s for s, r in sched.running.items()
@@ -486,8 +555,11 @@ class EngineCore:
             self.report.tokens_decoded += n_active
             self.report.decode_steps_run += 1
             if self.paged:   # live pages this step covers vs full width
-                live = sum(sched.running[s].length // pool.page_w + 1
-                           for s in decoding)
+                # distinct physical pages: prefix-shared pages are read
+                # from HBM once per step however many slots map them
+                # (without sharing the tables are disjoint — same number)
+                live = pool.distinct_live_pages(
+                    (s, sched.running[s].length) for s in decoding)
                 self.report.pages_scanned += live
                 self.report.pages_scanned_dense_equiv += (
                     n_active * pool.pages_per_slot)
@@ -510,6 +582,24 @@ class EngineCore:
                     out = self._emit(run, finished=False)
                     if out.new_token_ids:
                         outs.append(out)
+        if self._prefix is not None:
+            # free-page watermark, applied after this step's releases and
+            # inserts landed: shed cold cached prefixes (LRU) until the
+            # floor holds or nothing is evictable — so a drained engine
+            # always exits at the floor, without waiting for another step
+            if self.watermark > 0:
+                while (pool.free_pages < self.watermark
+                       and self._prefix.evict(self.watermark
+                                              - pool.free_pages)):
+                    pass
+            fresh = pool.cow_copies - self._cow_seen
+            if fresh:
+                self._cow_seen = pool.cow_copies
+                self.report.cow_copies += fresh
+                self.stats.cow_copies += fresh
+            held = self._prefix.cached_pages
+            self.report.cached_prefix_pages = held
+            self.stats.cached_prefix_pages = held
         self.report.steps = self.clock
         return outs
 
@@ -534,7 +624,12 @@ class EngineCore:
         if self.paged:
             last_pos = off + n - 1 if off + n < L else L
             for pidx in range(off // pool.page_w, last_pos // pool.page_w + 1):
+                # reserve() also copy-on-writes a shared page about to be
+                # written — the full-prompt-hit restart (cursor at L-1)
+                # lands inside the cached prefix's last page
                 while not pool.reserve(slot, pidx * pool.page_w):
+                    if self._prefix is not None and self._prefix.evict(1):
+                        continue
                     victim = self._pick_victim(exclude=slot)
                     assert victim is not None, "page pool exhausted"
                     vrun = sched.running[victim]
@@ -543,6 +638,10 @@ class EngineCore:
                         return []          # all rivals older: back off
                     self._preempt(victim)
         C = self.prefill_chunk
+        if C is None:                      # prefix-hit resume in whole-prompt
+            C = 8                          # mode: one power-of-two-bucketed
+            while C < n:                   # chunk covers the remainder
+                C *= 2
         toks = np.zeros((1, C), np.int32)
         toks[0, :n] = req.prompt[off:off + n]
         kw = self._kw_bucket(off + n)
@@ -569,6 +668,7 @@ class EngineCore:
         p = req.sampling if req.sampling is not None else SamplingParams()
         tok = self._sample_one(logits[0, n - 1], p, pos=0)
         pool.activate(slot, L)
+        self._insert_prefix(slot, req)
         self._lower_sampling(slot, req.sampling)
         run = sched.begin_decode(slot, tok, self.clock)
         self.report.first_token_step.setdefault(req.rid, self.clock)
@@ -576,6 +676,69 @@ class EngineCore:
         if run.done:                              # e.g. max_tokens == 1
             return [self._finish(run)]
         return []
+
+    # ----------------------------------------------------- prefix cache ---
+    def _admission_plan(self, req: Request):
+        """Can the FCFS head occupy a slot now?  ``None`` = wait.  Otherwise
+        ``(cursor, pages)``: the cached-prefix pages to map into its table
+        (possibly empty) and the prompt position prefill resumes at.  At
+        least one prompt token is always computed so the first-token logits
+        exist — a whole-prompt hit restarts at ``L - 1``, whose write
+        copy-on-writes the shared last page."""
+        L = len(req.prompt)
+        if self._prefix is None:
+            return (0, []) if self.pool.can_admit(L) else None
+        pool = self.pool
+        if pool.num_free == 0:
+            return None
+        hit, pages = self._prefix.lookup(req.prompt)
+        cursor = min(hit, L - 1)
+        # pages the pool must still produce: the non-hit remainder, plus
+        # the copy-on-write target when the whole prompt is cached
+        needed = (pool.pages_needed(L) - len(pages)
+                  + (1 if cursor < hit else 0))
+        # cold cached pages count as available (the reserve loops evict
+        # them on demand) — but never the hit pages about to be mapped
+        avail = pool.free_pages + max(
+            0, self._prefix.evictable_pages() - len(pages))
+        if avail < needed:
+            return None
+        return cursor, pages
+
+    def _account_hit(self, cursor: int, pages) -> None:
+        hit_toks = len(pages) * self.pool.page_w
+        for tgt in (self.report, self.stats):
+            tgt.prefix_hits += 1
+            tgt.prefix_hit_tokens += hit_toks
+            tgt.prefill_tokens_saved += cursor
+
+    def _insert_prefix(self, slot: int, req: Request) -> None:
+        """Retain the finished prefill's page-aligned prefix in the radix
+        tree — its pages now outlive the request (release decrements)."""
+        if self._prefix is None:
+            return
+        n = len(req.prompt) // self.pool.page_w
+        if n:
+            self._prefix.insert(req.prompt, self.pool.slot_pages(slot, n))
+
+    def is_quiescent(self) -> bool:
+        """True when every slot is free and every in-use page is accounted
+        for: without a prefix cache that is an empty pool; with one, the
+        only surviving pages are the cache's retained prefixes, each
+        holding exactly the cache's reference (``prefix_cache.clear()``
+        then returns the pool to its empty baseline)."""
+        if self._prefix is None:
+            return self.pool.is_quiescent()
+        pool = self.pool
+        cached = self._prefix.pages()
+        return (pool.num_free == self.max_batch
+                and (pool.page_table() < 0).all()
+                and pool.pages_in_use == len(cached)
+                and all(pool.page_ref(p) == 1 for p in cached))
+
+    @property
+    def prefix_cache(self) -> Optional[PrefixCache]:
+        return self._prefix
 
     def _kw_bucket(self, end: int) -> int:
         """Static key-extent bucket for a chunk whose last valid query sits
@@ -694,6 +857,8 @@ class Engine:
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 watermark: int = 0,
                  sampler: Callable = sampling.greedy,
                  _jits=None):
         # NOTE: cfg must already be prepare_model_config(cfg, policy)'d if
@@ -707,6 +872,8 @@ class Engine:
         self.num_pages = num_pages         # None -> full provisioning
         self.prefill_chunk = prefill_chunk
         self.max_step_tokens = max_step_tokens
+        self.prefix_cache = prefix_cache
+        self.watermark = watermark
         self.sampler = sampler             # fixed-batch generate() only
         self.stats = EngineStats()
         # one shared jit triple: every serve() call reuses the same compiled
@@ -767,6 +934,8 @@ class Engine:
                           num_pages=self.num_pages,
                           prefill_chunk=self.prefill_chunk,
                           max_step_tokens=self.max_step_tokens,
+                          prefix_cache=self.prefix_cache,
+                          watermark=self.watermark,
                           stats=self.stats,
                           _jits=(self._prefill, self._decode, self._chunk))
 

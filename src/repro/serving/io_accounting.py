@@ -51,8 +51,12 @@ class AttnIOModel:
     def decode_bytes(self, live_pages: int) -> Tuple[int, int]:
         """(hbm_read_bytes, gather_bytes_avoided) for one decode dispatch.
 
-        ``live_pages`` = sum over decoding slots of ceil((len+1) / page_w)
-        — the quantity the engine already tracks as ``pages_scanned``.
+        ``live_pages`` = DISTINCT physical pages the decoding slots' tables
+        cover (``PagedKVPool.distinct_live_pages``): a prefix-shared page
+        is read from HBM once per step no matter how many slots map it, so
+        it is charged once.  Without prefix sharing the tables are disjoint
+        and this equals the per-slot sum the engine tracks as
+        ``pages_scanned``.
         """
         full = self.max_batch * self.pages_per_slot  # logical table pages
         read = avoided = 0.0

@@ -26,6 +26,18 @@ state has no width axis and stays slot-indexed even in the paged pool).
 finish, preemption, and mid-flight ``EngineCore.abort`` — so an abort
 returns the slot's pages to the free list immediately (``is_quiescent()``
 checks that the bookkeeping is back to its empty-pool baseline).
+
+Paged pages carry a *refcount* so several owners can map one physical
+page: each slot mapping a page holds one reference, and the prefix cache
+(``serving/prefix_cache.py``) holds one more for every page it retains.
+``share`` maps a cached prefix into a fresh slot (ref++ per page),
+``release`` decrements instead of freeing, and ``reserve`` performs
+copy-on-write when a slot is about to write into a page someone else also
+maps: allocate a fresh page, device-copy the old page's contents across
+every paged leaf, swap the table entry, and drop the old reference.  The
+write paths in ``models/attention.py`` never see any of this — by the time
+a chunk or decode dispatch runs, the engine has guaranteed via ``reserve``
+that every page it writes is privately owned.
 """
 from __future__ import annotations
 
@@ -187,6 +199,17 @@ def _paged_insert_fn(pool, single_layers, page_ids, slot, length, *,
     }
 
 
+def _copy_page_fn(layers, src, dst):
+    """Duplicate physical page ``src`` into ``dst`` across every paged leaf
+    (the copy-on-write data move).  Per-slot recurrent state has no page
+    axis and is untouched."""
+    def copy_leaf(path, p):
+        if path[-1].key in _PAGED_LEAVES:
+            return p.at[:, dst].set(p[:, src])
+        return p
+    return jax.tree_util.tree_map_with_path(copy_leaf, layers)
+
+
 def _paged_release_fn(pool, slot, *, sink: int):
     """Mark ``slot`` vacant: page-table row back to the sink, length 0.
     Page contents stay in place and are overwritten on reallocation."""
@@ -236,11 +259,16 @@ class PagedKVPool:
         self._free_slots: List[int] = list(range(max_batch))
         self._free_pages: List[int] = list(range(self.num_pages))
         self._table = np.full((max_batch, self.pages_per_slot), -1, np.int64)
+        # per-page reference counts: one ref per slot mapping the page plus
+        # one per prefix-cache retention; 0 <=> on the free list
+        self._ref = np.zeros((self.num_pages,), np.int64)
+        self.cow_copies = 0              # lifetime copy-on-write page copies
         self._insert = jax.jit(functools.partial(
             _paged_insert_fn, page_w=self.page_w,
             pages_per_slot=self.pages_per_slot))
         self._release = jax.jit(functools.partial(
             _paged_release_fn, sink=self.sink))
+        self._copy_page = jax.jit(_copy_page_fn)
 
     # ------------------------------------------------------------ slots ---
     @property
@@ -276,6 +304,7 @@ class PagedKVPool:
         n = self.pages_needed(length)
         assert len(self._free_pages) >= n, "admission must check can_admit"
         phys = [heapq.heappop(self._free_pages) for _ in range(n)]
+        self._ref[phys] = 1
         self._table[slot, :] = -1
         self._table[slot, :n] = phys
         page_ids = np.full((self.pages_per_slot,), self.sink, np.int32)
@@ -286,19 +315,91 @@ class PagedKVPool:
 
     def reserve(self, slot: int, position: int) -> bool:
         """Ensure the page covering ``position`` is allocated for ``slot``
-        (decode growth across a page boundary).  False = out of pages; the
-        engine must preempt someone (or wait) before this slot can decode."""
+        AND privately writable (decode growth across a page boundary, or a
+        chunk/decode write landing in a prefix-shared page).  A shared page
+        (refcount > 1) triggers copy-on-write: a fresh page is allocated,
+        the old page's contents are device-copied, and the slot's table
+        entry is swapped — the other owners keep reading the original.
+        False = out of pages; the engine must evict cached prefixes or
+        preempt someone before this slot can write."""
         assert 0 <= position < self.width, (position, self.width)
         idx = position // self.page_w
-        if self._table[slot, idx] >= 0:
+        phys = int(self._table[slot, idx])
+        if phys >= 0:
+            if self._ref[phys] <= 1:
+                return True
+            if not self._free_pages:
+                return False
+            fresh = heapq.heappop(self._free_pages)
+            self._ref[fresh] = 1
+            self.cache["layers"] = self._copy_page(
+                self.cache["layers"], jnp.int32(phys), jnp.int32(fresh))
+            self._table[slot, idx] = fresh
+            self.cache["page_table"] = (
+                self.cache["page_table"].at[slot, idx].set(fresh))
+            self.unref_page(phys)
+            self.cow_copies += 1
             return True
         if not self._free_pages:
             return False
         phys = heapq.heappop(self._free_pages)
+        self._ref[phys] = 1
         self._table[slot, idx] = phys
         self.cache["page_table"] = (
             self.cache["page_table"].at[slot, idx].set(phys))
         return True
+
+    # ------------------------------------------------- sharing / refs ---
+    def share(self, slot: int, pages: List[int]) -> None:
+        """Map an already-resident page run (a cached prefix) into a fresh
+        slot's logical pages [0, len(pages)), taking one reference per
+        page.  The slot must not write these pages without ``reserve``
+        (which copy-on-writes shared entries)."""
+        assert (self._table[slot] < 0).all(), "share() needs a fresh slot"
+        assert len(pages) <= self.pages_per_slot
+        ids = np.full((self.pages_per_slot,), self.sink, np.int32)
+        for i, p in enumerate(pages):
+            assert self._ref[p] >= 1, "cannot share a free page"
+            self._ref[p] += 1
+            self._table[slot, i] = p
+            ids[i] = p
+        self.cache["page_table"] = (
+            self.cache["page_table"].at[slot].set(jnp.asarray(ids)))
+
+    def page_ref(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def ref_page(self, page: int) -> None:
+        """Take one reference on a live page (prefix-cache retention)."""
+        assert self._ref[page] >= 1, "cannot reference a free page"
+        self._ref[page] += 1
+
+    def unref_page(self, page: int) -> None:
+        """Drop one reference; the last one returns the page to the free
+        list (contents stay until reallocation overwrites them)."""
+        assert self._ref[page] >= 1, "unref of a free page"
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            heapq.heappush(self._free_pages, int(page))
+
+    def slot_pages(self, slot: int, n: int) -> List[int]:
+        """First ``n`` physical pages of ``slot`` (all must be bound)."""
+        pages = [int(p) for p in self._table[slot, :n]]
+        assert all(p >= 0 for p in pages), (slot, pages)
+        return pages
+
+    def distinct_live_pages(self, slot_lengths) -> int:
+        """Distinct physical pages covering [0, length] over the given
+        ``(slot, length)`` pairs.  Prefix-shared pages count once — HBM
+        reads them once per step no matter how many slots map them (without
+        sharing the tables are disjoint and this equals the per-slot sum)."""
+        phys = set()
+        for slot, length in slot_lengths:
+            n = length // self.page_w + 1
+            for p in self._table[slot, :n]:
+                if p >= 0:
+                    phys.add(int(p))
+        return len(phys)
 
     def stage(self, slot: int, length: int) -> None:
         """Park an in-flight chunked-prefill slot's decode-write cursor at
@@ -322,9 +423,11 @@ class PagedKVPool:
         self.cache["active"] = self.cache["active"].at[slot].set(True)
 
     def release(self, slot: int) -> None:
+        """Drop the slot's reference on each of its pages — pages a prefix
+        cache (or another slot) still maps survive the release."""
         for p in self._table[slot]:
             if p >= 0:
-                heapq.heappush(self._free_pages, int(p))
+                self.unref_page(int(p))
         self._table[slot, :] = -1
         self.cache = self._release(self.cache, jnp.int32(slot))
         heapq.heappush(self._free_slots, slot)
@@ -345,7 +448,8 @@ class PagedKVPool:
         free list (the abort/finish path leaked nothing)."""
         return (self.num_free == self.max_batch
                 and self.free_pages == self.num_pages
-                and (self._table < 0).all())
+                and (self._table < 0).all()
+                and (self._ref == 0).all())
 
     def hbm_bytes(self) -> int:
         return _leaf_hbm_bytes(self.cache["layers"])

@@ -48,6 +48,7 @@ class LLM:
                  page_w: Optional[int] = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
+                 prefix_cache: bool = False, watermark: int = 0,
                  _jits=None):
         # _jits: a (prefill, decode, chunk) triple from make_serving_jits,
         # so several LLM instances (e.g. a warmup and a measured run) can
@@ -57,6 +58,8 @@ class LLM:
                                page_w=page_w, num_pages=num_pages,
                                prefill_chunk=prefill_chunk,
                                max_step_tokens=max_step_tokens,
+                               prefix_cache=prefix_cache,
+                               watermark=watermark,
                                _jits=_jits)
         self._next_rid = 0
 

@@ -1,0 +1,240 @@
+"""Radix-tree prompt cache over refcounted KV pages.
+
+Requests in a serving fleet overwhelmingly share prompt *prefixes* — system
+prompts, few-shot preambles, multi-turn history — and the paged pool
+already addresses KV by page table, so the cached prefix of a finished
+prefill can be mapped straight into a new request's table instead of being
+recomputed.  This module owns the index for that: a radix tree over
+token-ID sequences at page granularity.
+
+* Every node owns one page-aligned run of tokens (``key``, a multiple of
+  ``page_w`` ids) plus the physical pages holding that run's K/V
+  (``pages``, one per ``page_w`` tokens).  Children are keyed by the first
+  page of their run, so lookups walk page by page and node splits happen
+  only on page boundaries — sharing is page-granular, exactly what the
+  page table can express.
+* ``lookup(prompt)`` returns the longest fully-cached page-aligned prefix
+  and its physical pages; the engine maps them via ``PagedKVPool.share``
+  (refcount++ per page) and starts the prefill cursor past the hit.
+* ``insert(prompt, pages)`` runs at prefill completion: tree-resident
+  prefixes keep their existing pages, and only the new tail run adopts the
+  slot's pages (the cache takes one reference each — the pages now outlive
+  the request).
+* The cache holds one reference per retained page, so a page is *evictable*
+  once no slot maps it (refcount back to 1).  Eviction is LRU over leaf
+  runs (``last_used`` stamped on every traversal): evicting a leaf may
+  expose its parent as the next leaf, so deep cold branches drain
+  bottom-up.  The engine drives eviction from its free-page watermark and
+  from allocation pressure — cached prefixes are always sacrificed before
+  any running request is preempted.
+
+The tree never touches device memory: it is pure host bookkeeping next to
+the pool's free lists, and every structural invariant is checkable with
+:meth:`PrefixCache.check` (used by the property tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+
+class _Node:
+    """One page-aligned run: ``len(key) == len(pages) * page_w``."""
+    __slots__ = ("key", "pages", "children", "last_used")
+
+    def __init__(self, key: Tuple[int, ...], pages: List[int],
+                 last_used: int):
+        self.key = key
+        self.pages = pages
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.last_used = last_used
+
+
+class PrefixCache:
+    """Radix tree of cached prompt prefixes over one :class:`PagedKVPool`."""
+
+    def __init__(self, pool):
+        if pool.page_w is None:
+            raise ValueError("PrefixCache requires a paged pool")
+        self.pool = pool
+        self.page_w = int(pool.page_w)
+        self.root = _Node((), [], 0)
+        self._clock = 0
+        self.lookups = 0
+        self.hits = 0
+        self.nodes_evicted = 0
+        self.pages_evicted = 0
+
+    # ------------------------------------------------------------ utils ---
+    def _chunks(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+        pw = self.page_w
+        return [tuple(tokens[i * pw:(i + 1) * pw])
+                for i in range(len(tokens) // pw)]
+
+    def _walk(self):
+        """Yield (node, parent) over the whole tree (root excluded)."""
+        stack = [(c, self.root) for c in self.root.children.values()]
+        while stack:
+            node, parent = stack.pop()
+            yield node, parent
+            stack.extend((c, node) for c in node.children.values())
+
+    # ----------------------------------------------------------- lookup ---
+    def lookup(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest cached page-aligned prefix of ``tokens``:
+        ``(hit_tokens, pages)`` with ``hit_tokens == len(pages) * page_w``.
+        Traversed nodes are LRU-stamped (a hit keeps its path warm)."""
+        chunks = self._chunks(tokens)
+        self._clock += 1
+        self.lookups += 1
+        node, i, pages = self.root, 0, []
+        while i < len(chunks):
+            child = node.children.get(chunks[i])
+            if child is None:
+                break
+            child.last_used = self._clock
+            ck = self._chunks(child.key)
+            m = 0
+            while (m < len(ck) and i + m < len(chunks)
+                   and ck[m] == chunks[i + m]):
+                pages.append(child.pages[m])
+                m += 1
+            i += m
+            if m < len(ck):      # prefix ends (or diverges) inside this run
+                break
+            node = child
+        if pages:
+            self.hits += 1
+        return i * self.page_w, pages
+
+    # ----------------------------------------------------------- insert ---
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
+        """Retain the page-aligned prefix of ``tokens``, whose K/V lives in
+        ``pages`` (the owning slot's physical pages, one per full page of
+        tokens).  Runs already in the tree keep their existing pages; only
+        the new tail run is adopted, with one cache reference taken per
+        adopted page.  Returns the number of pages adopted."""
+        chunks = self._chunks(tokens)
+        assert len(pages) >= len(chunks), (len(pages), len(chunks))
+        self._clock += 1
+        node, i = self.root, 0
+        while i < len(chunks):
+            first = chunks[i]
+            child = node.children.get(first)
+            if child is None:                    # adopt the whole tail
+                key = sum(chunks[i:], ())
+                new = _Node(key, [int(p) for p in pages[i:len(chunks)]],
+                            self._clock)
+                for p in new.pages:
+                    self.pool.ref_page(p)
+                node.children[first] = new
+                return len(new.pages)
+            child.last_used = self._clock
+            ck = self._chunks(child.key)
+            m = 0
+            while m < len(ck) and i + m < len(chunks) and ck[m] == chunks[i + m]:
+                m += 1
+            if m == len(ck):                     # run fully matched: descend
+                node, i = child, i + m
+                continue
+            if i + m == len(chunks):             # ends inside the run: cached
+                return 0
+            # diverges mid-run: split the run at page m, then the next
+            # iteration hangs the new tail under the head
+            head = _Node(sum(ck[:m], ()), child.pages[:m], self._clock)
+            child.key = sum(ck[m:], ())
+            child.pages = child.pages[m:]
+            head.children[ck[m]] = child
+            node.children[first] = head
+            node, i = head, i + m
+        return 0
+
+    # --------------------------------------------------------- eviction ---
+    def _evict_one(self) -> int:
+        """Drop the least-recently-used *unreferenced leaf* run (no child
+        runs, every page refcounted only by the cache); returns pages
+        freed, 0 when nothing is evictable."""
+        best = None
+        for node, parent in self._walk():
+            if node.children:
+                continue
+            if any(self.pool.page_ref(p) > 1 for p in node.pages):
+                continue                         # a running slot maps it
+            if best is None or node.last_used < best[0].last_used:
+                best = (node, parent)
+        if best is None:
+            return 0
+        node, parent = best
+        parent.children.pop(self._chunks(node.key)[0])
+        for p in node.pages:
+            self.pool.unref_page(p)
+        self.nodes_evicted += 1
+        self.pages_evicted += len(node.pages)
+        return len(node.pages)
+
+    def evict(self, min_pages: int = 1) -> int:
+        """Evict LRU unreferenced leaf runs until at least ``min_pages``
+        pages went back to the free list (or nothing is evictable).
+        Returns the pages actually freed."""
+        freed = 0
+        while freed < min_pages:
+            got = self._evict_one()
+            if not got:
+                break
+            freed += got
+        return freed
+
+    def clear(self) -> int:
+        """Evict every unreferenced prefix (pages still mapped by running
+        slots survive).  Returns pages freed."""
+        freed = 0
+        while True:
+            got = self._evict_one()
+            if not got:
+                return freed
+            freed += got
+
+    def evictable_pages(self) -> int:
+        """Pages reclaimable by cascaded eviction right now: every page in
+        a maximal subtree whose pages all carry only the cache's ref."""
+        def rec(node) -> Tuple[int, bool]:
+            freed, full = 0, True
+            for c in node.children.values():
+                f, ok = rec(c)
+                freed += f
+                full = full and ok
+            full = full and all(self.pool.page_ref(p) == 1
+                                for p in node.pages)
+            if full:
+                freed += len(node.pages)
+            return freed, full
+        return sum(rec(c)[0] for c in self.root.children.values())
+
+    # ------------------------------------------------------------ views ---
+    @property
+    def cached_pages(self) -> int:
+        return sum(len(n.pages) for n, _ in self._walk())
+
+    def pages(self) -> List[int]:
+        """Every physical page the cache currently retains."""
+        out: List[int] = []
+        for n, _ in self._walk():
+            out.extend(n.pages)
+        return out
+
+    def check(self) -> None:
+        """Assert the structural invariants (test hook): page-aligned keys,
+        one page per key page, radix child keying, no physical page owned
+        by two runs, and every owned page live in the pool with the cache's
+        reference accounted."""
+        assert self.root.key == () and self.root.pages == []
+        seen = set()
+        for node, _ in self._walk():
+            assert node.key and len(node.key) % self.page_w == 0, node.key
+            assert len(node.pages) == len(node.key) // self.page_w
+            for p in node.pages:
+                assert 0 <= p < self.pool.num_pages
+                assert self.pool.page_ref(p) >= 1, "cached page is free"
+                assert p not in seen, "page owned by two runs"
+                seen.add(p)
+            for first, c in node.children.items():
+                assert self._chunks(c.key)[0] == first

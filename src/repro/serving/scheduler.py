@@ -148,13 +148,17 @@ class Scheduler:
         self._maybe_finish(run, step)
         return run
 
-    def bind_prefill(self, slot: int, request: Request, step: int) -> SlotRun:
-        """Occupy ``slot`` in the ``prefill`` phase: no prompt tokens are in
-        the cache yet; the engine feeds chunks and calls
-        :meth:`begin_decode` once the prompt completes."""
+    def bind_prefill(self, slot: int, request: Request, step: int,
+                     prefilled: int = 0) -> SlotRun:
+        """Occupy ``slot`` in the ``prefill`` phase; the engine feeds chunks
+        and calls :meth:`begin_decode` once the prompt completes.
+        ``prefilled`` starts the chunk cursor past prompt tokens already in
+        the pool cache — zero for a cold prompt, the page-aligned hit
+        length when a prefix-cache lookup mapped shared pages in."""
+        assert 0 <= prefilled < len(request.prompt)
         run = SlotRun(request=request, slot=slot, admitted_step=step,
                       length=0, pending=-1, generated=[],
-                      phase=PHASE_PREFILL)
+                      phase=PHASE_PREFILL, prefilled=prefilled)
         self.running[slot] = run
         return run
 

@@ -1,0 +1,525 @@
+"""Prefix caching over the paged pool: radix tree + refcounted CoW pages.
+
+The load-bearing claims:
+* a request served with a cache hit produces tokens *byte-identical* to the
+  same request served solo with a cold cache, across dense / Polar gather /
+  Polar Pallas-kernel decode paths (and the MLA latent-page layout),
+  whole-prompt and chunked prefill alike — sharing KV pages is semantically
+  invisible;
+* copy-on-write isolates sharers: two requests that map the same cached
+  prefix and then diverge (a whole-prompt hit recomputes its last token
+  straight into the shared page) never corrupt each other or the cache;
+* refcounts make sharing abort-safe: killing a request mid-chunk while its
+  prefix pages are shared must not free them under the cache (or any other
+  sharer), and seeded-random add/abort/step interleavings with shared
+  prefixes always drain to ``EngineCore.is_quiescent()``;
+* eviction is the pressure valve ordered *before* preemption: cold cached
+  prefixes are shed for watermark headroom and for allocation pressure, so
+  a run that fits once the cache yields never preempts a running request;
+* the radix tree itself (page-aligned runs, boundary-only splits,
+  first-insert-wins pages, LRU leaf eviction) satisfies a model-checked
+  insert/lookup/evict contract — seeded-random always, hypothesis-driven
+  when available.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import default_policy
+from repro.models import init_params, init_routers, prepare_model_config
+from repro.serving import (LLM, Engine, InvalidRequestError, PrefixCache,
+                           Request, SamplingParams, make_serving_jits)
+from repro.serving.scheduler import PHASE_PREFILL
+
+KEY = jax.random.PRNGKey(0)
+CACHE_W = 32
+PW = 8                                   # page width used throughout
+
+# one model per policy kind, shared across every engine in the module (jit
+# triples shared only among engines of identical pool geometry)
+_SETUP = {}
+
+
+def _setup(policy_kind):
+    if policy_kind in _SETUP:
+        return _SETUP[policy_kind]
+    cfg0 = get_smoke_config("opt-125m").replace(dtype="float32",
+                                                param_dtype="float32")
+    if policy_kind == "dense":
+        cfg, pol, routers = cfg0, None, None
+        params = init_params(KEY, cfg, max_seq_len=72)
+    else:
+        pol = dataclasses.replace(default_policy(cfg0, impl="gather"),
+                                  attn_density=0.5, mlp_sparse=False)
+        if policy_kind == "kernel":
+            pol = dataclasses.replace(pol, impl="kernel")
+        cfg = prepare_model_config(cfg0, pol)
+        params = init_params(KEY, cfg, max_seq_len=72)
+        routers = init_routers(jax.random.PRNGKey(1), cfg, pol)
+    _SETUP[policy_kind] = (cfg, params, routers, pol)
+    return _SETUP[policy_kind]
+
+
+def _jits(policy_kind):
+    cfg, _, _, pol = _setup(policy_kind)
+    return make_serving_jits(cfg, pol)
+
+
+def _engine(policy_kind, jits=None, **kw):
+    cfg, params, routers, pol = _setup(policy_kind)
+    kw.setdefault("cache_width", CACHE_W)
+    kw.setdefault("page_w", PW)
+    return Engine(cfg, params, routers=routers, policy=pol,
+                  _jits=jits, **kw)
+
+
+def _drain(core, max_steps=400):
+    steps = 0
+    while not core.done and steps < max_steps:
+        core.step()
+        steps += 1
+    assert core.done, "engine failed to drain"
+    return core.report
+
+
+def _shared_prefix_requests(cfg, *, plen=2 * PW, seed=13):
+    """A (primer), B (same prefix, new suffix), C (the exact prefix — a
+    whole-prompt hit, the CoW trigger)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+    sufa = rng.integers(0, cfg.vocab_size, size=3).tolist()
+    sufb = rng.integers(0, cfg.vocab_size, size=3).tolist()
+    return [Request(rid=0, prompt=prefix + sufa, max_new_tokens=5),
+            Request(rid=1, prompt=prefix + sufb, max_new_tokens=5, arrival=1),
+            Request(rid=2, prompt=list(prefix), max_new_tokens=5, arrival=2)]
+
+
+# ----------------------------------------------- hit == cold-solo bytes ---
+@pytest.mark.parametrize("policy_kind", ["dense", "polar", "kernel"])
+def test_prefix_hit_matches_cold_solo(policy_kind):
+    """Acceptance criterion: cache-hit tokens byte-equal the cold solo
+    serve, in whole-prompt AND chunked prefill, with the counters exact."""
+    cfg = _setup(policy_kind)[0]
+    reqs = _shared_prefix_requests(cfg)
+    jits = _jits(policy_kind)
+    # solos share the hot engines' jit triple, so they run at the same
+    # max_batch (the decode trace is keyed by the cache's shapes)
+    solo = {r.rid: _engine(policy_kind, jits=jits).serve(
+                [dataclasses.replace(r, arrival=0)],
+                max_batch=2).tokens[r.rid] for r in reqs}
+    for chunk in (None, 5):
+        eng = _engine(policy_kind, jits=jits, prefix_cache=True,
+                      prefill_chunk=chunk)
+        core = eng.make_core(max_batch=2)
+        for r in reqs:
+            core.add_request(r.rid, r.prompt,
+                             SamplingParams(max_tokens=r.max_new_tokens),
+                             arrival=r.arrival)
+        rep = _drain(core)
+        assert rep.tokens == solo, chunk
+        # rid 1 hits the 2-page prefix (cursor 16); rid 2's prompt is fully
+        # cached, so it restarts at L-1 = 15 (the CoW write)
+        assert rep.prefix_hits == 2
+        assert rep.prefix_hit_tokens == 2 * (2 * PW)
+        assert rep.prefill_tokens_saved == 16 + 15
+        assert rep.cow_copies >= 1
+        assert rep.cached_prefix_pages == 2
+        # prompt tokens actually pushed: everything not saved goes through
+        # the chunk path in chunked mode; whole-prompt mode pushes only the
+        # hit remainders through it
+        total = sum(len(r.prompt) for r in reqs)
+        pushed = total - rep.prefill_tokens_saved
+        assert rep.prefill_tokens == (pushed if chunk else pushed - len(reqs[0].prompt))
+        assert rep.preemptions == 0
+        assert core.decode_jit_traces() == 1
+        assert core.is_quiescent()
+        core.prefix_cache.clear()
+        assert core.pool.is_quiescent()
+        assert core.pool.free_pages == core.pool.num_pages
+
+
+def test_mla_prefix_hit_matches_cold_solo():
+    """The MLA latent layout (ckv/krope pages) must survive sharing and the
+    copy-on-write page copy too."""
+    cfg0 = get_smoke_config("deepseek-v3-671b")
+    cfg = cfg0.replace(dtype="float32", param_dtype="float32",
+                       moe=dataclasses.replace(cfg0.moe, impl="dense"),
+                       mtp=False)
+    params = init_params(KEY, cfg, max_seq_len=CACHE_W + 8)
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, size=2 * PW).tolist()
+    reqs = [Request(rid=0, prompt=prefix + [7, 8, 9], max_new_tokens=3),
+            Request(rid=1, prompt=list(prefix), max_new_tokens=3, arrival=1)]
+    jits = make_serving_jits(cfg, None)
+    solo = {r.rid: Engine(cfg, params, cache_width=CACHE_W, page_w=PW,
+                          _jits=jits).serve(
+                [dataclasses.replace(r, arrival=0)],
+                max_batch=2).tokens[r.rid] for r in reqs}
+    eng = Engine(cfg, params, cache_width=CACHE_W, page_w=PW,
+                 prefix_cache=True, _jits=jits)
+    core = eng.make_core(max_batch=2)
+    for r in reqs:
+        core.add_request(r.rid, r.prompt,
+                         SamplingParams(max_tokens=r.max_new_tokens),
+                         arrival=r.arrival)
+    rep = _drain(core)
+    assert rep.tokens == solo
+    assert rep.prefix_hits == 1 and rep.cow_copies >= 1
+    assert core.is_quiescent()
+
+
+# --------------------------------------------------- CoW divergence -------
+def test_cow_divergence_keeps_sharers_isolated():
+    """Two sampled requests whose prompts are exactly the cached prefix:
+    both full hits, both copy-on-write the shared last page, and each must
+    still reproduce its cold-solo tokens — neither corrupts the other nor
+    the cached prefix itself."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(21)
+    prefix = rng.integers(0, cfg.vocab_size, size=2 * PW).tolist()
+    sp = {0: SamplingParams(max_tokens=4),
+          1: SamplingParams(max_tokens=4, temperature=0.9, seed=11),
+          2: SamplingParams(max_tokens=4, temperature=0.9, seed=22)}
+    jits = _jits("dense")
+    solo = {}
+    for rid, p in sp.items():
+        core = _engine("dense", jits=jits).make_core(max_batch=2)
+        core.add_request(rid, list(prefix), p)
+        solo[rid] = _drain(core).tokens[rid]
+    eng = _engine("dense", jits=jits, prefix_cache=True)
+    core = eng.make_core(max_batch=2)
+    for rid, p in sp.items():
+        core.add_request(rid, list(prefix), p, arrival=rid)
+    rep = _drain(core)
+    assert rep.tokens == solo
+    assert rep.prefix_hits == 2 and rep.cow_copies >= 2
+    # the cached prefix survived both CoW'ing sharers intact
+    hit, pages = core.prefix_cache.lookup(prefix)
+    assert hit == 2 * PW and len(pages) == 2
+    assert core.is_quiescent()
+
+
+# ------------------------------------------------ abort / leak freedom ----
+def test_abort_mid_chunk_spares_shared_prefix():
+    """Aborting a request mid-chunked-prefill while its prefix pages are
+    shared with the cache must only drop the aborter's references — the
+    cache keeps the prefix and the next request still hits it."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(31)
+    prefix = rng.integers(0, cfg.vocab_size, size=2 * PW).tolist()
+    jits = _jits("dense")
+    eng = _engine("dense", jits=jits, prefix_cache=True, prefill_chunk=2)
+    core = eng.make_core(max_batch=2)
+    core.add_request(0, prefix + [3, 4], SamplingParams(max_tokens=2))
+    _drain(core)                               # rid 0 primes the cache
+    cached = core.prefix_cache.pages()
+    assert len(cached) == 2
+    core.add_request(1, prefix + rng.integers(0, cfg.vocab_size,
+                                              size=6).tolist(),
+                     SamplingParams(max_tokens=3))
+    core.step()                                # admit + first chunk
+    run = core.sched.running[core._prefilling]
+    assert run.phase == PHASE_PREFILL and run.prefilled > 2 * PW
+    assert all(core.pool.page_ref(p) == 2 for p in cached)  # cache + rid 1
+    assert core.abort(1)
+    # the aborter's references died with it; the cache's survived
+    assert all(core.pool.page_ref(p) == 1 for p in cached)
+    core.prefix_cache.check()
+    suffix = [5, 6, 7]
+    solo_core = _engine("dense", jits=jits).make_core(max_batch=2)
+    solo_core.add_request(2, prefix + suffix, SamplingParams(max_tokens=3))
+    solo = _drain(solo_core).tokens[2]
+    core.add_request(2, prefix + suffix, SamplingParams(max_tokens=3))
+    rep = _drain(core)
+    assert rep.tokens[2] == solo
+    assert rep.prefix_hits == 2 and core.prefix_cache.pages() != []
+    assert core.is_quiescent()
+    core.prefix_cache.clear()
+    assert core.pool.is_quiescent()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_interleaving_with_shared_prefixes(seed):
+    """Seeded-random add/abort/step interleavings where most prompts share
+    a prefix (mid-chunk aborts of sharers and pool-pressure included) must
+    drain quiescent — cache-retained pages exactly once-referenced, pool
+    empty after ``clear()``."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(700 + seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    n = int(rng.integers(3, 6))
+    if "prefix-interleave" not in _SETUP:    # same geometry: share traces
+        _SETUP["prefix-interleave"] = _jits("dense")
+    eng = _engine("dense", jits=_SETUP["prefix-interleave"], cache_width=16,
+                  page_w=4, num_pages=6, prefill_chunk=2, max_step_tokens=3,
+                  prefix_cache=True, watermark=2 if seed % 2 else 0)
+    core = eng.make_core(max_batch=2)
+    for rid in range(n):
+        if rng.random() < 0.7:               # a sharer (maybe the exact prefix)
+            prompt = prefix + rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(0, 5))).tolist()
+        else:                                # an unrelated loner
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=int(rng.integers(1, 12))).tolist()
+        core.add_request(rid, prompt,
+                         SamplingParams(max_tokens=int(rng.integers(1, 5))),
+                         arrival=int(rng.integers(0, 4)))
+    abort_at = {int(step): int(rid)
+                for rid, step in zip(rng.permutation(n)[:2],
+                                     rng.integers(0, 15, size=2))}
+    outs, steps = [], 0
+    while not core.done and steps < 300:
+        if steps in abort_at:
+            core.abort(abort_at[steps])
+        outs.extend(core.step())
+        core.prefix_cache.check()
+        steps += 1
+    assert core.done, "engine failed to drain"
+    assert {o.rid for o in outs if o.finished} == set(range(n))
+    assert core.is_quiescent()
+    core.prefix_cache.check()
+    core.prefix_cache.clear()
+    assert core.pool.is_quiescent()
+    assert core.pool.free_pages == core.pool.num_pages
+    assert (core.pool.page_table() == -1).all()
+    assert core.decode_jit_traces() == 1
+
+
+# -------------------------------------------- eviction as pressure valve --
+def test_watermark_evicts_lru_prefix():
+    """The free-page watermark sheds cold cached prefixes oldest-first:
+    with room for one cached prompt, only the most recent survives."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).tolist()
+               for _ in range(3)]
+    eng = _engine("dense", cache_width=16, page_w=4, prefix_cache=True,
+                  watermark=6)
+    core = eng.make_core(max_batch=2)        # 8 pages, floor of 6 free
+    for rid, p in enumerate(prompts):
+        core.add_request(rid, p, SamplingParams(max_tokens=2),
+                         arrival=6 * rid)    # sequential: strict LRU ages
+    _drain(core)
+    cache = core.prefix_cache
+    assert cache.nodes_evicted == 2
+    assert core.pool.free_pages >= 6
+    assert cache.lookup(prompts[2])[0] == 8      # newest survived
+    assert cache.lookup(prompts[0])[0] == 0      # oldest evicted
+    assert cache.lookup(prompts[1])[0] == 0
+    assert core.is_quiescent()
+
+
+def test_allocation_pressure_evicts_before_preempting():
+    """A cold cached prefix is sacrificed the moment pages run short — both
+    for a whole-prompt admission whose gate counted evictable pages and for
+    decode growth — and no running request is ever preempted for it."""
+    cfg = _setup("dense")[0]
+    rng = np.random.default_rng(43)
+    warm = rng.integers(0, cfg.vocab_size, size=6).tolist()
+    big = rng.integers(0, cfg.vocab_size, size=13).tolist()
+    jits = _jits("dense")
+    solo = _engine("dense", jits=jits, cache_width=16,
+                   page_w=4).serve([Request(rid=1, prompt=big,
+                                            max_new_tokens=2)],
+                                   max_batch=1).tokens[1]
+    eng = _engine("dense", jits=jits, cache_width=16, page_w=4, num_pages=4,
+                  prefix_cache=True)
+    core = eng.make_core(max_batch=1)
+    core.add_request(0, warm, SamplingParams(max_tokens=2))
+    _drain(core)
+    assert core.prefix_cache.cached_pages == 1   # 6 tokens -> 1 aligned page
+    # big needs all 4 pages; only 3 are free until the cache yields
+    core.add_request(1, big, SamplingParams(max_tokens=2))
+    rep = _drain(core)
+    assert rep.tokens[1] == solo
+    assert core.prefix_cache.nodes_evicted == 1
+    assert rep.preemptions == 0
+    assert core.is_quiescent()
+
+
+# ------------------------------------------------------ knob validation ---
+def test_knob_validation():
+    with pytest.raises(InvalidRequestError, match="paged"):
+        _engine("dense", page_w=None,
+                prefix_cache=True).make_core(max_batch=1)
+    with pytest.raises(ValueError, match="requires prefix_cache"):
+        _engine("dense", watermark=2).make_core(max_batch=1)
+    with pytest.raises(ValueError, match="num_pages"):
+        _engine("dense", prefix_cache=True, num_pages=4,
+                watermark=4).make_core(max_batch=1)
+    cfg = _setup("dense")[0].replace(kv_quant=True)
+    params = _setup("dense")[1]
+    with pytest.raises(ValueError, match="prefix_cache unsupported"):
+        Engine(cfg, params, cache_width=CACHE_W, page_w=PW,
+               prefix_cache=True).make_core(max_batch=1)
+
+
+def test_llm_frontend_hits_across_generate_calls():
+    """The knobs thread through ``LLM`` and the cache persists across
+    ``generate`` calls on one frontend (one long-lived core)."""
+    cfg, params, _, _ = _setup("dense")
+    jits = _jits("dense")
+    rng = np.random.default_rng(47)
+    prefix = rng.integers(0, cfg.vocab_size, size=2 * PW).tolist()
+    follow = prefix + [5, 6]
+    sp = SamplingParams(max_tokens=3)
+    cold = LLM(cfg, params, cache_width=CACHE_W, page_w=PW,
+               _jits=jits).generate([follow], sp)[0]
+    llm = LLM(cfg, params, cache_width=CACHE_W, page_w=PW,
+              prefix_cache=True, watermark=1, _jits=jits)
+    llm.generate([prefix + [1, 2]], sp)          # call 1 primes the cache
+    out = llm.generate([follow], sp)[0]          # call 2 hits it
+    assert out.token_ids == cold.token_ids
+    assert llm.report.prefix_hits == 1
+    assert llm.report.prefill_tokens_saved == 2 * PW
+
+
+# =================================================== radix tree contract ==
+class _StubPool:
+    """Refcount-only pool stand-in: exactly the surface PrefixCache uses."""
+    page_w = 4
+
+    def __init__(self, num_pages=512):
+        self.num_pages = num_pages
+        self._ref = np.zeros(num_pages, np.int64)
+        self._next = 0
+
+    def alloc(self, n):                  # a "slot" filling n pages
+        ids = list(range(self._next, self._next + n))
+        self._next += n
+        self._ref[ids] = 1
+        return ids
+
+    def free(self, pages):               # the slot's release()
+        self._ref[list(pages)] -= 1
+
+    def page_ref(self, p):
+        return int(self._ref[p])
+
+    def ref_page(self, p):
+        assert self._ref[p] >= 1
+        self._ref[p] += 1
+
+    def unref_page(self, p):
+        assert self._ref[p] >= 1
+        self._ref[p] -= 1
+
+
+def _check_radix_ops(seqs):
+    """Model-checked contract: the tree behaves as a first-insert-wins
+    prefix map at page granularity.  ``model`` maps each chunk-path to its
+    canonical page; lookups must return exactly the model's walk, inserts
+    must adopt exactly the paths the model lacked, nothing referenced by a
+    live slot is ever evictable, and ``clear()`` after the slots die
+    returns every page reference."""
+    pool = _StubPool()
+    cache = PrefixCache(pool)
+    pw = pool.page_w
+    model, slot_pages = {}, []
+    for tokens in seqs:
+        chunks = [tuple(tokens[i * pw:(i + 1) * pw])
+                  for i in range(len(tokens) // pw)]
+        hit, pages = cache.lookup(tokens)
+        want = []
+        for i in range(len(chunks)):
+            page = model.get(tuple(chunks[:i + 1]))
+            if page is None:
+                break
+            want.append(page)
+        assert hit == len(want) * pw and pages == want, tokens
+        mine = pool.alloc(len(chunks))
+        slot_pages.append(mine)
+        missing = sum(tuple(chunks[:i + 1]) not in model
+                      for i in range(len(chunks)))
+        adopted = cache.insert(tokens, mine)
+        assert adopted == missing, tokens
+        for i in range(len(chunks)):
+            model.setdefault(tuple(chunks[:i + 1]), mine[i])
+        cache.check()
+        assert cache.evict(1) == 0       # every page slot-referenced: pinned
+        hit2, pages2 = cache.lookup(tokens)
+        assert hit2 == len(chunks) * pw
+        assert pages2 == [model[tuple(chunks[:i + 1])]
+                          for i in range(len(chunks))]
+    total = cache.cached_pages
+    assert total == len(model)
+    for mine in slot_pages:              # all slots release: evictable now
+        pool.free(mine)
+    cache.check()
+    assert cache.evictable_pages() == total
+    freed = cache.clear()
+    assert freed == total and cache.cached_pages == 0
+    assert (pool._ref == 0).all(), "cache leaked page references"
+
+
+def test_radix_model_contract_directed():
+    """Directed shapes: deep chains, boundary splits, shared prefixes,
+    sub-page tails, the exact-prefix re-insert."""
+    a, b, c = [0] * 4, [1] * 4, [2] * 4
+    _check_radix_ops([
+        a + b + c,          # one 3-page run
+        a + b + c,          # exact re-insert: adopts nothing
+        a + b,              # fully inside the run
+        a + c + c,          # splits the run at page 1
+        a + c,              # lands on the split head
+        b + [3, 3],         # sub-page tail: only 1 page cached
+        [5, 5, 5],          # shorter than a page: nothing to cache
+        c + a + b + c,      # unrelated sibling chain
+    ])
+
+
+def test_radix_lru_eviction_order():
+    """Leaf eviction is LRU with lookups keeping paths warm, and parents
+    become evictable bottom-up."""
+    pool = _StubPool()
+    cache = PrefixCache(pool)
+    s1, s2 = [0] * 8, [1] * 8
+    p1, p2 = pool.alloc(2), pool.alloc(2)
+    cache.insert(s1, p1)
+    cache.insert(s2, p2)
+    pool.free(p1)
+    pool.free(p2)
+    cache.lookup(s1)                     # s1 is now the warm one
+    assert cache.evict(1) == 2           # s2's whole 2-page run goes
+    assert cache.lookup(s2) == (0, [])
+    assert cache.lookup(s1)[0] == 8
+    deep = [0] * 8 + [7] * 4             # child under s1's run
+    p3 = pool.alloc(3)
+    assert cache.insert(deep, p3) == 1
+    pool.free(p3)
+    # the leaf drains before its parent: cascaded bottom-up
+    assert cache.evict(1) == 1
+    assert cache.lookup(deep)[0] == 8    # parent still cached
+    assert cache.evict(10) == 2
+    assert cache.cached_pages == 0
+    assert (pool._ref == 0).all()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_radix_model_contract_random(seed):
+    """Seeded-random twin of the hypothesis property (always runs): token
+    sequences over a tiny alphabet maximize shared prefixes and splits."""
+    rng = np.random.default_rng(900 + seed)
+    seqs = [rng.integers(0, 3, size=int(rng.integers(0, 22))).tolist()
+            for _ in range(int(rng.integers(2, 9)))]
+    _check_radix_ops(seqs)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.lists(st.integers(0, 2), max_size=22),
+                    min_size=1, max_size=8))
+    @settings(max_examples=40, deadline=None)
+    def test_radix_model_contract_property(seqs):
+        """Hypothesis-driven search over the same insert/lookup/evict
+        model contract."""
+        _check_radix_ops(seqs)
+except ImportError:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                             "(requirements-dev.txt)")
+    def test_radix_model_contract_property():
+        pass
