@@ -1,42 +1,121 @@
 """Shared benchmark substrate: a small trained OPT-style model (ReLU MHA —
 the paper's naturally-sparse family) + trained routers, cached on disk so
-every benchmark reuses the same artifact."""
+every benchmark reuses the same artifact — plus the shared result-artifact
+writers (:func:`write_json_rows` / :func:`write_json` /
+:func:`write_csv_rows`): every benchmark artifact carries a
+``schema_version`` field and lands via an atomic temp-file rename, so a
+killed run never leaves a half-written JSON for the report stage to trip
+over.  The writers are stdlib-only and the heavy model imports live inside
+:func:`get_toy_model`, so ``benchmarks.common`` is cheap to import from
+non-benchmark code (e.g. ``repro.launch.roofline``)."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import tempfile
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import load_checkpoint, save_checkpoint
-from repro.configs import get_config
-from repro.core import default_policy
-from repro.data import DataConfig, lm_batches
-from repro.models import init_params, init_routers, prepare_model_config
-from repro.training import train, train_routers
 
 CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "bench_cache")
 
-# name kept as "opt-125m" so default_policy applies the OPT recipe
-# (ReLU MLP sparsity + head sparsity)
-BENCH_CFG = get_config("opt-125m").replace(
-    num_layers=8, d_model=256, num_heads=8, num_kv_heads=8,
-    head_dim=32, d_ff=1024, vocab_size=512, segments=())
+# ----------------------------------------------------- artifact writers ---
+# bump when a writer changes row shape incompatibly; consumers
+# (make_tables, CI validation) can gate on it
+SCHEMA_VERSION = 1
 
+
+def _atomic_write_text(path: str, text: str) -> None:
+    """Write ``text`` to ``path`` via temp file + ``os.replace`` so readers
+    never observe a partial artifact (rename is atomic on POSIX)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def write_text(path: str, text: str) -> None:
+    """Public alias of the atomic text writer, for non-JSON artifacts
+    (Prometheus expositions, rendered tables)."""
+    _atomic_write_text(path, text)
+
+
+def _stamp(row: dict, schema: str) -> dict:
+    out = dict(row)
+    out.setdefault("schema", schema)
+    out.setdefault("schema_version", SCHEMA_VERSION)
+    return out
+
+
+def write_json_rows(path: str, rows, *, schema: str) -> list:
+    """Atomically write one JSON object per line (JSONL), each stamped with
+    ``schema`` / ``schema_version``.  Returns the stamped rows."""
+    stamped = [_stamp(r, schema) for r in rows]
+    _atomic_write_text(path, "".join(json.dumps(r) + "\n" for r in stamped))
+    return stamped
+
+
+def write_json(path: str, obj, *, schema: str, indent: int = 2):
+    """Atomically write one JSON document.  Dicts are stamped directly;
+    lists get each dict element stamped.  Returns the stamped object."""
+    if isinstance(obj, dict):
+        obj = _stamp(obj, schema)
+    elif isinstance(obj, list):
+        obj = [_stamp(r, schema) if isinstance(r, dict) else r for r in obj]
+    _atomic_write_text(path, json.dumps(obj, indent=indent) + "\n")
+    return obj
+
+
+def write_csv_rows(path: str, rows,
+                   header=("name", "config", "value")) -> None:
+    """Atomically write ``name,config,value`` rows (the ``benchmarks.run``
+    stdout format) as a CSV artifact, first line ``# schema_version=N``."""
+    lines = [f"# schema_version={SCHEMA_VERSION}", ",".join(header)]
+    lines += [",".join(str(c) for c in row) for row in rows]
+    _atomic_write_text(path, "\n".join(lines) + "\n")
+
+
+# ----------------------------------------------------- model substrate ----
 SEQ = 64
 
 
-def data_cfg(batch: int, seed: int = 0) -> DataConfig:
-    return DataConfig(vocab_size=BENCH_CFG.vocab_size, seq_len=SEQ,
+def _bench_cfg():
+    from repro.configs import get_config
+    # name kept as "opt-125m" so default_policy applies the OPT recipe
+    # (ReLU MLP sparsity + head sparsity)
+    return get_config("opt-125m").replace(
+        num_layers=8, d_model=256, num_heads=8, num_kv_heads=8,
+        head_dim=32, d_ff=1024, vocab_size=512, segments=())
+
+
+def data_cfg(batch: int, seed: int = 0):
+    from repro.data import DataConfig
+    return DataConfig(vocab_size=_bench_cfg().vocab_size, seq_len=SEQ,
                       batch_size=batch, seed=seed)
 
 
 def get_toy_model(train_steps: int = 150):
     """(cfg, params, routers, policy) — trained once, cached."""
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.core import default_policy
+    from repro.data import lm_batches
+    from repro.models import init_params, init_routers, prepare_model_config
+    from repro.training import train, train_routers
+
     os.makedirs(CACHE, exist_ok=True)
+    BENCH_CFG = _bench_cfg()
     pol = dataclasses.replace(default_policy(BENCH_CFG, impl="gather"),
                               attn_density=0.5, mlp_density=0.3)
     cfg = prepare_model_config(BENCH_CFG, pol)
@@ -76,6 +155,8 @@ def get_toy_model(train_steps: int = 150):
 
 def timeit(fn, *args, iters: int = 20, warmup: int = 3):
     """Median wall time (us) of a jitted call on this CPU."""
+    import jax
+    import numpy as np
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -87,6 +168,10 @@ def timeit(fn, *args, iters: int = 20, warmup: int = 3):
 
 
 def perplexity(cfg, params, batches, policy=None, routers=None) -> float:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
     from repro.models import forward
     fwd = jax.jit(lambda p, t: forward(p, cfg, tokens=t, policy=policy,
                                        routers=routers)["logits"])

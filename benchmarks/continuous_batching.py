@@ -48,9 +48,10 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import get_toy_model
+from benchmarks.common import get_toy_model, write_json_rows, write_text
 from repro.models import init_serve_cache
-from repro.serving import (LLM, Request, SamplingParams, make_serving_jits,
+from repro.serving import (LLM, MetricsRegistry, Request, SamplingParams,
+                           TraceRecorder, make_serving_jits,
                            poisson_requests)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -118,21 +119,29 @@ def _contiguous_hbm_bytes(cfg, max_batch: int, width: int) -> int:
 
 def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
                 impl=None, page_w=None, num_pages=None, prefill_chunk=None,
-                max_step_tokens=None, prefix_cache=False, warmup=None):
+                max_step_tokens=None, prefix_cache=False, warmup=None,
+                metrics=None, tracer=None):
     kw = {}
     if pol is not None:
         if impl:
             pol = dataclasses.replace(pol, impl=impl)
         kw = dict(routers=routers, policy=pol)
 
-    jits = make_serving_jits(cfg, kw.get("policy"))
+    # with a registry requested, compile the telemetry outputs into the
+    # (still single-trace) decode jit; the warmup LLM shares the jits but
+    # carries no registry, so it never pays the host transfer
+    jits = make_serving_jits(cfg, kw.get("policy"),
+                             telemetry=metrics is not None)
 
-    def _llm():
+    def _llm(observed):
         return LLM(cfg, params, cache_width=cache_width, page_w=page_w,
                    num_pages=num_pages, max_batch=max_batch,
                    prefill_chunk=prefill_chunk,
                    max_step_tokens=max_step_tokens,
-                   prefix_cache=prefix_cache, _jits=jits, **kw)
+                   prefix_cache=prefix_cache,
+                   metrics=metrics if observed else None,
+                   tracer=tracer if observed else None,
+                   _jits=jits, **kw)
 
     def _run(llm, trace):
         outs = llm.generate([r.prompt for r in trace],
@@ -146,17 +155,18 @@ def _serve_once(cfg, params, routers, pol, reqs, *, max_batch, cache_width,
     # of the measured trace (in particular the adversary's long prompt, in
     # BOTH the chunked and whole-prompt variants), or compile time pollutes
     # the measured ITL tail
-    _run(_llm(), warmup if warmup is not None else reqs[:2])
-    llm = _llm()
+    _run(_llm(False), warmup if warmup is not None else reqs[:2])
+    llm = _llm(True)
     report = _run(llm, reqs)
     assert llm.decode_jit_traces() <= 1, "continuous batching re-jitted!"
-    return report
+    return report, llm.core
 
 
 def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         impl: str = "gather", seed: int = 0, page_w: int = 16,
         page_share: float = 0.5, workload: str = "poisson",
-        prefill_chunk=None, max_step_tokens=None, kv_quant: bool = False):
+        prefill_chunk=None, max_step_tokens=None, kv_quant: bool = False,
+        metrics_out=None, trace_out=None):
     if num_requests < 1:
         raise SystemExit("--num-requests must be >= 1")
     cfg, params, routers, pol = get_toy_model()
@@ -225,17 +235,32 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         full = max_batch * pages_per_slot
         num_pages = max(pages_per_slot, int(full * page_share))
     contig_hbm = _contiguous_hbm_bytes(cfg, max_batch, cache_width)
+    observe = metrics_out is not None or trace_out is not None
+    last_reg = last_tracer = None
     rows, json_rows, reps = [], [], {}
     for name, policy, variant, chunk, budget, pcache in variants:
-        rep = _serve_once(cfg, params, routers, policy, reqs,
-                          max_batch=max_batch, cache_width=cache_width,
-                          impl=impl if name == "polar" else None,
-                          page_w=page_w if paged else None,
-                          num_pages=num_pages, prefill_chunk=chunk,
-                          max_step_tokens=budget, prefix_cache=pcache,
-                          warmup=warmup)
+        # one fresh registry + recorder per variant so series never mix
+        # runs; the artifacts written at the end are the LAST variant's
+        # (the interesting one: chunked / cache_on / polar)
+        reg = MetricsRegistry() if observe else None
+        tracer = TraceRecorder() if observe else None
+        rep, core = _serve_once(cfg, params, routers, policy, reqs,
+                                max_batch=max_batch, cache_width=cache_width,
+                                impl=impl if name == "polar" else None,
+                                page_w=page_w if paged else None,
+                                num_pages=num_pages, prefill_chunk=chunk,
+                                max_step_tokens=budget, prefix_cache=pcache,
+                                warmup=warmup, metrics=reg, tracer=tracer)
         assert len(rep.tokens) == num_requests
         reps[variant] = rep
+        last_reg, last_tracer = reg, tracer
+        spars = {"head_union_occupancy": None, "head_selected_frac": None,
+                 "mlp_union_density": None}
+        if reg is not None and core.sparsity_log:
+            for k in spars:
+                vals = [r[k] for r in core.sparsity_log if r[k] is not None]
+                if vals:
+                    spars[k] = round(float(np.mean(vals)), 4)
         row = {
             "benchmark": "continuous_batching",
             "workload": workload,
@@ -286,6 +311,12 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
             "prefill_tokens_saved": rep.prefill_tokens_saved,
             "cow_copies": rep.cow_copies,
             "cached_prefix_pages": rep.cached_prefix_pages,
+            # ------------------------ realized sparsity (decode steps) ----
+            # means over the engine's per-step sparsity_log; None when the
+            # run was not observed (--metrics-out) or no layer is routed
+            "sparsity_head_union_occupancy_mean": spars["head_union_occupancy"],
+            "sparsity_head_selected_frac_mean": spars["head_selected_frac"],
+            "sparsity_mlp_union_density_mean": spars["mlp_union_density"],
         }
         json_rows.append(row)
         label = f"{name}_{variant}_mb{max_batch}"
@@ -337,13 +368,17 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         rows.append(("cb_adversary_itl_p99_shrink", f"mb{max_batch}",
                      round(itl["whole_prompt"] / itl["chunked"], 3)))
 
-    os.makedirs(RESULTS, exist_ok=True)
     out_path = os.path.join(RESULTS, "continuous_batching.json")
-    with open(out_path, "w") as f:
-        for row in json_rows:
-            f.write(json.dumps(row) + "\n")
+    json_rows = write_json_rows(out_path, json_rows,
+                                schema="continuous_batching")
     for row in json_rows:
         print(json.dumps(row))
+    if metrics_out is not None and last_reg is not None:
+        write_text(metrics_out, last_reg.to_prometheus_text())
+        print(f"# wrote {metrics_out}")
+    if trace_out is not None and last_tracer is not None:
+        write_text(trace_out, json.dumps(last_tracer.to_perfetto()))
+        print(f"# wrote {trace_out}")
     return rows
 
 
@@ -384,6 +419,13 @@ def main():
     ap.add_argument("--max-step-tokens", type=int, default=None,
                     help="per-step token budget, decode-first "
                          "(adversary default: prefill_chunk + max_batch)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final variant's Prometheus text "
+                         "exposition here (also enables the per-row "
+                         "sparsity_* columns for every variant)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the final variant's Perfetto trace_event "
+                         "JSON here (open in ui.perfetto.dev)")
     args = ap.parse_args()
     impl = args.impl
     if args.attn_impl is not None:      # forcing flag wins over --impl
@@ -393,7 +435,9 @@ def main():
                                    args.page_w, args.page_share,
                                    args.workload, args.prefill_chunk,
                                    args.max_step_tokens,
-                                   kv_quant=args.kv_quant):
+                                   kv_quant=args.kv_quant,
+                                   metrics_out=args.metrics_out,
+                                   trace_out=args.trace_out):
         print(f"{name},{config},{value}")
 
 

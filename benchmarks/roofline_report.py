@@ -1,4 +1,8 @@
-"""Deliverable (g): roofline table from the dry-run JSON records."""
+"""Deliverable (g): roofline table from the dry-run JSON records.
+
+Run as a module (``python -m benchmarks.roofline_report [--csv-out F]``)
+to also land the table as a versioned CSV artifact via the shared atomic
+writer in :mod:`benchmarks.common`."""
 from __future__ import annotations
 
 import glob
@@ -38,3 +42,24 @@ def run():
     rows.append(("dryrun_ok", "count", ok))
     rows.append(("dryrun_fail", "count", fail))
     return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from benchmarks.common import write_csv_rows
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--csv-out", default=None,
+                    help="also write the table as a CSV artifact")
+    args = ap.parse_args(argv)
+    rows = run()
+    for name, config, value in rows:
+        print(f"{name},{config},{value}")
+    if args.csv_out:
+        write_csv_rows(args.csv_out, rows)
+        print(f"# wrote {args.csv_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only name]
+    PYTHONPATH=src python -m benchmarks.run [--only name] [--csv-out F]
 
-Prints ``name,config,value`` CSV rows (one function per paper table)."""
+Prints ``name,config,value`` CSV rows (one function per paper table);
+``--csv-out`` additionally lands the same rows as a schema-versioned CSV
+artifact via the shared atomic writer (:mod:`benchmarks.common`)."""
 from __future__ import annotations
 
 import argparse
@@ -27,9 +29,12 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--csv-out", default=None,
+                    help="also write all rows as a CSV artifact")
     args = ap.parse_args()
     print("name,config,value")
     failures = 0
+    all_rows = []
     for mod_name, desc in SUITES:
         if args.only and args.only != mod_name:
             continue
@@ -39,11 +44,19 @@ def main() -> None:
             rows = mod.run()
             for name, config, value in rows:
                 print(f"{name},{config},{value}")
-            print(f"_bench_wall_s,{mod_name},{time.time() - t0:.1f}")
+            all_rows.extend(rows)
+            wall = ("_bench_wall_s", mod_name, f"{time.time() - t0:.1f}")
+            all_rows.append(wall)
+            print(",".join(wall))
         except Exception as e:
             failures += 1
-            print(f"_bench_error,{mod_name},{type(e).__name__}:{e}")
+            err = ("_bench_error", mod_name, f"{type(e).__name__}:{e}")
+            all_rows.append(err)
+            print(",".join(err))
             traceback.print_exc(file=sys.stderr)
+    if args.csv_out:
+        from benchmarks.common import write_csv_rows
+        write_csv_rows(args.csv_out, all_rows)
     if failures:
         raise SystemExit(1)
 

@@ -11,6 +11,10 @@ latencies are reported alongside throughput:
 
     PYTHONPATH=src python examples/serve_batched.py --continuous
 
+Add --metrics to attach a ``MetricsRegistry`` and watch a one-line gauge
+ticker (running / waiting / KV pages free / tok/s) repaint live while the
+engine serves.
+
 With --stream, tokens are printed as the engine produces them via
 ``LLM.stream`` — heterogeneous per-request sampling (greedy next to
 temperature/top-k next to top-p in the same compiled decode batch) and one
@@ -36,8 +40,9 @@ sys.path.insert(0, "benchmarks")
 from common import data_cfg, get_toy_model  # noqa: E402
 
 from repro.data import token_stream  # noqa: E402
-from repro.serving import (LLM, Engine, SamplingParams,  # noqa: E402
-                           make_serving_jits, poisson_requests)
+from repro.serving import (LLM, Engine, MetricsRegistry,  # noqa: E402
+                           SamplingParams, make_serving_jits,
+                           poisson_requests)
 
 
 def fixed_batch(args, cfg, params, routers, pol):
@@ -63,6 +68,31 @@ def fixed_batch(args, cfg, params, routers, pol):
               f"{tps['polar']:>12.1f} {tps['polar'] / tps['dense']:>12.2f}")
 
 
+def _metrics_ticker(llm, reg, trace):
+    """Drive the stream while repainting one gauge line per engine step:
+    live proof the registry updates as the batch composition shifts."""
+    import time as _time
+    t0 = _time.perf_counter()
+    last_step = -1
+    for out in llm.stream([r.prompt for r in trace],
+                          [SamplingParams(max_tokens=r.max_new_tokens)
+                           for r in trace],
+                          arrivals=[r.arrival for r in trace]):
+        step = int(reg.value("engine_steps_total"))
+        if step == last_step:
+            continue
+        last_step = step
+        toks = reg.value("engine_tokens_decoded_total")
+        dt = max(_time.perf_counter() - t0, 1e-9)
+        free = reg.value("kv_pages_free")
+        line = (f"step {step:>4} | running {int(reg.value('engine_requests_running')):>2} "
+                f"| waiting {int(reg.value('engine_requests_waiting')):>2} "
+                f"| pages free {int(free):>3} "
+                f"| {toks / dt:7.1f} tok/s")
+        print("\r" + line, end="", flush=True)
+    print()
+
+
 def continuous(args, cfg, params, routers, pol):
     reqs = poisson_requests(args.num_requests, args.rate,
                             vocab_size=cfg.vocab_size, prompt_len=(4, 16),
@@ -70,12 +100,13 @@ def continuous(args, cfg, params, routers, pol):
     page_w = None if args.page_w == 0 else args.page_w
     for name, kw in [("dense", {}),
                      ("polar", dict(routers=routers, policy=pol))]:
-        jits = make_serving_jits(cfg, kw.get("policy"))
+        jits = make_serving_jits(cfg, kw.get("policy"),
+                                 telemetry=args.metrics)
 
-        def _llm():
+        def _llm(reg=None):
             return LLM(cfg, params, cache_width=64, page_w=page_w,
                        num_pages=args.num_pages, max_batch=args.max_batch,
-                       _jits=jits, **kw)
+                       metrics=reg, _jits=jits, **kw)
 
         def _run(llm, trace):
             llm.generate([r.prompt for r in trace],
@@ -84,8 +115,14 @@ def continuous(args, cfg, params, routers, pol):
                          arrivals=[r.arrival for r in trace])
 
         _run(_llm(), reqs[:2])        # jit warmup: keep tok/s compile-free
-        llm = _llm()
-        _run(llm, reqs)
+        if args.metrics:
+            reg = MetricsRegistry()
+            llm = _llm(reg)
+            print(f"\n[{name}] live gauges:")
+            _metrics_ticker(llm, reg, reqs)
+        else:
+            llm = _llm()
+            _run(llm, reqs)
         rep = llm.report
         print(f"\n[{name}] {len(rep.tokens)} requests over {rep.steps} decode "
               f"steps | {rep.decode_tok_per_s:.1f} tok/s | mean queue "
@@ -175,6 +212,10 @@ def main():
     ap.add_argument("--batches", type=int, nargs="+", default=[1, 8, 32])
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching under Poisson arrivals")
+    ap.add_argument("--metrics", action="store_true",
+                    help="with --continuous: attach a MetricsRegistry and "
+                         "repaint a one-line gauge ticker (running / "
+                         "waiting / pages free / tok/s) every engine step")
     ap.add_argument("--stream", action="store_true",
                     help="stream tokens incrementally (with a mid-run abort)")
     ap.add_argument("--shared-prefix", action="store_true",

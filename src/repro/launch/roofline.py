@@ -248,9 +248,16 @@ def main(argv=None):
     rows = serving_roofline_rows(cache_width=args.cache_width,
                                  page_w=args.page_w,
                                  max_tokens=args.max_tokens, seed=args.seed)
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(rows, f, indent=2)
+    try:
+        # shared atomic artifact writer (stamps schema_version per row);
+        # benchmarks/ may be absent from an installed package, so fall
+        # back to a plain dump
+        from benchmarks.common import write_json
+        rows = write_json(args.out, rows, schema="roofline_serving")
+    except ImportError:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
     for r in rows:
         print(f"{r['variant']:>16}: {r['hbm_read_bytes_per_step']:>10.0f} "
               f"B/step  avoided={r['gather_bytes_avoided']:>10d} B  "

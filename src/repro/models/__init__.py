@@ -1,5 +1,6 @@
 """Pure-JAX model substrate."""
-from repro.models.model import (chunked_prefill_unsupported, decode_step,
+from repro.models.model import (chunked_prefill_unsupported,
+                                decode_step, decode_telemetry_meta,
                                 first_attn_layer_id, forward, init_cache,
                                 init_params, init_routers, init_serve_cache,
                                 prefill_chunk, prepare_model_config)
@@ -7,4 +8,4 @@ from repro.models.model import (chunked_prefill_unsupported, decode_step,
 __all__ = ["forward", "decode_step", "prefill_chunk", "init_params",
            "init_routers", "init_cache", "init_serve_cache",
            "prepare_model_config", "first_attn_layer_id",
-           "chunked_prefill_unsupported"]
+           "chunked_prefill_unsupported", "decode_telemetry_meta"]

@@ -245,6 +245,29 @@ def _full_mode_select(out, head_select, B, S, G, qpg):
     raise ValueError(kind)
 
 
+def selection_mask(head_select, batch: int, num_groups: int):
+    """Realized per-row group-selection mask, (B, G) float 0/1, from any
+    decode ``head_select`` form — the telemetry view of what this layer's
+    attention reads this step:
+
+    * ``None`` (dense / force-dense / no routers): every group — ones;
+    * ``("gather", idx (B, k))``: one-hot scatter of the selected ids
+      (``top_k`` ids are distinct, so entries stay 0/1);
+    * ``("mask", m (B, G))``: the mask itself.
+
+    Computed in-graph next to the selection it mirrors; it costs a few
+    (B, G) ops only when the telemetry flag asked for it.
+    """
+    if head_select is None:
+        return jnp.ones((batch, num_groups), jnp.float32)
+    kind, val = head_select
+    if kind == "gather":
+        return jax.nn.one_hot(val, num_groups, dtype=jnp.float32).sum(axis=1)
+    if kind == "mask":
+        return val.astype(jnp.float32)
+    raise ValueError(f"head_select {kind} has no decode selection mask")
+
+
 # ------------------------------------------------------- dense GQA/MHA ----
 def attn_full(p, x, cfg, *, cos, sin, cache=None, head_select=None,
               collect: bool = False) -> Tuple[jnp.ndarray, Optional[dict], Optional[jnp.ndarray]]:

@@ -297,9 +297,11 @@ def _head_selection(spec, cfg, policy, router_p, h, mode, force_dense):
 
 def _mlp_block_idx(cfg, policy, router_p, h, k_blocks, active=None):
     """Union neuron-block index across the batch (decode/serve path).
-    ``active`` (B,) masks vacant serving slots out of the union."""
+    ``active`` (B,) masks vacant serving slots out of the union.  Also
+    returns the router logits so telemetry can reuse them (XLA dedupes the
+    router matmul either way)."""
     logits = apply_mlp_router(router_p["mlp"], h)          # (B,1,NB)
-    return union_neuron_blocks(logits, k_blocks, weights=active)
+    return union_neuron_blocks(logits, k_blocks, weights=active), logits
 
 
 # --------------------------------------------------------------- layers ---
@@ -391,9 +393,30 @@ def _layer_chunk(lp, spec, x, *, cfg, cos, sin, cache, slot, offset, n_valid,
 
 def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
                   slot_pos, pos, k_blocks, force_dense, active=None,
-                  page_table=None):
+                  page_table=None, telemetry=False):
+    """One decode layer.  Returns (x, new_cache, aux); ``aux`` is empty
+    unless ``telemetry`` — then it carries the *realized* sparsity of this
+    step as tiny scalar reductions computed in-graph (see
+    ``decode_telemetry_meta`` for how the engine interprets them):
+
+    * ``head_selected`` — Σ over active rows of groups each row's attention
+      actually reads (``k_sel`` per row on selected layers, ``G`` dense);
+    * ``head_union`` — groups selected by ≥ 1 active row (the batch-union
+      occupancy the paper's batch-invariance claim is about);
+    * ``mlp_rows_union`` — neuron blocks wanted by ≥ 1 active row's own
+      top-k (the executed union is the static ``k_blocks``).
+    """
+    aux: Dict[str, Any] = {}
     h = apply_norm(lp["norm1"], x, cfg.norm)
     sel = _head_selection(spec, cfg, policy, router_p, h, "decode", force_dense)
+    if telemetry:
+        B = h.shape[0]
+        w = (active.astype(jnp.float32) if active is not None
+             else jnp.ones((B,), jnp.float32))
+        if spec.mixer in ("attn", "mla"):
+            m = attn.selection_mask(sel, B, _num_groups(cfg, spec)) * w[:, None]
+            aux["head_selected"] = m.sum()
+            aux["head_union"] = m.max(axis=0).sum()
 
     if spec.mixer == "attn":
         # force_dense layers keep the flag: on a paged pool the kernel
@@ -428,20 +451,27 @@ def _layer_decode(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
     elif spec.mixer == "rwkv":
         block_idx = None
         if use_sparse:
-            block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks, active)
+            block_idx, mlp_logits = _mlp_block_idx(cfg, policy, router_p, h2,
+                                                   k_blocks, active)
         out2, _ = rwkv_lib.channel_mix(lp["ffn"], h2, cm_shift[:, None].astype(h2.dtype),
                                        cfg, block_idx=block_idx,
                                        neuron_block=policy.neuron_block if policy else 16)
         new_c = dict(new_c)
         new_c["shift_cm"] = h2[:, 0].astype(jnp.dtype(cfg.dtype))
     elif use_sparse:
-        block_idx = _mlp_block_idx(cfg, policy, router_p, h2, k_blocks, active)
+        block_idx, mlp_logits = _mlp_block_idx(cfg, policy, router_p, h2,
+                                               k_blocks, active)
         ffcfg = cfg if not cfg.dense_ff else cfg.replace(d_ff=cfg.dense_ff)
         out2 = sparse_mlp_apply(lp["ffn"], h2, ffcfg, block_idx, policy.neuron_block)
     else:
         ffcfg = cfg if not cfg.dense_ff else cfg.replace(d_ff=cfg.dense_ff)
         out2, _ = mlp_apply(lp["ffn"], h2, ffcfg)
-    return x + out2, new_c
+    if telemetry and use_sparse:
+        # per-row top-k block masks, weighted by active rows: how many
+        # blocks the batch *wants* (vs the k_blocks it executes)
+        rows = head_mask_from_logits(mlp_logits[:, 0], k_blocks)  # (B, NB)
+        aux["mlp_rows_union"] = (rows * w[:, None]).max(axis=0).sum()
+    return x + out2, new_c, aux
 
 
 # ------------------------------------------------------------- segments ---
@@ -493,11 +523,14 @@ def _run_segments(params, cfg, x, *, mode, policy, routers, cache, cos, sin,
                 lc = sliced.get("cache", {}).get(f"pos{j}") if "cache" in sliced else None
                 rp = sliced.get("routers", {}).get(f"pos{j}") if "routers" in sliced else None
                 if mode == "decode":
-                    x_c, nc = _layer_decode(lp, spec, x_c, cfg=cfg, policy=policy,
-                                            router_p=rp, cos=cos, sin=sin, cache=lc,
-                                            slot_pos=slot_pos, pos=pos, k_blocks=kb,
-                                            force_dense=fd, active=active,
-                                            page_table=page_table)
+                    x_c, nc, aux = _layer_decode(lp, spec, x_c, cfg=cfg, policy=policy,
+                                                 router_p=rp, cos=cos, sin=sin, cache=lc,
+                                                 slot_pos=slot_pos, pos=pos, k_blocks=kb,
+                                                 force_dense=fd, active=active,
+                                                 page_table=page_table,
+                                                 telemetry=collect)
+                    for k, v in aux.items():
+                        aux_out[f"pos{j}/{k}"] = v
                 elif mode == "chunk":
                     x_c, nc = _layer_chunk(lp, spec, x_c, cfg=cfg, cos=cos,
                                            sin=sin, cache=lc, **chunk)
@@ -618,7 +651,8 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, pos_ids=None,
 
 def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
                 cache, pos_ids=None, routers=None,
-                policy: Optional[PolarPolicy] = None):
+                policy: Optional[PolarPolicy] = None,
+                telemetry: bool = False):
     """One-token decode.  tokens (B,) int32 or embeds (B,1,d).
 
     Two cache layouts (distinguished by pytree structure, so both trace
@@ -656,10 +690,10 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
         tokens = tokens[:, None]
     x = _embed(params, cfg, tokens, embeds, positions)
 
-    x, new_caches, _, _ = _run_segments(
+    x, new_caches, collected, _ = _run_segments(
         params, cfg, x, mode="decode", policy=policy, routers=routers,
         cache=cache, cos=cos, sin=sin, slot_pos=slot_pos, pos=pos,
-        collect=False, active=active, page_table=page_table)
+        collect=telemetry, active=active, page_table=page_table)
 
     logits = _lm_head(params, cfg, x)[:, 0]
     if serve:
@@ -677,7 +711,62 @@ def decode_step(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             "slot_pos": slot_pos.at[jnp.mod(pos, W)].set(pos),
             "pos": pos + 1,
         }
+    if telemetry:
+        # per-layer realized-sparsity scalars, keyed "segI/posJ/<metric>"
+        # with a leading (cycles,) axis from the segment scan; see
+        # decode_telemetry_meta for the static interpretation table.  The
+        # flag is static per jit closure, so attaching telemetry changes
+        # the trace *count* of nothing — it is a different closure.
+        return logits, new_cache, collected
     return logits, new_cache
+
+
+def decode_telemetry_meta(cfg: ModelConfig, policy: Optional[PolarPolicy],
+                          routers_present: bool = True) -> Dict[str, dict]:
+    """Static interpretation table for ``decode_step(telemetry=True)`` aux.
+
+    Maps each scan-position key prefix ``"segI/posJ"`` to what its stacked
+    ``(cycles,)`` telemetry vectors mean:
+
+    * ``layer_ids`` — global layer id per cycle (``offset + c*len(pattern)
+      + j``), so gauge labels can name real layers;
+    * ``kind`` — the mixer (``attn`` / ``mla`` / ``mamba`` / ``rwkv``);
+    * ``G`` / ``k_sel`` / ``selected`` — group count, configured top-k, and
+      whether decode actually runs head selection here (mirrors
+      ``_head_selection``: sparse policy + routers + k < G + non-oracle
+      selector + not force-dense) — on selected layers the realized
+      per-row count must equal ``k_sel`` exactly;
+    * ``NB`` / ``k_blocks`` — neuron-block count and the executed union
+      size, present only where the sparse-MLP path runs.
+    """
+    force_dense = _segment_force_dense(cfg, policy)
+    offs = _segment_layer_offsets(cfg)
+    meta: Dict[str, dict] = {}
+    for i, seg in enumerate(cfg.segments):
+        kb = _segment_mlp_k(cfg, policy, i)
+        for j, spec in enumerate(seg.pattern):
+            entry: Dict[str, object] = {
+                "layer_ids": [offs[i] + c * len(seg.pattern) + j
+                              for c in range(seg.cycles)],
+                "kind": spec.mixer,
+            }
+            if spec.mixer in ("attn", "mla"):
+                G = _num_groups(cfg, spec)
+                selected = (policy is not None and policy.attn_sparse
+                            and routers_present and not force_dense[i]
+                            and policy.selector != "oracle")
+                k = policy.attn_k(G) if selected else G
+                if k >= G:
+                    selected, k = False, G
+                entry.update(G=G, k_sel=k, selected=selected)
+            mlp_on = (policy is not None and policy.mlp_sparse
+                      and spec.ffn == "dense" and not force_dense[i]
+                      and routers_present and kb is not None)
+            if mlp_on:
+                entry.update(NB=_dense_ff(cfg) // policy.neuron_block,
+                             k_blocks=kb)
+            meta[f"seg{i}/pos{j}"] = entry
+    return meta
 
 
 def chunked_prefill_unsupported(cfg: ModelConfig) -> Optional[str]:

@@ -74,6 +74,33 @@ Data types
                     ids); raises ``InvalidRequestError``.  (scheduler.py)
 ``ServeReport``     aggregate throughput / queueing / paging metrics.
 
+Observability
+-------------
+``MetricsRegistry`` (metrics.py)  dependency-free Prometheus-style
+    registry: ``counter`` / ``gauge`` / ``histogram`` families with label
+    sets, fixed log-spaced latency buckets, ``to_prometheus_text()`` (a
+    ``/metrics`` scrape body) and ``to_dict()`` (JSON snapshot).  Attach
+    via ``EngineCore(metrics=reg)`` / ``LLM(metrics=reg)``: every
+    scheduler, KV-pool, prefix-cache, latency (TTFT / ITL / step), byte
+    (``attn_hbm_read_bytes_total{path=...}``) and realized-sparsity
+    (``sparsity_head_union_occupancy{layer=...}``) signal reports into
+    it.  Attaching compiles the decode step's in-graph sparsity telemetry
+    outputs — still ONE decode trace, byte-identical tokens;
+    ``validate_prometheus_text`` is the strict parser CI gates on
+    (``python -m repro.serving.metrics FILE`` from the shell).
+``TraceRecorder`` (tracing.py)  per-request spans (queued → prefill
+    chunks → decode → finish/abort, preemption + CoW + eviction
+    instants) with step + wall timestamps.  ``to_perfetto()`` exports
+    Chrome ``trace_event`` JSON (one track per request, per KV slot, and
+    the engine's decode dispatches — open in https://ui.perfetto.dev);
+    ``to_jsonl()`` a diffable raw event log.  Attach via
+    ``EngineCore(tracer=tr)`` / ``LLM(tracer=tr)``.
+``EngineCore.forget(rid)`` also drops the request's trace spans and
+    latency series; ``max_history=N`` caps retained terminal-request
+    records FIFO for persistent servers.
+``EngineCore.sparsity_log``  bounded per-decode-step rows of realized
+    head-union occupancy / selected fraction / MLP union density.
+
 Infrastructure
 --------------
 ``Scheduler``       FCFS admission, eviction, preemption requeue.
@@ -92,7 +119,10 @@ from repro.serving.engine import (Engine, EngineCore, EngineStats,
                                   make_serving_jits)
 from repro.serving.kv_pool import KVPool, PagedKVPool
 from repro.serving.llm import LLM
+from repro.serving.metrics import (MetricsRegistry,
+                                   validate_prometheus_text)
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.tracing import TraceRecorder
 from repro.serving.params import (InvalidRequestError, RequestOutput,
                                   SamplingParams)
 from repro.serving.scheduler import (Request, Scheduler, SlotRun,
@@ -103,4 +133,5 @@ __all__ = ["Engine", "EngineCore", "EngineStats", "ServeReport",
            "build_engine", "make_serving_jits", "KVPool", "PagedKVPool",
            "PrefixCache", "LLM", "InvalidRequestError", "RequestOutput",
            "SamplingParams", "Request", "Scheduler", "SlotRun",
-           "poisson_requests", "sampling"]
+           "poisson_requests", "sampling", "MetricsRegistry",
+           "TraceRecorder", "validate_prometheus_text"]

@@ -34,8 +34,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,11 +45,14 @@ import numpy as np
 from repro.core.policy import PolarPolicy
 from repro.models import (decode_step, forward, init_cache,
                           prepare_model_config)
-from repro.models.model import chunked_prefill_unsupported, prefill_chunk
+from repro.models.model import (chunked_prefill_unsupported,
+                                decode_telemetry_meta, prefill_chunk)
 from repro.serving import sampling
 from repro.serving.io_accounting import attn_io_model
 from repro.serving.kv_pool import KVPool, PagedKVPool
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.tracing import TraceRecorder
 from repro.serving.params import (FINISH_ABORT, FINISH_REJECT, FINISH_STOP,
                                   InvalidRequestError, RequestOutput,
                                   SamplingParams)
@@ -173,7 +177,8 @@ class ServeReport:
         return self.occupancy_sum / self.decode_steps_run if self.decode_steps_run else 0.0
 
 
-def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
+def make_serving_jits(cfg, policy: Optional[PolarPolicy],
+                      telemetry: bool = False):
     """(prefill_jit, decode_jit, chunk_jit) for one prepared config + policy.
 
     The decode jit fuses the model step with the per-slot sampler: it takes
@@ -181,6 +186,14 @@ def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
     ``active`` / ``page_table`` leaves and returns sampled tokens directly,
     so heterogeneous per-request sampling configs are data, not code — one
     trace covers them all.
+
+    The decode jit always returns ``(tokens, cache, telemetry_aux)``; with
+    ``telemetry=False`` (the default) the aux is an empty dict — no extra
+    outputs, no host transfers, bit-identical tokens.  With
+    ``telemetry=True`` the aux carries the per-layer realized-sparsity
+    scalars of ``decode_step(telemetry=True)`` (the engine reads them only
+    when a metrics registry is attached).  The flag is static per closure,
+    so either way ``decode_jit_traces()`` stays 1.
 
     The chunk jit is the chunked-prefill entry point: it resumes a
     partially filled serve cache, appending one (1, prefill_chunk) token
@@ -193,10 +206,17 @@ def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
         return forward(params, cfg, tokens=tokens, embeds=embeds, cache=cache)
 
     def _decode(params, routers, tokens, cache, samp):
-        logits, cache = decode_step(params, cfg, tokens=tokens, cache=cache,
-                                    routers=routers, policy=policy)
+        if telemetry:
+            logits, cache, telem = decode_step(
+                params, cfg, tokens=tokens, cache=cache, routers=routers,
+                policy=policy, telemetry=True)
+        else:
+            logits, cache = decode_step(params, cfg, tokens=tokens,
+                                        cache=cache, routers=routers,
+                                        policy=policy)
+            telem = {}
         toks = sampling.sample(logits, **samp)
-        return toks, cache
+        return toks, cache, telem
 
     def _chunk(params, tokens, cache, slot, offset, n_valid, kw):
         return prefill_chunk(params, cfg, tokens=tokens, cache=cache,
@@ -205,6 +225,108 @@ def make_serving_jits(cfg, policy: Optional[PolarPolicy]):
 
     return (jax.jit(_prefill), jax.jit(_decode),
             jax.jit(_chunk, static_argnums=(6,)))
+
+
+class _EngineMetrics:
+    """Every engine metric family, created once on one registry.
+
+    Families are create-or-get, so several cores can share a registry (their
+    series then aggregate — run one registry per core for isolation).  All
+    families exist from engine construction, so the exposition always
+    carries the full schema even before traffic (labeled families render
+    their ``HELP``/``TYPE`` header with zero series until first use).
+    """
+
+    def __init__(self, reg: MetricsRegistry, *, paged: bool,
+                 prefix: bool) -> None:
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        # ------------------------------------------------- request flow ---
+        self.submitted = c("engine_requests_submitted_total",
+                           "requests accepted by add_request")
+        self.rejected = c("engine_requests_rejected_total",
+                          "requests rejected at submission", ("cause",))
+        self.finished = c("engine_requests_finished_total",
+                          "terminal outputs by finish reason", ("reason",))
+        self.aborted = c("engine_requests_aborted_total",
+                         "requests aborted by the caller")
+        self.admissions = c("engine_admissions_total",
+                            "slot admissions by prefill kind", ("kind",))
+        self.preemptions = c("engine_preemptions_total",
+                             "recompute preemptions by cause", ("cause",))
+        self.queue_depth = g("engine_queue_depth",
+                             "arrived-but-unadmitted requests")
+        self.running = g("engine_requests_running",
+                         "requests currently holding a slot")
+        self.waiting = g("engine_requests_waiting",
+                         "queued requests (including future trace arrivals)")
+        # ---------------------------------------------------- execution ---
+        self.steps = c("engine_steps_total", "step() calls that did work")
+        self.decode_dispatches = c("engine_decode_dispatches_total",
+                                   "batched decode dispatches executed")
+        self.tokens = c("engine_tokens_decoded_total",
+                        "tokens produced by batched decode")
+        self.prefill_tokens = c("engine_prefill_tokens_total",
+                                "prompt tokens pushed through prefill")
+        self.chunks = c("engine_prefill_chunks_total",
+                        "chunk-prefill dispatches executed")
+        self.decode_batch = g("engine_decode_batch",
+                              "slots in the last batched decode")
+        self.ttft = h("engine_ttft_seconds",
+                      "arrival visibility to first emitted token")
+        self.itl = h("engine_itl_seconds",
+                     "gap between consecutive emitted tokens of one request")
+        self.step_latency = h("engine_step_latency_seconds",
+                              "wall time of one step()")
+        self.decode_latency = h("engine_decode_latency_seconds",
+                                "wall time of one batched decode dispatch")
+        self.chunk_latency = h("engine_chunk_latency_seconds",
+                               "wall time of one prefill chunk")
+        # ---------------------------------------------------- sparsity ----
+        self.head_union = g("sparsity_head_union_occupancy",
+                            "groups selected by >=1 active slot / G, "
+                            "last decode step", ("layer",))
+        self.head_frac = g("sparsity_head_selected_frac",
+                           "mean per-active-slot selected groups / G, "
+                           "last decode step", ("layer",))
+        self.mlp_union = g("sparsity_mlp_union_density",
+                           "neuron blocks wanted by >=1 active slot / NB, "
+                           "last decode step", ("layer",))
+        # ------------------------------------------------------ KV pool ---
+        if paged:
+            self.pages_in_use = g("kv_pages_in_use",
+                                  "physical pages allocated")
+            self.pages_free = g("kv_pages_free", "physical pages free")
+            self.page_occupancy = g("kv_page_occupancy",
+                                    "pages_in_use / num_pages")
+            self.free_floor = g("kv_free_page_floor",
+                                "lifetime minimum of kv_pages_free")
+            self.live_pages = g("kv_live_pages",
+                                "distinct pages the last decode read")
+            self.cow = c("kv_cow_copies_total",
+                         "copy-on-write page copies performed")
+            self.hbm_read = c("attn_hbm_read_bytes_total",
+                              "modeled KV bytes attention read from HBM",
+                              ("path",))
+            self.gather_avoided = c("attn_gather_bytes_avoided_total",
+                                    "gathered-view bytes NOT materialized")
+        # ------------------------------------------------- prefix cache ---
+        if prefix:
+            self.prefix_lookups = c("prefix_cache_lookups_total",
+                                    "admission-time radix-tree lookups")
+            self.prefix_hits = c("prefix_cache_hits_total",
+                                 "lookups that matched >=1 cached page")
+            self.prefix_hit_tokens = c("prefix_cache_hit_tokens_total",
+                                       "prompt tokens served from cached "
+                                       "pages")
+            self.prefix_saved = c("prefix_cache_prefill_tokens_saved_total",
+                                  "prompt tokens never pushed to prefill")
+            self.prefix_evicted_pages = c("prefix_cache_pages_evicted_total",
+                                          "cached pages evicted (LRU or "
+                                          "pressure)")
+            self.prefix_pages = g("prefix_cache_pages",
+                                  "pages the radix tree currently holds")
+            self.prefix_hit_ratio = g("prefix_cache_hit_ratio",
+                                      "lifetime lookup hit ratio")
 
 
 class EngineCore:
@@ -239,6 +361,9 @@ class EngineCore:
                  prefix_cache: bool = False,
                  watermark: int = 0,
                  stats: Optional[EngineStats] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[TraceRecorder] = None,
+                 max_history: Optional[int] = None,
                  _jits=None):
         self.cfg = cfg
         self.params = params
@@ -282,8 +407,19 @@ class EngineCore:
         self.max_step_tokens = max_step_tokens
         self._prefilling: Optional[int] = None   # slot mid-chunked-prefill
         self.stats = stats if stats is not None else EngineStats()
+        self.metrics = metrics
+        self.tracer = tracer
+        if max_history is not None and max_history < 0:
+            raise ValueError(f"max_history must be >= 0, got {max_history}")
+        self.max_history = max_history
+        self._history: Deque[int] = deque()   # finished/aborted rids, FIFO
+        # with a registry attached the decode jit is built with the
+        # telemetry outputs compiled in (still one trace; the flag is
+        # static per closure) — caller-supplied _jits are trusted as-is
         self._prefill, self._decode, self._chunk = (
-            _jits if _jits is not None else make_serving_jits(cfg, policy))
+            _jits if _jits is not None
+            else make_serving_jits(cfg, policy,
+                                   telemetry=metrics is not None))
         if page_w is None:
             self.pool = KVPool(cfg, max_batch, cache_width)
         else:
@@ -314,6 +450,22 @@ class EngineCore:
         self.report.pool_hbm_bytes = self.pool.hbm_bytes()
         self.report.prefill_chunk = prefill_chunk
         self.report.max_step_tokens = max_step_tokens
+        if metrics is not None:
+            self._m = _EngineMetrics(metrics, paged=self.paged,
+                                     prefix=self._prefix is not None)
+            self._telem_meta = decode_telemetry_meta(
+                cfg, policy, routers_present=routers is not None)
+        else:
+            self._m = None
+            self._telem_meta = None
+        # per-decode-step realized-sparsity rows (host side, bounded) —
+        # benchmarks read this for their sparsity columns
+        self.sparsity_log: Deque[dict] = deque(maxlen=4096)
+        # counter monotonicity over the cache's cumulative eviction stat:
+        # step() publishes end-of-step deltas against this snapshot
+        self._prefix_evicted_seen = 0
+        if self._m is not None:
+            self._refresh_gauges()     # gauges true even before first work
         # per-slot sampling parameters, lowered from SamplingParams at
         # admission; devices see them as (max_batch,) leaves next to the
         # pool's lengths/active arrays
@@ -337,9 +489,12 @@ class EngineCore:
         params = params if params is not None else SamplingParams()
         if params.seed is None:
             params = dataclasses.replace(params, seed=rid & 0x7FFFFFFF)
+        cause = "invalid"
         try:
             if rid in self.report.arrival:
+                cause = "duplicate"
                 raise InvalidRequestError(f"duplicate request id {rid}")
+            cause = "invalid"
             params.validate()
             req = Request(rid=rid, prompt=prompt,
                           max_new_tokens=params.max_tokens,
@@ -348,11 +503,16 @@ class EngineCore:
                           stop_token_ids=params.stop_token_ids,
                           sampling=params)
             if len(req.prompt) >= self.cache_width:
+                cause = "too_long"
                 raise InvalidRequestError(
                     f"prompt length {len(req.prompt)} >= cache width "
                     f"{self.cache_width}")
         except InvalidRequestError as e:
             self.report.rejected.append(rid)
+            if self._m is not None:
+                self._m.rejected.labels(cause=cause).inc()
+            if self.tracer is not None:
+                self.tracer.reject(rid, self.clock, cause=cause)
             self._pending.append(RequestOutput(
                 rid=rid, finished=True, finish_reason=FINISH_REJECT,
                 reason=str(e)))
@@ -361,6 +521,8 @@ class EngineCore:
         self.report.arrival[rid] = req.arrival
         self._emitted.setdefault(rid, 0)
         self._tokens.setdefault(rid, [])
+        if self._m is not None:
+            self._m.submitted.inc()
         return True
 
     def abort(self, rid: int) -> bool:
@@ -378,10 +540,16 @@ class EngineCore:
             hit = True
         if hit:
             self.report.aborted.append(rid)
+            if self._m is not None:
+                self._m.aborted.inc()
+            if self.tracer is not None:
+                self.tracer.abort(rid, slot, self.clock)
             self._pending.append(RequestOutput(
                 rid=rid, token_ids=list(self._tokens.get(rid, [])),
                 finished=True, finish_reason=FINISH_ABORT,
                 reason="aborted by caller"))
+            self._history.append(rid)
+            self._trim_history()
         return hit
 
     @property
@@ -410,7 +578,23 @@ class EngineCore:
                   self.report.arrival_wall, self.report.token_steps,
                   self.report.token_walls):
             d.pop(rid, None)
+        # per-request trace spans and finished-SlotRun records are
+        # per-request history too — a persistent server must not leak them
+        if self.tracer is not None:
+            self.tracer.forget(rid)
+        self.sched.finished = [r for r in self.sched.finished
+                               if r.request.rid != rid]
+        if rid in self.report.aborted:
+            self.report.aborted = [r for r in self.report.aborted if r != rid]
         return True
+
+    def _trim_history(self) -> None:
+        """Under ``max_history``, cap retained finished/aborted per-request
+        records by forgetting the oldest terminal rids (FIFO)."""
+        if self.max_history is None:
+            return
+        while len(self._history) > self.max_history:
+            self.forget(self._history.popleft())
 
     def decode_jit_traces(self) -> int:
         """Number of compiled decode variants (continuous batching must
@@ -438,14 +622,19 @@ class EngineCore:
         if not sched.running:
             nxt = sched.next_arrival()
             if nxt is None:
+                if self._m is not None:
+                    self._refresh_gauges()   # idle scrape stays truthful
                 return outs
             if nxt > self.clock:
                 self.clock = nxt               # fast-forward the idle gap
-        now = time.perf_counter()
+        now = time.perf_counter()              # also the step-latency start
         for r in sched.waiting:                # stamp arrival visibility
             if r.arrival > self.clock:
                 break                          # waiting is arrival-sorted
-            self.report.arrival_wall.setdefault(r.rid, now)
+            if r.rid not in self.report.arrival_wall:
+                self.report.arrival_wall[r.rid] = now
+                if self.tracer is not None:
+                    self.tracer.arrival(r.rid, self.clock)
 
         # ---- decode-growth page reservation (paged pool only) ------------
         # runs BEFORE admission so a just-admitted request cannot be picked
@@ -463,13 +652,13 @@ class EngineCore:
                     # pressure valve, gentlest first: unreferenced cached
                     # prefixes are pure speculation — evict those before
                     # any running request loses work to a preemption
-                    if self._prefix is not None and self._prefix.evict(1):
+                    if self._prefix is not None and self._evict_prefix(1):
                         continue
                     victim = self._pick_victim(exclude=slot)
                     # num_pages >= pages_per_slot guarantees a lone request
                     # can always grow once rivals are evicted
                     assert victim is not None, "page pool exhausted"
-                    self._preempt(victim)
+                    self._preempt(victim, cause="decode_growth")
 
         # ---- at most one admission: FCFS head into a free slot -----------
         if self.prefill_chunk is None:
@@ -507,6 +696,14 @@ class EngineCore:
                         self._account_hit(cursor, pages)
                     pool.stage(slot, len(req.prompt))
                     self._prefilling = slot
+                    kind = "prefix_hit" if pages else "chunked"
+                    if self._m is not None:
+                        self._m.admissions.labels(kind=kind).inc()
+                    if self.tracer is not None:
+                        self.tracer.admit(req.rid, slot, self.clock,
+                                          kind=kind,
+                                          cached_tokens=cursor if pages
+                                          else 0)
                 else:
                     if self._prefix is not None:
                         # the admission gate counted cold cached pages as
@@ -514,11 +711,20 @@ class EngineCore:
                         # directly — make the shortfall real before it does
                         short = pool.pages_needed(len(req.prompt)) - pool.free_pages
                         if short > 0:
-                            self._prefix.evict(short)
+                            self._evict_prefix(short)
                     tok, layers, L = self._prefill_request(req)
                     pool.insert(layers, slot, L)
                     self._insert_prefix(slot, req)
                     self._lower_sampling(slot, req.sampling)
+                    if self._m is not None:
+                        self._m.admissions.labels(kind="whole_prompt").inc()
+                        self._m.prefill_tokens.inc(L)
+                    if self.tracer is not None:
+                        self.tracer.admit(req.rid, slot, self.clock,
+                                          kind="whole_prompt")
+                        # prefill ran inside this admission; the request
+                        # track flips straight to its decode span
+                        self.tracer.first_token(req.rid, slot, self.clock)
                     run = sched.bind(slot, req, self.clock, tok)
                     self.report.first_token_step.setdefault(req.rid,
                                                             self.clock)
@@ -545,15 +751,26 @@ class EngineCore:
             for slot in decoding:
                 cur[slot] = sched.running[slot].pending
             td = time.perf_counter()
-            toks, pool.cache = self._decode(
+            toks, pool.cache, telem = self._decode(
                 self.params, self.routers, jnp.asarray(cur), pool.cache,
                 self._samp_arrays())
             toks = np.asarray(toks)
-            self.stats.decode_s += time.perf_counter() - td
+            t_after = time.perf_counter()
+            self.stats.decode_s += t_after - td
             n_active = len(decoding)
             self.stats.tokens_decoded += n_active
             self.report.tokens_decoded += n_active
             self.report.decode_steps_run += 1
+            if self._m is not None:
+                self._m.decode_dispatches.inc()
+                self._m.tokens.inc(n_active)
+                self._m.decode_batch.set(n_active)
+                self._m.decode_latency.observe(t_after - td)
+                if telem:
+                    self._record_sparsity(telem, n_active)
+            if self.tracer is not None:
+                self.tracer.decode_dispatch(self.clock, td, t_after,
+                                            n_active)
             if self.paged:   # live pages this step covers vs full width
                 # distinct physical pages: prefix-shared pages are read
                 # from HBM once per step however many slots map them
@@ -564,14 +781,23 @@ class EngineCore:
                 self.report.pages_scanned_dense_equiv += (
                     n_active * pool.pages_per_slot)
                 if self._io is not None:
-                    read, avoided = self._io.decode_bytes(live)
+                    stream, oracle, avoided = self._io.decode_bytes_split(live)
+                    read = stream + oracle
                     self.report.hbm_read_bytes += read
                     self.report.gather_bytes_avoided += avoided
                     self.stats.hbm_read_bytes += read
                     self.stats.gather_bytes_avoided += avoided
+                    if self._m is not None:
+                        if stream:
+                            self._m.hbm_read.labels(path="stream").inc(stream)
+                        if oracle:
+                            self._m.hbm_read.labels(path="oracle").inc(oracle)
+                        self._m.gather_avoided.inc(avoided)
                 self.report.peak_pages_in_use = max(
                     self.report.peak_pages_in_use, pool.pages_in_use)
                 self.report.occupancy_sum += pool.pages_in_use / pool.num_pages
+                if self._m is not None:
+                    self._m.live_pages.set(live)
             self.clock += 1
             for slot in decoding:
                 self._pos[slot] += 1
@@ -589,7 +815,7 @@ class EngineCore:
             # always exits at the floor, without waiting for another step
             if self.watermark > 0:
                 while (pool.free_pages < self.watermark
-                       and self._prefix.evict(self.watermark
+                       and self._evict_prefix(self.watermark
                                               - pool.free_pages)):
                     pass
             fresh = pool.cow_copies - self._cow_seen
@@ -601,7 +827,70 @@ class EngineCore:
             self.report.cached_prefix_pages = held
             self.stats.cached_prefix_pages = held
         self.report.steps = self.clock
+        if self._m is not None:
+            self._m.steps.inc()
+            self._refresh_gauges()
+            self._m.step_latency.observe(time.perf_counter() - now)
         return outs
+
+    def _refresh_gauges(self) -> None:
+        """Publish end-of-step point-in-time state into the registry (the
+        scrape-anytime gauges) and roll forward delta-published counters."""
+        m, pool = self._m, self.pool
+        m.queue_depth.set(self.sched.queue_depth(self.clock))
+        m.running.set(len(self.sched.running))
+        m.waiting.set(len(self.sched.waiting))
+        if self.paged:
+            m.pages_in_use.set(pool.pages_in_use)
+            m.pages_free.set(pool.free_pages)
+            m.page_occupancy.set(pool.pages_in_use / pool.num_pages)
+            m.free_floor.set(pool.free_page_floor)
+            if self._prefix is not None:
+                cow = pool.cow_copies - int(m.cow.get())
+                if cow:
+                    m.cow.inc(cow)
+        if self._prefix is not None:
+            evicted = self._prefix.pages_evicted - self._prefix_evicted_seen
+            if evicted:
+                self._prefix_evicted_seen = self._prefix.pages_evicted
+                m.prefix_evicted_pages.inc(evicted)
+            m.prefix_pages.set(self._prefix.cached_pages)
+            lookups = m.prefix_lookups.get()
+            if lookups:
+                m.prefix_hit_ratio.set(m.prefix_hits.get() / lookups)
+
+    def _record_sparsity(self, telem: dict, n_active: int) -> None:
+        """Publish one decode step's realized head/MLP sparsity: per-layer
+        gauges (labeled by global layer id) plus one row in
+        ``sparsity_log`` with the means over routed layers.  ``telem`` is
+        the decode jit's aux dict — one device_get per step, only on the
+        metrics path."""
+        telem = jax.device_get(telem)
+        occs, fracs, denss = [], [], []
+        for seg_pos, meta in self._telem_meta.items():
+            lids = meta["layer_ids"]
+            hs = telem.get(f"{seg_pos}/head_selected")
+            hu = telem.get(f"{seg_pos}/head_union")
+            mu = telem.get(f"{seg_pos}/mlp_rows_union")
+            for c, lid in enumerate(lids):
+                if hs is not None:
+                    G = meta["G"]
+                    occ = float(hu[c]) / G
+                    frac = float(hs[c]) / (max(n_active, 1) * G)
+                    self._m.head_union.labels(layer=str(lid)).set(occ)
+                    self._m.head_frac.labels(layer=str(lid)).set(frac)
+                    if meta.get("selected"):
+                        occs.append(occ)
+                        fracs.append(frac)
+                if mu is not None and meta.get("NB"):
+                    dens = float(mu[c]) / meta["NB"]
+                    self._m.mlp_union.labels(layer=str(lid)).set(dens)
+                    denss.append(dens)
+        self.sparsity_log.append({
+            "step": self.clock, "batch": n_active,
+            "head_union_occupancy": float(np.mean(occs)) if occs else None,
+            "head_selected_frac": float(np.mean(fracs)) if fracs else None,
+            "mlp_union_density": float(np.mean(denss)) if denss else None})
 
     def _run_chunk(self, slot: int, chunk_budget: int) -> List[RequestOutput]:
         """Feed the next prompt chunk (at most ``chunk_budget`` tokens) of
@@ -628,7 +917,7 @@ class EngineCore:
                 # written — the full-prompt-hit restart (cursor at L-1)
                 # lands inside the cached prefix's last page
                 while not pool.reserve(slot, pidx * pool.page_w):
-                    if self._prefix is not None and self._prefix.evict(1):
+                    if self._prefix is not None and self._evict_prefix(1):
                         continue
                     victim = self._pick_victim(exclude=slot)
                     assert victim is not None, "page pool exhausted"
@@ -636,7 +925,7 @@ class EngineCore:
                     if ((vrun.admitted_step, vrun.request.rid)
                             < (run.admitted_step, req.rid)):
                         return []          # all rivals older: back off
-                    self._preempt(victim)
+                    self._preempt(victim, cause="chunk_reserve")
         C = self.prefill_chunk
         if C is None:                      # prefix-hit resume in whole-prompt
             C = 8                          # mode: one power-of-two-bucketed
@@ -650,17 +939,29 @@ class EngineCore:
             self.params, jnp.asarray(toks), pool.cache, jnp.int32(slot),
             jnp.int32(off), jnp.int32(n), kw)
         logits.block_until_ready()     # honest per-chunk prefill accounting
-        self.stats.prefill_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats.prefill_s += t1 - t0
         self.stats.prefill_chunks += 1
         self.stats.prefill_tokens += n
         self.report.chunks_run += 1
         self.report.prefill_tokens += n
+        if self._m is not None:
+            self._m.chunks.inc()
+            self._m.prefill_tokens.inc(n)
+            self._m.chunk_latency.observe(t1 - t0)
+        if self.tracer is not None:
+            self.tracer.chunk(req.rid, slot, self.clock, t0, t1, off, n)
         if self._io is not None:
             read, avoided = self._io.chunk_bytes(kw, off + n)
             self.report.hbm_read_bytes += read
             self.report.gather_bytes_avoided += avoided
             self.stats.hbm_read_bytes += read
             self.stats.gather_bytes_avoided += avoided
+            if self._m is not None:
+                if read:
+                    self._m.hbm_read.labels(path="chunk").inc(read)
+                if avoided:
+                    self._m.gather_avoided.inc(avoided)
         run.prefilled = off + n
         if run.prefilled < L:
             return []
@@ -670,6 +971,8 @@ class EngineCore:
         pool.activate(slot, L)
         self._insert_prefix(slot, req)
         self._lower_sampling(slot, req.sampling)
+        if self.tracer is not None:
+            self.tracer.first_token(req.rid, slot, self.clock)
         run = sched.begin_decode(slot, tok, self.clock)
         self.report.first_token_step.setdefault(req.rid, self.clock)
         self._prefilling = None
@@ -692,6 +995,10 @@ class EngineCore:
         if pool.num_free == 0:
             return None
         hit, pages = self._prefix.lookup(req.prompt)
+        if self._m is not None:
+            self._m.prefix_lookups.inc()
+            if pages:
+                self._m.prefix_hits.inc()
         cursor = min(hit, L - 1)
         # pages the pool must still produce: the non-hit remainder, plus
         # the copy-on-write target when the whole prompt is cached
@@ -711,6 +1018,19 @@ class EngineCore:
             tgt.prefix_hits += 1
             tgt.prefix_hit_tokens += hit_toks
             tgt.prefill_tokens_saved += cursor
+        if self._m is not None:
+            self._m.prefix_hit_tokens.inc(hit_toks)
+            self._m.prefix_saved.inc(cursor)
+
+    def _evict_prefix(self, min_pages: int) -> int:
+        """``PrefixCache.evict`` with an engine-track eviction instant (the
+        page-count counter rolls forward from ``pages_evicted`` at step
+        end, covering ``clear()`` and other out-of-band evictions too)."""
+        freed = self._prefix.evict(min_pages)
+        if freed and self.tracer is not None:
+            self.tracer.instant("engine", 0, "prefix_evict", self.clock,
+                                pages=freed)
+        return freed
 
     def _insert_prefix(self, slot: int, req: Request) -> None:
         """Retain the finished prefill's page-aligned prefix in the radix
@@ -807,12 +1127,17 @@ class EngineCore:
                  for slot, run in self.sched.running.items() if slot != exclude]
         return max(cands)[2] if cands else None
 
-    def _preempt(self, slot: int) -> None:
+    def _preempt(self, slot: int, *, cause: str) -> None:
+        rid = self.sched.running[slot].request.rid
         self.sched.requeue(slot, self.clock)
         self.pool.release(slot)
         if slot == self._prefilling:   # pool pressure hit a half-prefilled
             self._prefilling = None    # slot: its chunks recompute later
         self.report.preemptions += 1
+        if self._m is not None:
+            self._m.preemptions.labels(cause=cause).inc()
+        if self.tracer is not None:
+            self.tracer.preempt(rid, slot, self.clock, cause=cause)
 
     def _emit(self, run: SlotRun, *, finished: bool) -> RequestOutput:
         """Build the delta output for ``run``.  A preempted-then-recomputed
@@ -827,6 +1152,19 @@ class EngineCore:
         self._emitted[rid] = max(self._emitted[rid], len(gen))
         if new:                        # per-token latency series (TTFT/ITL)
             now = time.perf_counter()
+            if self._m is not None:
+                # observe exactly what ttft_wall_s()/itl_wall_s() will
+                # report from the series below (0-gaps of multi-token
+                # emissions included), so histogram counts match them
+                walls = self.report.token_walls.get(rid, [])
+                arr = self.report.arrival_wall.get(rid)
+                for i in range(len(new)):
+                    if not walls and i == 0:
+                        if arr is not None:
+                            self._m.ttft.observe(now - arr)
+                    else:
+                        prev = walls[-1] if i == 0 else now
+                        self._m.itl.observe(now - prev)
             self.report.token_steps.setdefault(rid, []).extend(
                 [self.clock] * len(new))
             self.report.token_walls.setdefault(rid, []).extend(
@@ -841,8 +1179,16 @@ class EngineCore:
         self.sched.evict(run.slot)
         self.pool.release(run.slot)
         out = self._emit(run, finished=True)
-        self.report.tokens[run.request.rid] = list(self._tokens[run.request.rid])
-        self.report.finished_step[run.request.rid] = run.finished_step
+        rid = run.request.rid
+        self.report.tokens[rid] = list(self._tokens[rid])
+        self.report.finished_step[rid] = run.finished_step
+        if self._m is not None:
+            self._m.finished.labels(reason=run.finish_reason).inc()
+        if self.tracer is not None:
+            self.tracer.finish(rid, run.slot, self.clock,
+                               reason=run.finish_reason)
+        self._history.append(rid)
+        self._trim_history()
         return out
 
 
@@ -860,6 +1206,8 @@ class Engine:
                  prefix_cache: bool = False,
                  watermark: int = 0,
                  sampler: Callable = sampling.greedy,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[TraceRecorder] = None,
                  _jits=None):
         # NOTE: cfg must already be prepare_model_config(cfg, policy)'d if
         # params were initialized with the split layout.
@@ -875,12 +1223,16 @@ class Engine:
         self.prefix_cache = prefix_cache
         self.watermark = watermark
         self.sampler = sampler             # fixed-batch generate() only
+        self.metrics = metrics
+        self.tracer = tracer
         self.stats = EngineStats()
         # one shared jit triple: every serve() call reuses the same compiled
         # prefill/decode/chunk steps, so slot churn across calls never
         # re-jits (pass ``_jits`` to share traces across engines too)
         self._prefill, self._decode, self._chunk = (
-            _jits if _jits is not None else make_serving_jits(cfg, policy))
+            _jits if _jits is not None
+            else make_serving_jits(cfg, policy,
+                                   telemetry=metrics is not None))
 
         def _decode_logits(params, routers, tokens, cache):
             return decode_step(params, cfg, tokens=tokens, cache=cache,
@@ -937,6 +1289,7 @@ class Engine:
                           prefix_cache=self.prefix_cache,
                           watermark=self.watermark,
                           stats=self.stats,
+                          metrics=self.metrics, tracer=self.tracer,
                           _jits=(self._prefill, self._decode, self._chunk))
 
     def serve(self, requests: Sequence[Request], *, max_batch: int = 4,

@@ -58,15 +58,24 @@ class AttnIOModel:
         and this equals the per-slot sum the engine tracks as
         ``pages_scanned``.
         """
+        stream, oracle, avoided = self.decode_bytes_split(live_pages)
+        return stream + oracle, avoided
+
+    def decode_bytes_split(self, live_pages: int) -> Tuple[int, int, int]:
+        """``decode_bytes`` with the read side split by routing path —
+        ``(stream_bytes, oracle_bytes, gather_bytes_avoided)`` — so the
+        metrics registry can label ``hbm_read_bytes_total`` by whether a
+        layer streamed live pages (Pallas paged kernels) or materialized
+        the full-width gathered view (XLA parity oracle)."""
         full = self.max_batch * self.pages_per_slot  # logical table pages
-        read = avoided = 0.0
+        stream = oracle = avoided = 0.0
         for L in self.layers:
             if L.streams:
-                read += L.page_bytes * L.group_frac * live_pages
+                stream += L.page_bytes * L.group_frac * live_pages
                 avoided += L.page_bytes * full
             else:
-                read += L.page_bytes * full          # the gathered view
-        return int(read), int(avoided)
+                oracle += L.page_bytes * full        # the gathered view
+        return int(stream), int(oracle), int(avoided)
 
     def chunk_bytes(self, kw: int, end: int) -> Tuple[int, int]:
         """(hbm_read_bytes, gather_bytes_avoided) for one prefill chunk.

@@ -263,6 +263,7 @@ class PagedKVPool:
         # one per prefix-cache retention; 0 <=> on the free list
         self._ref = np.zeros((self.num_pages,), np.int64)
         self.cow_copies = 0              # lifetime copy-on-write page copies
+        self.free_page_floor = self.num_pages   # lifetime min of free_pages
         self._insert = jax.jit(functools.partial(
             _paged_insert_fn, page_w=self.page_w,
             pages_per_slot=self.pages_per_slot))
@@ -282,6 +283,13 @@ class PagedKVPool:
     @property
     def pages_in_use(self) -> int:
         return self.num_pages - len(self._free_pages)
+
+    def _note_floor(self) -> None:
+        """Track the lifetime low-watermark of the free list — the
+        headroom gauge observability scrapes (``kv_free_page_floor``): how
+        close the pool ever came to forcing an eviction/preemption."""
+        if len(self._free_pages) < self.free_page_floor:
+            self.free_page_floor = len(self._free_pages)
 
     def pages_needed(self, prompt_len: int) -> int:
         """Pages covering positions [0, prompt_len] — the prompt plus the
@@ -304,6 +312,7 @@ class PagedKVPool:
         n = self.pages_needed(length)
         assert len(self._free_pages) >= n, "admission must check can_admit"
         phys = [heapq.heappop(self._free_pages) for _ in range(n)]
+        self._note_floor()
         self._ref[phys] = 1
         self._table[slot, :] = -1
         self._table[slot, :n] = phys
@@ -331,6 +340,7 @@ class PagedKVPool:
             if not self._free_pages:
                 return False
             fresh = heapq.heappop(self._free_pages)
+            self._note_floor()
             self._ref[fresh] = 1
             self.cache["layers"] = self._copy_page(
                 self.cache["layers"], jnp.int32(phys), jnp.int32(fresh))
@@ -343,6 +353,7 @@ class PagedKVPool:
         if not self._free_pages:
             return False
         phys = heapq.heappop(self._free_pages)
+        self._note_floor()
         self._ref[phys] = 1
         self._table[slot, idx] = phys
         self.cache["page_table"] = (

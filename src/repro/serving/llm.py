@@ -40,7 +40,14 @@ class LLM:
     The core retains per-request history (token streams, report entries)
     so ``report`` stays a complete record; a server that keeps one LLM
     alive across unbounded traffic should call ``core.forget(rid)`` after
-    delivering each terminal output to reclaim that state.
+    delivering each terminal output to reclaim that state — or pass
+    ``max_history=N`` to cap retained terminal-request records FIFO.
+
+    Observability: pass ``metrics=MetricsRegistry()`` to have every engine
+    event land in Prometheus-style families (and enable the in-graph
+    sparsity telemetry outputs), and/or ``tracer=TraceRecorder()`` for
+    per-request Perfetto trace spans.  Both are off by default and change
+    neither tokens nor the single-decode-trace guarantee.
     """
 
     def __init__(self, cfg, params, *, routers=None, policy=None,
@@ -49,6 +56,8 @@ class LLM:
                  prefill_chunk: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
                  prefix_cache: bool = False, watermark: int = 0,
+                 metrics=None, tracer=None,
+                 max_history: Optional[int] = None,
                  _jits=None):
         # _jits: a (prefill, decode, chunk) triple from make_serving_jits,
         # so several LLM instances (e.g. a warmup and a measured run) can
@@ -60,6 +69,8 @@ class LLM:
                                max_step_tokens=max_step_tokens,
                                prefix_cache=prefix_cache,
                                watermark=watermark,
+                               metrics=metrics, tracer=tracer,
+                               max_history=max_history,
                                _jits=_jits)
         self._next_rid = 0
 

@@ -1,0 +1,424 @@
+"""Dependency-free metrics registry with Prometheus text exposition.
+
+One :class:`MetricsRegistry` is the scrape surface for a serving process:
+``EngineCore(metrics=registry)`` reports every scheduler / KV-pool /
+prefix-cache / latency / sparsity signal into it, and the registry renders
+them as
+
+* ``to_prometheus_text()`` — the Prometheus text exposition format
+  (``# HELP`` / ``# TYPE`` headers, ``name{label="v"} value`` samples,
+  histogram ``_bucket{le=...}`` / ``_sum`` / ``_count`` series) ready for
+  a ``/metrics`` endpoint or a file scrape;
+* ``to_dict()`` — a JSON-serializable snapshot for benchmark rows.
+
+Three instrument kinds, all label-capable:
+
+* :class:`Counter` — monotonically non-decreasing (``inc``);
+* :class:`Gauge` — settable point-in-time value (``set`` / ``inc``);
+* :class:`Histogram` — fixed-bucket distribution (``observe``); the
+  default buckets are log-spaced over latencies from 100 µs to ~100 s
+  (3 per decade), chosen once so TTFT/ITL/step-latency series from
+  different runs are always bucket-compatible.
+
+``validate_prometheus_text(text)`` is the strict line-format parser the
+CI smoke uses to gate the exposition: it re-parses every line with the
+grammar (not a substring check) and verifies histogram invariants
+(cumulative buckets, ``+Inf`` present, ``_count`` == ``+Inf`` bucket).
+
+No prometheus_client dependency: the container image is fixed, so the
+registry is ~200 lines of stdlib.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# log-spaced, 3 buckets per decade: 1e-4 s .. ~46 s, then +Inf.  Fixed (not
+# configurable per-family) so every latency histogram in a process shares
+# bucket edges and cross-run aggregation is exact.
+DEFAULT_LATENCY_BUCKETS: Tuple[float, ...] = tuple(
+    round(10.0 ** (-4 + i / 3.0), 10) for i in range(18))
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample-value formatting: integers bare, floats repr."""
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace("\n", "\\n").replace('"', '\\"')
+
+
+class _Child:
+    """One (family, label-values) time series."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def get(self) -> float:
+        return self.value
+
+
+class _HistChild:
+    """One histogram series: per-bucket counts + sum + count."""
+
+    __slots__ = ("buckets", "counts", "sum", "count")
+
+    def __init__(self, buckets: Tuple[float, ...]) -> None:
+        self.buckets = buckets
+        self.counts = [0] * len(buckets)      # non-cumulative, per bucket
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        self.sum += value
+        self.count += 1
+        for i, le in enumerate(self.buckets):
+            if value <= le:
+                self.counts[i] += 1
+                break
+        # value above every finite edge lands only in the implicit +Inf
+
+    def get(self) -> float:          # uniform read surface with _Child
+        return float(self.count)
+
+
+class Family:
+    """A named metric with a fixed kind and label schema.
+
+    ``labels(**kv)`` returns the child series for one label-value set
+    (created on first use).  A label-less family proxies ``inc`` / ``set``
+    / ``observe`` straight to its single child.
+    """
+
+    def __init__(self, kind: str, name: str, help: str,
+                 labelnames: Sequence[str],
+                 buckets: Optional[Sequence[float]] = None) -> None:
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid metric name {name!r}")
+        for ln in labelnames:
+            if not _LABEL_RE.match(ln) or ln == "le":
+                raise ValueError(f"invalid label name {ln!r} for {name}")
+        self.kind = kind
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self.buckets = (tuple(float(b) for b in buckets)
+                        if kind == "histogram" else None)
+        self._children: Dict[Tuple[str, ...], object] = {}
+
+    def labels(self, **kv: object):
+        if set(kv) != set(self.labelnames):
+            raise ValueError(f"{self.name}: expected labels "
+                             f"{self.labelnames}, got {tuple(kv)}")
+        key = tuple(str(kv[ln]) for ln in self.labelnames)
+        child = self._children.get(key)
+        if child is None:
+            child = (_HistChild(self.buckets) if self.kind == "histogram"
+                     else _Child())
+            self._children[key] = child
+        return child
+
+    # -------------------------------------------- label-less convenience --
+    def inc(self, amount: float = 1.0) -> None:
+        self.labels().inc(amount)
+
+    def set(self, value: float) -> None:
+        self.labels().set(value)
+
+    def observe(self, value: float) -> None:
+        self.labels().observe(value)
+
+    def get(self, **kv: object) -> float:
+        key = tuple(str(kv[ln]) for ln in self.labelnames)
+        child = self._children.get(key)
+        return child.get() if child is not None else 0.0
+
+
+class MetricsRegistry:
+    """Create-or-get instrument families; render them all at once.
+
+    Family creation is idempotent: asking for an existing name returns the
+    existing family (kind and label schema must match — a mismatch is a
+    programming error and raises).
+    """
+
+    def __init__(self) -> None:
+        self._families: Dict[str, Family] = {}
+
+    def _get_or_create(self, kind: str, name: str, help: str,
+                       labelnames: Sequence[str],
+                       buckets: Optional[Sequence[float]] = None) -> Family:
+        fam = self._families.get(name)
+        if fam is not None:
+            if fam.kind != kind or fam.labelnames != tuple(labelnames):
+                raise ValueError(
+                    f"metric {name!r} re-registered as {kind}"
+                    f"{tuple(labelnames)} (was {fam.kind}{fam.labelnames})")
+            return fam
+        fam = Family(kind, name, help, labelnames, buckets)
+        self._families[name] = fam
+        return fam
+
+    def counter(self, name: str, help: str = "",
+                labelnames: Sequence[str] = ()) -> Family:
+        return self._get_or_create("counter", name, help, labelnames)
+
+    def gauge(self, name: str, help: str = "",
+              labelnames: Sequence[str] = ()) -> Family:
+        return self._get_or_create("gauge", name, help, labelnames)
+
+    def histogram(self, name: str, help: str = "",
+                  labelnames: Sequence[str] = (),
+                  buckets: Optional[Sequence[float]] = None) -> Family:
+        return self._get_or_create(
+            "histogram", name, help, labelnames,
+            DEFAULT_LATENCY_BUCKETS if buckets is None else buckets)
+
+    # ------------------------------------------------------------- reads --
+    def families(self) -> List[Family]:
+        return list(self._families.values())
+
+    def value(self, name: str, **labels: object) -> float:
+        """Current value of one series (0.0 if it never reported).  For
+        histograms this is the observation count."""
+        fam = self._families.get(name)
+        if fam is None:
+            return 0.0
+        return fam.get(**labels)
+
+    # ----------------------------------------------------------- exports --
+    def to_prometheus_text(self) -> str:
+        lines: List[str] = []
+
+        def sample(name: str, labels: Sequence[Tuple[str, str]],
+                   value: float) -> None:
+            if labels:
+                body = ",".join(f'{k}="{_escape(v)}"' for k, v in labels)
+                lines.append(f"{name}{{{body}}} {_fmt(value)}")
+            else:
+                lines.append(f"{name} {_fmt(value)}")
+
+        for fam in self._families.values():
+            # HELP text escapes only backslash and newline (spec); quotes
+            # stay literal there, unlike in label values
+            help_esc = fam.help.replace("\\", "\\\\").replace("\n", "\\n")
+            lines.append(f"# HELP {fam.name} {help_esc}")
+            lines.append(f"# TYPE {fam.name} {fam.kind}")
+            for key in sorted(fam._children):
+                child = fam._children[key]
+                lv = list(zip(fam.labelnames, key))
+                if fam.kind == "histogram":
+                    cum = 0
+                    for le, n in zip(child.buckets, child.counts):
+                        cum += n
+                        sample(f"{fam.name}_bucket",
+                               lv + [("le", _fmt(le))], cum)
+                    sample(f"{fam.name}_bucket", lv + [("le", "+Inf")],
+                           child.count)
+                    sample(f"{fam.name}_sum", lv, child.sum)
+                    sample(f"{fam.name}_count", lv, child.count)
+                else:
+                    sample(fam.name, lv, child.value)
+        return "\n".join(lines) + "\n"
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-serializable snapshot (label sets keyed ``k=v,k=v``)."""
+        out: Dict[str, object] = {}
+        for fam in self._families.values():
+            series = {}
+            for key in sorted(fam._children):
+                child = fam._children[key]
+                lk = ",".join(f"{n}={v}"
+                              for n, v in zip(fam.labelnames, key))
+                if fam.kind == "histogram":
+                    series[lk] = {"sum": child.sum, "count": child.count,
+                                  "buckets": dict(zip(map(_fmt, child.buckets),
+                                                      child.counts))}
+                else:
+                    series[lk] = child.value
+            out[fam.name] = {"type": fam.kind, "help": fam.help,
+                             "series": series}
+        return out
+
+
+# ---------------------------------------------------------------- parser --
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^{}]*)\})?"
+    r" (?P<value>[^ ]+)$")
+_LABEL_PAIR_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _parse_value(tok: str) -> float:
+    if tok in ("+Inf", "Inf"):
+        return math.inf
+    if tok == "-Inf":
+        return -math.inf
+    if tok == "NaN":
+        return math.nan
+    if not re.match(r"^[+-]?(\d+\.?\d*|\.\d+)([eE][+-]?\d+)?$", tok):
+        raise ValueError(f"malformed sample value {tok!r}")
+    return float(tok)
+
+
+def validate_prometheus_text(text: str) -> Dict[str, dict]:
+    """Strictly parse a Prometheus text exposition; raise ``ValueError`` on
+    any malformed line or violated histogram invariant.
+
+    Checks, per the exposition format spec:
+
+    * every line is a ``# HELP``, ``# TYPE``, or sample line matching the
+      grammar exactly (metric/label name charsets, quoted+escaped label
+      values, float/Inf/NaN sample values);
+    * at most one ``TYPE`` per family, declared before its samples, and
+      every sample belongs to a declared family (suffix-matched for
+      histogram ``_bucket``/``_sum``/``_count`` series);
+    * counters are finite and non-negative;
+    * histogram buckets are cumulative (non-decreasing in ``le`` order),
+      end in ``le="+Inf"``, and ``_count`` equals the ``+Inf`` bucket.
+
+    Returns ``{family: {"type": kind, "samples": [(name, labels, value)]}}``
+    so callers can make presence assertions on the parsed form.
+    """
+    families: Dict[str, dict] = {}
+
+    def family_of(sample_name: str) -> Optional[str]:
+        if sample_name in families:
+            return sample_name
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = sample_name[:-len(suffix)] \
+                if sample_name.endswith(suffix) else None
+            if base and base in families \
+                    and families[base]["type"] == "histogram":
+                return base
+        return None
+
+    for ln, line in enumerate(text.split("\n"), 1):
+        if line == "":
+            continue
+        if line.startswith("#"):
+            parts = line.split(" ", 3)
+            if len(parts) < 3 or parts[0] != "#" or \
+                    parts[1] not in ("HELP", "TYPE"):
+                raise ValueError(f"line {ln}: malformed comment {line!r}")
+            name = parts[2]
+            if not _NAME_RE.match(name):
+                raise ValueError(f"line {ln}: bad metric name {name!r}")
+            if parts[1] == "TYPE":
+                kind = parts[3] if len(parts) == 4 else ""
+                if kind not in ("counter", "gauge", "histogram", "summary",
+                                "untyped"):
+                    raise ValueError(f"line {ln}: bad TYPE {kind!r}")
+                if name in families and families[name]["samples"]:
+                    raise ValueError(
+                        f"line {ln}: TYPE {name} after its samples")
+                if name in families:
+                    raise ValueError(f"line {ln}: duplicate TYPE {name}")
+                families[name] = {"type": kind, "samples": []}
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {ln}: malformed sample {line!r}")
+        name = m.group("name")
+        raw = m.group("labels")
+        labels: Dict[str, str] = {}
+        if raw is not None and raw != "":
+            rebuilt = ",".join(
+                f'{k}="{v}"' for k, v in _LABEL_PAIR_RE.findall(raw))
+            if rebuilt != raw:
+                raise ValueError(f"line {ln}: malformed labels {{{raw}}}")
+            labels = {k: v for k, v in _LABEL_PAIR_RE.findall(raw)}
+        value = _parse_value(m.group("value"))
+        base = family_of(name)
+        if base is None:
+            raise ValueError(f"line {ln}: sample {name!r} has no TYPE")
+        if families[base]["type"] == "counter" and \
+                not (value >= 0.0 and value != math.inf):
+            raise ValueError(f"line {ln}: counter {name} value {value}")
+        families[base]["samples"].append((name, labels, value))
+
+    # histogram invariants, per label set
+    for base, fam in families.items():
+        if fam["type"] != "histogram":
+            continue
+        groups: Dict[Tuple[Tuple[str, str], ...], dict] = {}
+        for name, labels, value in fam["samples"]:
+            key = tuple(sorted((k, v) for k, v in labels.items()
+                               if k != "le"))
+            g = groups.setdefault(key, {"buckets": [], "sum": None,
+                                        "count": None})
+            if name == base + "_bucket":
+                if "le" not in labels:
+                    raise ValueError(f"{base}: bucket sample without le")
+                g["buckets"].append((_parse_value(labels["le"]), value))
+            elif name == base + "_sum":
+                g["sum"] = value
+            elif name == base + "_count":
+                g["count"] = value
+        for key, g in groups.items():
+            if not g["buckets"] or g["buckets"][-1][0] != math.inf:
+                raise ValueError(f"{base}{dict(key)}: no +Inf bucket")
+            les = [le for le, _ in g["buckets"]]
+            if les != sorted(les):
+                raise ValueError(f"{base}{dict(key)}: le out of order")
+            counts = [c for _, c in g["buckets"]]
+            if any(b < a for a, b in zip(counts, counts[1:])):
+                raise ValueError(f"{base}{dict(key)}: non-cumulative buckets")
+            if g["count"] is None or g["sum"] is None:
+                raise ValueError(f"{base}{dict(key)}: missing _sum/_count")
+            if g["count"] != g["buckets"][-1][1]:
+                raise ValueError(
+                    f"{base}{dict(key)}: _count {g['count']} != +Inf bucket "
+                    f"{g['buckets'][-1][1]}")
+    return families
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """``python -m repro.serving.metrics FILE`` — CI validation entry:
+    strictly parse an exposition file, print the family census, exit
+    non-zero on any violation."""
+    import argparse
+    import sys
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("file", help="Prometheus text exposition to validate")
+    ap.add_argument("--require", nargs="*", default=[],
+                    help="family names that must be present")
+    args = ap.parse_args(argv)
+    with open(args.file) as f:
+        text = f.read()
+    try:
+        fams = validate_prometheus_text(text)
+    except ValueError as e:
+        print(f"{args.file}: INVALID — {e}", file=sys.stderr)
+        return 1
+    missing = [n for n in args.require if n not in fams]
+    if missing:
+        print(f"missing required families: {missing}", file=sys.stderr)
+        return 1
+    print(f"{args.file}: {len(fams)} families, "
+          f"{sum(len(f['samples']) for f in fams.values())} samples OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -212,6 +212,17 @@ class Scheduler:
     def next_arrival(self) -> Optional[int]:
         return self.waiting[0].arrival if self.waiting else None
 
+    def queue_depth(self, step: int) -> int:
+        """Arrived-but-unadmitted requests at ``step`` — the scrapeable
+        queue-depth signal (future arrivals in a simulated trace do not
+        count; ``waiting`` is arrival-sorted so the scan short-circuits)."""
+        n = 0
+        for r in self.waiting:
+            if r.arrival > step:
+                break
+            n += 1
+        return n
+
 
 def poisson_requests(n: int, rate: float, *, vocab_size: int,
                      prompt_len: Tuple[int, int] = (4, 16),

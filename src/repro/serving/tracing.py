@@ -1,0 +1,235 @@
+"""Per-request trace spans for the serving engine, exportable to Perfetto.
+
+:class:`TraceRecorder` captures the life of every request through
+``EngineCore.step()`` as *spans* (durations) and *instants* (points):
+
+    arrival ──queued──▶ admission ──prefill──▶ first token ──decode──▶ finish
+                                 │ chunk chunk chunk │        ▲
+                                 └── preempt ────────┴── requeued back
+
+Each event carries both the engine step clock and a wall timestamp
+(``time.perf_counter`` relative to the recorder's epoch), so the export
+shows real interleaving — a prefill chunk riding next to the batched
+decode dispatch inside one step — not just logical ordering.
+
+Two exports:
+
+* ``to_perfetto()`` — Chrome ``trace_event`` JSON (open in
+  https://ui.perfetto.dev or ``chrome://tracing``).  Three process
+  tracks: **requests** (one thread per rid: queued → prefill → decode
+  spans), **slots** (one thread per KV slot: which request occupied it
+  when, with per-chunk spans nested), and **engine** (the per-step batched
+  decode dispatches).  Preemption / CoW / eviction / reject show as
+  instant events on the relevant track.
+* ``to_jsonl()`` — one JSON object per raw event, in record order, for
+  replay-diffing two runs with ``diff`` (wall timestamps live in separate
+  fields so a ``--ignore-matching-lines='"t[01]"'`` diff compares pure
+  event structure).
+
+The recorder is bounded: ``max_events`` caps the raw buffer (oldest
+events drop first) and ``EngineCore.forget(rid)`` calls ``forget`` to
+shed one finished request's events.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+# span names (request track)
+QUEUED = "queued"
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+class TraceRecorder:
+    """Record engine events; export Perfetto JSON / JSONL.
+
+    Engine-facing API (all called by ``EngineCore`` when a recorder is
+    attached): ``arrival``, ``admit``, ``chunk``, ``first_token``,
+    ``decode_dispatch``, ``preempt``, ``finish``, ``abort``, ``reject``,
+    ``instant``, ``forget``.
+    """
+
+    def __init__(self, max_events: int = 200_000) -> None:
+        self.max_events = int(max_events)
+        self.events: List[dict] = []
+        self._epoch: Optional[float] = None
+        # open spans keyed by track: ("req", rid) / ("slot", slot) ->
+        # (name, t0, step, args)
+        self._open: Dict[Tuple[str, int], Tuple[str, float, int, dict]] = {}
+        self._dropped = 0
+
+    # ------------------------------------------------------------- clock --
+    def _now(self) -> float:
+        t = time.perf_counter()
+        if self._epoch is None:
+            self._epoch = t
+        return t - self._epoch
+
+    def _rel(self, t: float) -> float:
+        """Convert a caller-captured ``perf_counter`` stamp to epoch-relative."""
+        if self._epoch is None:
+            self._epoch = t
+        return t - self._epoch
+
+    # ------------------------------------------------------------ record --
+    def _push(self, ev: dict) -> None:
+        self.events.append(ev)
+        if len(self.events) > self.max_events:
+            drop = max(1, self.max_events // 10)
+            del self.events[:drop]
+            self._dropped += drop
+
+    def _span(self, track: str, tid: int, name: str, t0: float, t1: float,
+              step: int, rid: Optional[int] = None, **args) -> None:
+        self._push({"ev": "span", "track": track, "tid": tid, "name": name,
+                    "t0": t0, "t1": t1, "step": step, "rid": rid,
+                    "args": args})
+
+    def instant(self, track: str, tid: int, name: str, step: int,
+                rid: Optional[int] = None, **args) -> None:
+        self._push({"ev": "instant", "track": track, "tid": tid,
+                    "name": name, "t0": self._now(), "step": step,
+                    "rid": rid, "args": args})
+
+    def _begin(self, track: str, tid: int, name: str, step: int,
+               **args) -> None:
+        self._end(track, tid, step)              # no nested same-track spans
+        self._open[(track, tid)] = (name, self._now(), step, args)
+
+    def _end(self, track: str, tid: int, step: int, **extra) -> None:
+        opened = self._open.pop((track, tid), None)
+        if opened is None:
+            return
+        name, t0, step0, args = opened
+        merged = {**args, **extra, "end_step": step}
+        rid = merged.pop("rid", tid if track == "req" else None)
+        self._span(track, tid, name, t0, self._now(), step0, rid=rid,
+                   **merged)
+
+    # -------------------------------------------------- engine lifecycle --
+    def arrival(self, rid: int, step: int) -> None:
+        """Request became schedulable: open its ``queued`` span."""
+        self._begin("req", rid, QUEUED, step)
+
+    def admit(self, rid: int, slot: int, step: int, *, kind: str,
+              cached_tokens: int = 0) -> None:
+        """Admission: close ``queued``, open ``prefill`` on the request
+        track and a residency span on the slot track."""
+        self._end("req", rid, step, slot=slot)
+        self._begin("req", rid, PREFILL, step, kind=kind,
+                    cached_tokens=cached_tokens)
+        self._begin("slot", slot, f"r{rid} prefill", step, rid=rid)
+
+    def chunk(self, rid: int, slot: int, step: int, t0: float, t1: float,
+              offset: int, n: int) -> None:
+        """One executed prefill chunk (caller-measured wall interval)."""
+        self._span("chunk", slot, f"chunk r{rid}", self._rel(t0),
+                   self._rel(t1), step, rid=rid, offset=offset, tokens=n)
+
+    def first_token(self, rid: int, slot: int, step: int) -> None:
+        """Prefill complete: request and slot flip to decode spans."""
+        self._end("req", rid, step)
+        self._begin("req", rid, DECODE, step)
+        self._end("slot", slot, step)
+        self._begin("slot", slot, f"r{rid} decode", step, rid=rid)
+
+    def decode_dispatch(self, step: int, t0: float, t1: float,
+                        batch: int) -> None:
+        """One batched decode dispatch on the engine track."""
+        self._span("engine", 0, "decode", self._rel(t0), self._rel(t1),
+                   step, batch=batch)
+
+    def preempt(self, rid: int, slot: int, step: int, *,
+                cause: str) -> None:
+        """Page pressure bounced a running request back to the queue."""
+        self.instant("slot", slot, "preempt", step, rid=rid, cause=cause)
+        self._end("slot", slot, step, preempted=True)
+        self._end("req", rid, step, preempted=True)
+        self._begin("req", rid, QUEUED, step, requeued=True)
+
+    def finish(self, rid: int, slot: int, step: int, *, reason: str) -> None:
+        self._end("req", rid, step, reason=reason)
+        self._end("slot", slot, step, reason=reason)
+
+    def abort(self, rid: int, slot: Optional[int], step: int) -> None:
+        self._end("req", rid, step, reason="abort")
+        if slot is not None:
+            self._end("slot", slot, step, reason="abort")
+
+    def reject(self, rid: int, step: int, *, cause: str) -> None:
+        self.instant("req", rid, "reject", step, rid=rid, cause=cause)
+
+    # ---------------------------------------------------------- pruning --
+    def forget(self, rid: int) -> int:
+        """Drop every recorded event of one request (terminal-state GC;
+        ``EngineCore.forget`` calls this).  Returns events dropped."""
+        before = len(self.events)
+        self.events = [e for e in self.events if e.get("rid") != rid]
+        self._open.pop(("req", rid), None)
+        return before - len(self.events)
+
+    # ---------------------------------------------------------- exports --
+    _PIDS = {"req": (1, "requests"), "slot": (2, "slots"),
+             "chunk": (2, "slots"), "engine": (3, "engine")}
+
+    def to_perfetto(self) -> dict:
+        """Chrome/Perfetto ``trace_event`` JSON object (``json.dump`` it)."""
+        out: List[dict] = []
+        seen_threads = set()
+
+        def meta(track: str, tid: int) -> None:
+            pid, pname = self._PIDS[track]
+            if ("p", pid) not in seen_threads:
+                seen_threads.add(("p", pid))
+                out.append({"ph": "M", "name": "process_name", "pid": pid,
+                            "tid": 0, "args": {"name": pname}})
+            if (pid, tid) not in seen_threads:
+                seen_threads.add((pid, tid))
+                tname = {"req": f"request {tid}", "slot": f"slot {tid}",
+                         "chunk": f"slot {tid}",
+                         "engine": "decode dispatch"}[track]
+                out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                            "tid": tid, "args": {"name": tname}})
+
+        def us(t: float) -> int:
+            return int(round(t * 1e6))
+
+        for e in self.events:
+            meta(e["track"], e["tid"])
+            pid, _ = self._PIDS[e["track"]]
+            args = {"step": e["step"], **e["args"]}
+            if e.get("rid") is not None:
+                args["rid"] = e["rid"]
+            if e["ev"] == "span":
+                out.append({"ph": "X", "name": e["name"], "pid": pid,
+                            "tid": e["tid"], "ts": us(e["t0"]),
+                            "dur": max(1, us(e["t1"]) - us(e["t0"])),
+                            "cat": e["track"], "args": args})
+            else:
+                out.append({"ph": "i", "name": e["name"], "pid": pid,
+                            "tid": e["tid"], "ts": us(e["t0"]), "s": "t",
+                            "cat": e["track"], "args": args})
+        now = self._now() if self._epoch is not None else 0.0
+        for (track, tid), (name, t0, step, args) in self._open.items():
+            meta(track, tid)
+            pid, _ = self._PIDS[track]
+            out.append({"ph": "B", "name": name, "pid": pid, "tid": tid,
+                        "ts": us(t0), "cat": track,
+                        "args": {"step": step, "open": True, **args}})
+        return {"traceEvents": out, "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self._dropped,
+                              "exported_at_s": now}}
+
+    def to_jsonl(self) -> str:
+        """One JSON object per raw event (record order), newline-separated."""
+        return "\n".join(json.dumps(e, sort_keys=True)
+                         for e in self.events) + ("\n" if self.events else "")
+
+    # ------------------------------------------------------------- tests --
+    def count(self, ev: Optional[str] = None,
+              name: Optional[str] = None) -> int:
+        return sum(1 for e in self.events
+                   if (ev is None or e["ev"] == ev)
+                   and (name is None or e["name"] == name))

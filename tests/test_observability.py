@@ -1,0 +1,604 @@
+"""Engine-wide observability: metrics registry, trace spans, sparsity
+telemetry, artifact writers.
+
+The load-bearing claims:
+
+* the dependency-free :class:`MetricsRegistry` renders a *strictly valid*
+  Prometheus text exposition (our own ``validate_prometheus_text`` is the
+  gate CI runs) and a JSON snapshot, with histogram bucket/sum/count
+  invariants holding by construction;
+* attaching a registry + :class:`TraceRecorder` to a serving engine is
+  semantically invisible: tokens byte-identical to the metrics-off run and
+  ``decode_jit_traces() == 1`` even though the decode jit now carries the
+  in-graph sparsity telemetry outputs;
+* the instrumented serve produces the acceptance artifacts — queue-depth /
+  page-occupancy / preemption / prefix-hit families in the exposition, a
+  Perfetto-loadable trace showing prefill chunks interleaved with decode
+  dispatches plus a preemption instant, and per-decode-step realized
+  head-union occupancy bounded by the configured ``k_sel/G``;
+* registry counters satisfy conservation laws under seeded-random
+  add/abort/step interleavings (every accepted request is finished,
+  aborted, running, or waiting — exactly once), gauges mirror pool state,
+  and the TTFT/ITL histograms observe exactly the report's wall series;
+* ``forget`` / ``max_history`` actually shed per-request state (tokens,
+  report series, trace events, finished-run records) so a persistent
+  server's memory is bounded over thousands of requests;
+* the shared benchmark artifact writers stamp ``schema_version`` and are
+  atomic: a failed write never clobbers the previous artifact and never
+  leaves temp-file residue.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs import get_smoke_config
+from repro.core import default_policy
+from repro.models import (decode_telemetry_meta, init_params, init_routers,
+                          prepare_model_config)
+from repro.serving import (LLM, Engine, MetricsRegistry, SamplingParams,
+                           TraceRecorder, make_serving_jits,
+                           validate_prometheus_text)
+from repro.serving.metrics import DEFAULT_LATENCY_BUCKETS
+from repro.serving.metrics import main as metrics_main
+
+KEY = jax.random.PRNGKey(0)
+CACHE_W = 32
+PW = 8
+
+_SETUP = {}
+
+
+def _setup(policy_kind):
+    if policy_kind in _SETUP:
+        return _SETUP[policy_kind]
+    cfg0 = get_smoke_config("opt-125m").replace(dtype="float32",
+                                                param_dtype="float32")
+    if policy_kind == "dense":
+        cfg, pol, routers = cfg0, None, None
+        params = init_params(KEY, cfg, max_seq_len=72)
+    else:
+        pol = dataclasses.replace(default_policy(cfg0, impl="gather"),
+                                  attn_density=0.5)
+        cfg = prepare_model_config(cfg0, pol)
+        params = init_params(KEY, cfg, max_seq_len=72)
+        routers = init_routers(jax.random.PRNGKey(1), cfg, pol)
+    _SETUP[policy_kind] = (cfg, params, routers, pol)
+    return _SETUP[policy_kind]
+
+
+def _engine(policy_kind, jits=None, **kw):
+    cfg, params, routers, pol = _setup(policy_kind)
+    kw.setdefault("cache_width", CACHE_W)
+    kw.setdefault("page_w", PW)
+    return Engine(cfg, params, routers=routers, policy=pol,
+                  _jits=jits, **kw)
+
+
+def _drain(core, max_steps=600):
+    outs = []
+    steps = 0
+    while not core.done and steps < max_steps:
+        outs.extend(core.step())
+        steps += 1
+    assert core.done, "engine failed to drain"
+    return outs
+
+
+# ======================================================================
+# MetricsRegistry unit tests
+# ======================================================================
+class TestMetricsRegistry:
+    def test_counter_gauge_histogram_basics(self):
+        reg = MetricsRegistry()
+        c = reg.counter("reqs_total", "requests")
+        c.inc()
+        c.inc(2)
+        assert reg.value("reqs_total") == 3.0
+        g = reg.gauge("depth", "queue depth")
+        g.set(7)
+        g.set(4)
+        assert reg.value("depth") == 4.0
+        h = reg.histogram("lat_seconds", "latency")
+        for v in (0.001, 0.01, 0.01, 5.0):
+            h.observe(v)
+        # histogram family value() is the observation count
+        assert reg.value("lat_seconds") == 4.0
+        assert len(DEFAULT_LATENCY_BUCKETS) >= 10
+
+    def test_labeled_series_are_independent(self):
+        reg = MetricsRegistry()
+        c = reg.counter("finished_total", "by reason", labelnames=("reason",))
+        c.labels(reason="stop").inc(3)
+        c.labels(reason="length").inc()
+        assert reg.value("finished_total", reason="stop") == 3.0
+        assert reg.value("finished_total", reason="length") == 1.0
+        assert reg.value("finished_total", reason="abort") == 0.0
+        with pytest.raises(ValueError):
+            c.labels(cause="stop")          # wrong label name
+
+    def test_reregistration_idempotent_mismatch_raises(self):
+        reg = MetricsRegistry()
+        a = reg.counter("x_total", "x")
+        assert reg.counter("x_total") is a
+        with pytest.raises(ValueError):
+            reg.gauge("x_total")
+        with pytest.raises(ValueError):
+            reg.counter("x_total", labelnames=("k",))
+
+    def test_invalid_names_raise(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.counter("9starts_with_digit")
+        with pytest.raises(ValueError):
+            reg.counter("ok_total", labelnames=("le",))   # reserved
+        with pytest.raises(ValueError):
+            reg.counter("ok_total2", labelnames=("bad-dash",))
+
+    def test_unknown_family_reads_zero(self):
+        assert MetricsRegistry().value("never_reported") == 0.0
+
+    def test_prometheus_text_strictly_valid(self):
+        reg = MetricsRegistry()
+        reg.counter("a_total", 'has "quotes" and \\ and\nnewline',
+                    labelnames=("k",)).labels(k='v"\\\n').inc()
+        reg.gauge("b").set(-1.5)
+        h = reg.histogram("c_seconds", "lat")
+        h.observe(0.02)
+        h.observe(1e9)                       # lands only in +Inf
+        fams = validate_prometheus_text(reg.to_prometheus_text())
+        assert set(fams) == {"a_total", "b", "c_seconds"}
+        assert fams["a_total"]["type"] == "counter"
+        # histogram exposition: cumulative buckets ending at +Inf == count
+        samples = fams["c_seconds"]["samples"]
+        count = [v for n, _, v in samples if n == "c_seconds_count"][0]
+        assert count == 2.0
+        s = [v for n, _, v in samples if n == "c_seconds_sum"][0]
+        assert s == pytest.approx(0.02 + 1e9)
+
+    def test_validator_rejects_malformed(self):
+        good = "# TYPE a counter\na 1\n"
+        validate_prometheus_text(good)
+        bad = [
+            "a 1\n",                                     # sample before TYPE
+            "# TYPE a counter\na -1\n",                  # negative counter
+            "# TYPE a counter\na one\n",                 # non-numeric value
+            "# TYPE a wat\na 1\n",                       # unknown kind
+            "# TYPE a counter\na{k=unquoted} 1\n",       # label grammar
+            "# TYPE a counter\n# TYPE a counter\n",      # duplicate TYPE
+            # histogram missing +Inf bucket
+            '# TYPE h histogram\nh_bucket{le="1"} 1\nh_sum 1\nh_count 1\n',
+            # non-cumulative buckets
+            '# TYPE h histogram\nh_bucket{le="1"} 2\n'
+            'h_bucket{le="+Inf"} 1\nh_sum 1\nh_count 1\n',
+            # _count disagrees with +Inf bucket
+            '# TYPE h histogram\nh_bucket{le="+Inf"} 2\n'
+            'h_sum 1\nh_count 3\n',
+        ]
+        for text in bad:
+            with pytest.raises(ValueError):
+                validate_prometheus_text(text)
+
+    def test_to_dict_snapshot(self):
+        reg = MetricsRegistry()
+        reg.counter("n_total", "n", labelnames=("kind",)) \
+           .labels(kind="x").inc(2)
+        reg.histogram("h_seconds").observe(0.5)
+        d = json.loads(json.dumps(reg.to_dict()))   # JSON-serializable
+        assert d["n_total"]["series"]["kind=x"] == 2.0
+        assert d["h_seconds"]["series"][""]["count"] == 1
+
+    def test_cli_main_validates_and_requires(self, tmp_path):
+        reg = MetricsRegistry()
+        reg.counter("present_total").inc()
+        p = tmp_path / "m.prom"
+        p.write_text(reg.to_prometheus_text())
+        assert metrics_main([str(p), "--require", "present_total"]) == 0
+        assert metrics_main([str(p), "--require", "absent_total"]) != 0
+        p.write_text("garbage { 1\n")
+        assert metrics_main([str(p)]) != 0
+
+
+# ======================================================================
+# shared artifact writers (benchmarks/common.py)
+# ======================================================================
+class TestArtifactWriters:
+    def test_write_json_rows_stamps_and_is_parseable(self, tmp_path):
+        from benchmarks.common import SCHEMA_VERSION, write_json_rows
+        p = tmp_path / "sub" / "rows.json"          # creates parents
+        stamped = write_json_rows(str(p), [{"a": 1}, {"a": 2}], schema="t")
+        assert all(r["schema"] == "t" and
+                   r["schema_version"] == SCHEMA_VERSION for r in stamped)
+        rows = [json.loads(ln) for ln in p.read_text().splitlines()]
+        assert rows == stamped
+        assert not [f for f in os.listdir(p.parent) if f.endswith(".tmp")]
+
+    def test_write_json_dict_and_list(self, tmp_path):
+        from benchmarks.common import write_json
+        p = tmp_path / "doc.json"
+        obj = write_json(str(p), {"x": 1}, schema="d")
+        assert json.loads(p.read_text()) == obj and obj["schema"] == "d"
+        objs = write_json(str(p), [{"x": 1}, {"x": 2}], schema="d")
+        assert json.loads(p.read_text()) == objs
+        assert all(o["schema_version"] for o in objs)
+
+    def test_write_csv_rows_header_and_version(self, tmp_path):
+        from benchmarks.common import SCHEMA_VERSION, write_csv_rows
+        p = tmp_path / "t.csv"
+        write_csv_rows(str(p), [("m", "cfg", 1.5), ("n", "cfg", "x")])
+        lines = p.read_text().splitlines()
+        assert lines[0] == f"# schema_version={SCHEMA_VERSION}"
+        assert lines[1] == "name,config,value"
+        assert lines[2:] == ["m,cfg,1.5", "n,cfg,x"]
+
+    def test_failed_write_preserves_previous_artifact(self, tmp_path):
+        from benchmarks.common import write_json
+        p = tmp_path / "keep.json"
+        write_json(str(p), {"ok": 1}, schema="t")
+        before = p.read_text()
+        with pytest.raises(TypeError):
+            write_json(str(p), {"bad": {1, 2}}, schema="t")   # unserializable
+        assert p.read_text() == before                        # untouched
+        assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+    def test_write_text_atomic(self, tmp_path):
+        from benchmarks.common import write_text
+        p = tmp_path / "m.prom"
+        write_text(str(p), "# TYPE a counter\na 1\n")
+        validate_prometheus_text(p.read_text())
+
+
+# ======================================================================
+# TraceRecorder unit tests
+# ======================================================================
+class TestTraceRecorder:
+    def _lifecycle(self, tr):
+        tr.arrival(0, step=0)
+        tr.admit(0, slot=1, step=2, kind="chunked", cached_tokens=8)
+        import time
+        t = time.perf_counter()
+        tr.chunk(0, slot=1, step=2, t0=t, t1=t + 1e-4, offset=0, n=5)
+        tr.first_token(0, slot=1, step=3)
+        tr.decode_dispatch(step=4, t0=t, t1=t + 2e-4, batch=2)
+        tr.finish(0, slot=1, step=6, reason="stop")
+
+    def test_span_lifecycle(self):
+        tr = TraceRecorder()
+        self._lifecycle(tr)
+        # queued closed at admit, prefill closed at first_token, decode at
+        # finish; plus the slot's prefill/decode residency spans
+        assert tr.count(ev="span", name="queued") == 1
+        assert tr.count(ev="span", name="prefill") == 1
+        assert tr.count(ev="span", name="decode") == 2    # req + engine
+        assert tr.count(name="chunk r0") == 1
+        assert not tr._open                               # all closed
+
+    def test_perfetto_export_structure(self):
+        tr = TraceRecorder()
+        self._lifecycle(tr)
+        doc = json.loads(json.dumps(tr.to_perfetto()))
+        evs = doc["traceEvents"]
+        phs = {e["ph"] for e in evs}
+        assert phs <= {"X", "M", "i", "B"}
+        # the three process tracks are named
+        pnames = {e["args"]["name"] for e in evs
+                  if e["ph"] == "M" and e["name"] == "process_name"}
+        assert pnames == {"requests", "slots", "engine"}
+        for e in evs:
+            if e["ph"] == "X":
+                assert e["dur"] >= 1 and e["ts"] >= 0
+
+    def test_preempt_reopens_queued(self):
+        tr = TraceRecorder()
+        tr.arrival(0, step=0)
+        tr.admit(0, slot=0, step=1, kind="whole_prompt")
+        tr.first_token(0, slot=0, step=1)
+        tr.preempt(0, slot=0, step=5, cause="decode_growth")
+        assert tr.count(ev="instant", name="preempt") == 1
+        assert ("req", 0) in tr._open                  # requeued: open span
+        assert tr._open[("req", 0)][0] == "queued"
+        tr.finish(0, slot=1, step=9, reason="stop")
+        assert tr.count(ev="span", name="queued") == 2
+
+    def test_forget_drops_one_rid(self):
+        tr = TraceRecorder()
+        for rid in (0, 1):
+            tr.arrival(rid, step=0)
+            tr.admit(rid, slot=rid, step=1, kind="whole_prompt")
+            tr.first_token(rid, slot=rid, step=1)
+            tr.finish(rid, slot=rid, step=3, reason="stop")
+        n = len(tr.events)
+        dropped = tr.forget(0)
+        assert dropped > 0 and len(tr.events) == n - dropped
+        assert all(e.get("rid") != 0 for e in tr.events)
+        assert any(e.get("rid") == 1 for e in tr.events)
+
+    def test_max_events_bound(self):
+        tr = TraceRecorder(max_events=100)
+        for i in range(500):
+            tr.instant("engine", 0, "tick", step=i)
+        assert len(tr.events) <= 100
+        assert tr.to_perfetto()["otherData"]["dropped_events"] > 0
+
+    def test_jsonl_roundtrip(self):
+        tr = TraceRecorder()
+        self._lifecycle(tr)
+        lines = tr.to_jsonl().splitlines()
+        assert len(lines) == len(tr.events)
+        assert [json.loads(ln)["name"] for ln in lines] \
+            == [e["name"] for e in tr.events]
+
+
+# ======================================================================
+# engine acceptance: the instrumented serve
+# ======================================================================
+def _shared_prefix_trace(cfg, *, seed=13):
+    """Shared-prefix pair + two page-hungry adversaries (long decodes that
+    overflow the pool and force a preemption) + invalid rejects."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=2 * PW).tolist()
+    sufa = rng.integers(0, cfg.vocab_size, size=3).tolist()
+    sufb = rng.integers(0, cfg.vocab_size, size=3).tolist()
+    return [
+        (0, prefix + sufa, SamplingParams(max_tokens=5), 0),
+        (1, prefix + sufb, SamplingParams(max_tokens=5), 1),
+        (2, [1, 2, 3, 4, 5], SamplingParams(max_tokens=22), 2),
+        (3, [6, 7, 8], SamplingParams(max_tokens=22), 3),
+    ]
+
+
+def _run_instrumented(metrics, tracer):
+    eng = _engine("polar", num_pages=6, prefill_chunk=5, prefix_cache=True,
+                  metrics=metrics, tracer=tracer)
+    core = eng.make_core(max_batch=3)
+    cfg = _setup("polar")[0]
+    for rid, prompt, sp, arr in _shared_prefix_trace(cfg):
+        assert core.add_request(rid, prompt, sp, arrival=arr)
+    # two rejects with distinct causes
+    assert not core.add_request(0, [1, 2], SamplingParams())   # duplicate
+    assert not core.add_request(9, list(range(CACHE_W + 2)),
+                                SamplingParams())               # too_long
+    _drain(core)
+    return eng, core
+
+
+class TestEngineAcceptance:
+    @pytest.fixture(scope="class")
+    def served(self):
+        reg, tr = MetricsRegistry(), TraceRecorder()
+        eng, core = _run_instrumented(reg, tr)
+        eng_off, core_off = _run_instrumented(None, None)
+        return reg, tr, eng, core, eng_off, core_off
+
+    def test_tokens_byte_identical_and_single_trace(self, served):
+        reg, tr, eng, core, eng_off, core_off = served
+        assert core.report.tokens == core_off.report.tokens
+        assert core.report.tokens                    # non-vacuous
+        assert eng.decode_jit_traces() == 1
+        assert eng_off.decode_jit_traces() == 1
+
+    def test_prometheus_exposition_valid_with_required_families(self, served):
+        reg = served[0]
+        fams = validate_prometheus_text(reg.to_prometheus_text())
+        for required in ("engine_queue_depth", "kv_page_occupancy",
+                         "engine_preemptions_total",
+                         "prefix_cache_hits_total", "engine_ttft_seconds",
+                         "engine_itl_seconds", "engine_step_latency_seconds",
+                         "sparsity_head_union_occupancy",
+                         "attn_hbm_read_bytes_total"):
+            assert required in fams, f"missing family {required}"
+        assert fams["engine_ttft_seconds"]["type"] == "histogram"
+
+    def test_preemption_and_prefix_hits_recorded(self, served):
+        reg, tr, eng, core = served[:4]
+        assert core.report.preemptions > 0
+        preempt_total = sum(
+            c.get() for c in
+            reg._families["engine_preemptions_total"]._children.values())
+        assert preempt_total == core.report.preemptions
+        assert reg.value("prefix_cache_hits_total") \
+            == core.report.prefix_hits > 0
+        causes = set(
+            reg._families["engine_requests_rejected_total"]._children)
+        assert ("duplicate",) in causes and ("too_long",) in causes
+
+    def test_perfetto_trace_shows_interleaving_and_preempt(self, served):
+        tr = served[1]
+        doc = json.loads(json.dumps(tr.to_perfetto()))
+        evs = doc["traceEvents"]
+        chunks = [e for e in evs if e["ph"] == "X"
+                  and e["name"].startswith("chunk")]
+        decodes = [e for e in evs if e["ph"] == "X" and e["name"] == "decode"
+                   and e["pid"] == 3]
+        preempts = [e for e in evs if e["ph"] == "i"
+                    and e["name"] == "preempt"]
+        assert chunks and decodes and preempts
+        # chunked prefill interleaves with decode: some chunk executes at a
+        # step where a batched decode also dispatched
+        decode_steps = {e["args"]["step"] for e in decodes}
+        assert any(c["args"]["step"] in decode_steps for c in chunks)
+
+    def test_sparsity_occupancy_bounded_by_policy(self, served):
+        reg, tr, eng, core = served[:4]
+        cfg, _, routers, pol = _setup("polar")
+        meta = decode_telemetry_meta(cfg, pol, routers_present=True)
+        sel = [m for m in meta.values() if m.get("selected")]
+        assert sel, "smoke policy must select heads somewhere"
+        frac = sel[0]["k_sel"] / sel[0]["G"]
+        rows = list(core.sparsity_log)
+        assert rows
+        for row in rows:
+            # per-row realized selection is exactly k_sel/G on selected
+            # layers; the batch union can only exceed it, never the
+            # batch-scaled bound
+            assert row["head_selected_frac"] == pytest.approx(frac, abs=1e-6)
+            bound = min(1.0, row["batch"] * frac)
+            assert row["head_union_occupancy"] <= bound + 1e-6
+            assert row["head_union_occupancy"] >= frac - 1e-6
+        # the exported gauge carries the last step's value
+        layers = reg._families["sparsity_head_union_occupancy"]._children
+        assert layers and all(0.0 <= c.get() <= 1.0
+                              for c in layers.values())
+
+    def test_latency_histograms_match_report_series(self, served):
+        reg, tr, eng, core = served[:4]
+        rep = core.report
+        ttft = rep.ttft_wall_s()
+        itl = rep.itl_wall_s()
+        assert reg.value("engine_ttft_seconds") == len(ttft)
+        assert reg.value("engine_itl_seconds") \
+            == sum(len(v) for v in itl.values())
+        sum_itl = sum(sum(v) for v in itl.values())
+        child = reg._families["engine_itl_seconds"].labels()
+        assert child.sum == pytest.approx(sum_itl, abs=1e-6)
+
+    def test_gauges_mirror_final_engine_state(self, served):
+        reg, tr, eng, core = served[:4]
+        assert reg.value("kv_pages_in_use") == core.pool.pages_in_use
+        assert reg.value("kv_pages_free") == core.pool.free_pages
+        assert reg.value("engine_requests_running") == 0
+        assert reg.value("engine_requests_waiting") == 0
+        # the counter counts step() calls; the clock only advances on
+        # steps that did engine work, so it can lag
+        assert reg.value("engine_steps_total") >= core.clock
+        assert reg.value("engine_tokens_decoded_total") \
+            == core.report.tokens_decoded
+        # per-path byte counters sum to the report's accounting
+        read_total = sum(
+            c.get() for c in
+            reg._families["attn_hbm_read_bytes_total"]._children.values())
+        assert read_total == core.report.hbm_read_bytes
+        assert reg.value("attn_gather_bytes_avoided_total") \
+            == core.report.gather_bytes_avoided
+
+
+# ======================================================================
+# conservation laws under random interleavings
+# ======================================================================
+def _registry_conservation(core, reg):
+    finished = sum(
+        c.get() for c in
+        reg._families["engine_requests_finished_total"]._children.values())
+    running = len(core.sched.running)
+    waiting = len(core.sched.waiting)
+    submitted = reg.value("engine_requests_submitted_total")
+    aborted = reg.value("engine_requests_aborted_total")
+    assert submitted == finished + aborted + running + waiting, (
+        f"submitted {submitted} != finished {finished} + aborted {aborted} "
+        f"+ running {running} + waiting {waiting}")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_interleaving_registry_invariants(seed):
+    """Seeded add/abort/step fuzz: after every step the registry obeys the
+    conservation law and the page gauges mirror the pool exactly."""
+    reg, tr = MetricsRegistry(), TraceRecorder()
+    eng = _engine("dense", num_pages=8, metrics=reg, tracer=tr)
+    core = eng.make_core(max_batch=3)
+    rng = np.random.default_rng(seed)
+    cfg = _setup("dense")[0]
+    next_rid, live = 0, []
+    for _ in range(60):
+        op = rng.choice(["add", "abort", "step"], p=[0.3, 0.1, 0.6])
+        if op == "add" and next_rid < 12:
+            plen = int(rng.integers(1, 12))
+            prompt = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+            mt = int(rng.integers(1, 8))
+            if core.add_request(next_rid, prompt,
+                                SamplingParams(max_tokens=mt)):
+                live.append(next_rid)
+            next_rid += 1
+        elif op == "abort" and live:
+            core.abort(live.pop(int(rng.integers(len(live)))))
+        else:
+            for out in core.step():
+                if out.finished and out.rid in live:
+                    live.remove(out.rid)
+            _registry_conservation(core, reg)
+            assert reg.value("kv_pages_in_use") == core.pool.pages_in_use
+            assert reg.value("kv_pages_free") == core.pool.free_pages
+            assert reg.value("engine_requests_running") \
+                == len(core.sched.running)
+    _drain(core)
+    _registry_conservation(core, reg)
+    assert eng.decode_jit_traces() == 1
+    # the exposition stays strictly valid through arbitrary interleavings
+    validate_prometheus_text(reg.to_prometheus_text())
+    rep = core.report
+    assert reg.value("engine_ttft_seconds") == len(rep.ttft_wall_s())
+
+
+# ======================================================================
+# forget / max_history: bounded per-request state
+# ======================================================================
+def _tiny_requests(cfg, n, *, start=0, seed=3):
+    rng = np.random.default_rng(seed + start)
+    return [(start + i,
+             rng.integers(0, cfg.vocab_size, size=3).tolist(),
+             SamplingParams(max_tokens=2)) for i in range(n)]
+
+
+def test_forget_drops_trace_and_series():
+    reg, tr = MetricsRegistry(), TraceRecorder()
+    eng = _engine("dense", metrics=reg, tracer=tr)
+    core = eng.make_core(max_batch=2)
+    cfg = _setup("dense")[0]
+    for rid, prompt, sp in _tiny_requests(cfg, 3):
+        core.add_request(rid, prompt, sp)
+    _drain(core)
+    assert not core.forget(99)                       # unknown rid
+    assert any(e.get("rid") == 1 for e in tr.events)
+    submitted_before = reg.value("engine_requests_submitted_total")
+    assert core.forget(1)
+    for d in (core.report.tokens, core.report.arrival,
+              core.report.token_walls, core.report.finished_step):
+        assert 1 not in d
+    assert all(e.get("rid") != 1 for e in tr.events)
+    assert all(r.request.rid != 1 for r in core.sched.finished)
+    # aggregates survive forgetting per-request history
+    assert reg.value("engine_requests_submitted_total") == submitted_before
+    assert 0 in core.report.tokens and 2 in core.report.tokens
+
+
+def _soak(n_requests, max_history, batch=4):
+    reg, tr = MetricsRegistry(), TraceRecorder()
+    cfg, params, routers, pol = _setup("dense")
+    llm = LLM(cfg, params, cache_width=CACHE_W, page_w=PW, max_batch=batch,
+              metrics=reg, tracer=tr, max_history=max_history)
+    core = llm.core
+    done = 0
+    for start in range(0, n_requests, batch):
+        batch_reqs = _tiny_requests(cfg, min(batch, n_requests - start),
+                                    start=start)
+        outs = llm.generate([p for _, p, _ in batch_reqs],
+                            [sp for _, _, sp in batch_reqs])
+        done += sum(1 for o in outs if o is not None and o.finished)
+        # bounded at all times, not just at the end
+        assert len(core.report.tokens) <= max_history + batch
+        assert len(core.sched.finished) <= max_history + batch
+    assert done == n_requests
+    assert len(core._history) <= max_history
+    assert len(core.report.token_walls) <= max_history
+    # trace events bounded too: only retained rids keep request spans
+    rids = {e["rid"] for e in tr.events if e.get("rid") is not None}
+    assert len(rids) <= max_history + batch
+    assert reg.value("engine_requests_submitted_total") == n_requests
+    validate_prometheus_text(reg.to_prometheus_text())
+    assert llm.decode_jit_traces() == 1
+
+
+def test_max_history_bounds_retained_state():
+    _soak(120, max_history=16)
+
+
+@pytest.mark.slow
+def test_max_history_soak_1k_requests():
+    """A persistent server serving 1000 requests retains only the capped
+    history window, with the registry still consistent at the end."""
+    _soak(1000, max_history=32)
