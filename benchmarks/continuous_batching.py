@@ -166,7 +166,7 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         impl: str = "gather", seed: int = 0, page_w: int = 16,
         page_share: float = 0.5, workload: str = "poisson",
         prefill_chunk=None, max_step_tokens=None, kv_quant: bool = False,
-        metrics_out=None, trace_out=None):
+        metrics_out=None, trace_out=None, json_out=None):
     if num_requests < 1:
         raise SystemExit("--num-requests must be >= 1")
     cfg, params, routers, pol = get_toy_model()
@@ -368,7 +368,8 @@ def run(num_requests: int = 24, rate: float = 0.6, max_batch: int = 8,
         rows.append(("cb_adversary_itl_p99_shrink", f"mb{max_batch}",
                      round(itl["whole_prompt"] / itl["chunked"], 3)))
 
-    out_path = os.path.join(RESULTS, "continuous_batching.json")
+    out_path = (json_out if json_out is not None
+                else os.path.join(RESULTS, "continuous_batching.json"))
     json_rows = write_json_rows(out_path, json_rows,
                                 schema="continuous_batching")
     for row in json_rows:
@@ -426,6 +427,10 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="write the final variant's Perfetto trace_event "
                          "JSON here (open in ui.perfetto.dev)")
+    ap.add_argument("--json-out", default=None,
+                    help="write the JSONL result rows here instead of "
+                         "results/continuous_batching.json (CI names each "
+                         "workload's artifact directly)")
     args = ap.parse_args()
     impl = args.impl
     if args.attn_impl is not None:      # forcing flag wins over --impl
@@ -437,7 +442,8 @@ def main():
                                    args.max_step_tokens,
                                    kv_quant=args.kv_quant,
                                    metrics_out=args.metrics_out,
-                                   trace_out=args.trace_out):
+                                   trace_out=args.trace_out,
+                                   json_out=args.json_out):
         print(f"{name},{config},{value}")
 
 

@@ -3,7 +3,6 @@ output L2 norm, layer 0 dense).  Claim reproduced: ppl degrades gracefully
 down to ~50% density."""
 from __future__ import annotations
 
-import dataclasses
 
 from benchmarks.common import data_cfg, get_toy_model, perplexity
 from repro.core import PolarPolicy

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import timeit
 from repro.models.mlp import init_mlp, mlp_apply, sparse_mlp_apply

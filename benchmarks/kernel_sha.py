@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timeit
-from repro.kernels.sha import sha_ref
 
 B, G, qpg, dh, W = 32, 16, 1, 64, 1920  # paper's seq len 1920, MHA-style
 

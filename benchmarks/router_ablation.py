@@ -20,7 +20,6 @@ def run():
     cfg, params, routers, pol = get_toy_model()
     x = jax.random.normal(jax.random.PRNGKey(0), (B, 1, cfg.d_model), jnp.float32)
     # layer 1 (first sparse segment) artifacts
-    seg = [k for k in routers if routers[k]]
     rp = routers["seg1"]["pos0"]
     slice0 = jax.tree_util.tree_map(lambda a: a[0], rp)
     lp = jax.tree_util.tree_map(lambda a: a[0], params["seg1"]["pos0"])

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import data_cfg, get_toy_model

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import data_cfg, get_toy_model
-from repro.core import union_sparsity
 from repro.data import token_stream
 from repro.models import forward
 

@@ -5,7 +5,6 @@
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core import default_policy
@@ -38,7 +37,7 @@ print("prompt shape:", prompt.shape)
 print("generated   :", tokens.shape)
 print(tokens)
 print(f"decode throughput: {engine.stats.decode_tok_per_s:.1f} tok/s "
-      f"(CPU, batch=4, polar sparsity ON)")
+      "(CPU, batch=4, polar sparsity ON)")
 
 # 5. the serving frontend: continuous batching with per-request sampling —
 #    greedy and temperature/top-k requests share one compiled decode step

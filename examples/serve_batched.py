@@ -171,7 +171,7 @@ def stream_demo(args, cfg, params, routers, pol):
             print(f"  rid {out.rid} finished ({out.finish_reason}): "
                   f"{len(out.token_ids)} tokens")
     print(f"\ndecode traces: {llm.decode_jit_traces()} "
-          f"(mixed sampling configs, single compile)")
+          "(mixed sampling configs, single compile)")
 
 
 def shared_prefix_demo(args, cfg, params, routers, pol):

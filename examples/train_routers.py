@@ -7,13 +7,12 @@ steps, collect activation supervision, train MLP + attention-head routers
 import argparse
 import dataclasses
 
-import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import default_policy
 from repro.data import DataConfig, lm_batches
-from repro.models import init_params, prepare_model_config
+from repro.models import prepare_model_config
 from repro.training import train, train_routers
 
 

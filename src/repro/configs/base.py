@@ -8,7 +8,7 @@ the same family for CPU tests). ``repro.configs.get_config(name)`` /
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -11,7 +11,7 @@ The paper's recipe (§4, §5):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from repro.configs.base import ModelConfig

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import re
 from dataclasses import asdict, dataclass
-from typing import Optional
 
 PEAK_FLOPS = 197e12      # bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip

@@ -14,10 +14,7 @@ fallback that makes e.g. musicgen's 24 heads lower on a 16-way model axis
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import batch_axes

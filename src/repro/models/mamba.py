@@ -109,7 +109,6 @@ def mamba_full(p, x, cfg, cache=None):
 def mamba_decode(p, x, cfg, cache):
     """x (B, 1, d); O(1) state update."""
     s, di, _ = _dims(cfg)
-    B = x.shape[0]
     xz = linear(x[:, 0], p["in_proj"])
     x_in, z = jnp.split(xz, 2, axis=-1)                                # (B,di)
 

@@ -20,7 +20,7 @@ Public entry points:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -327,10 +327,9 @@ def _layer_full(lp, spec, x, *, cfg, policy, router_p, cos, sin, cache,
     elif spec.mixer == "mamba":
         out, new_c = mamba_lib.mamba_full(lp["mixer"], h, cfg, cache=cache)
     else:  # rwkv
-        cm_shift = None
         if cache is not None:
             cache = dict(cache)
-            cm_shift = cache.pop("shift_cm", None)
+            cache.pop("shift_cm", None)
         out, new_c = rwkv_lib.rwkv_full(lp["mixer"], h, cfg, cache=cache,
                                         head_select=sel if sel and sel[0] == "mask" else None)
     x = x + out

@@ -175,7 +175,6 @@ def _dispatch_moe_ep(p, xf, gates, idx, cfg):
         # w1/w3 local (E/dsz, d, ff/msz); w2 local (E/dsz, ff/msz, d).
         buf, slot, C = _local_dispatch(x_loc, g_loc, i_loc, E, k,
                                        e.capacity_factor)
-        E_loc = E // dsz
         d_loc = x_loc.shape[-1]
         # tiled all_to_all: (E, C, d) -> (E_loc, dsz*C, d); its AD transpose
         # is the symmetric reverse call (the untiled form mis-transposes

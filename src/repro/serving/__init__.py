@@ -16,6 +16,19 @@ num_pages, prefill_chunk, max_step_tokens)`` (llm.py)
                                     ``EngineCore`` and reassembles a
                                     ``ServeReport``.  Prefer ``LLM`` /
                                     ``EngineCore`` for new code.
+``HTTPServer`` / ``AsyncEngine`` / ``build_server`` (server.py)
+    dependency-free (stdlib asyncio, HTTP/1.1) OpenAI-compatible front
+    end: ``POST /v1/completions`` (blocking or ``stream=true`` SSE,
+    ``logprobs``, ``user`` -> scheduler tenant), ``GET /metrics``
+    (live Prometheus scrape of the engine registry + ``http_*``
+    families), ``GET /health`` (queue/KV headroom JSON).  Client
+    disconnect aborts the request engine-side — slot and KV pages free
+    immediately.  ``AsyncEngine`` is the asyncio <-> ``EngineCore``
+    bridge (command queue in, per-request output queues out; ``step()``
+    runs in a dedicated executor thread); ``HTTPServer.respond()`` is
+    the socket-free dispatch tests drive directly.
+    ``python -m repro.serving.server`` serves; ``--smoke`` is the
+    live-server CI gate.
 
 Core
 ----
@@ -66,12 +79,21 @@ Data types
 ----------
 ``SamplingParams``  temperature (0 = greedy), top_k, top_p, max_tokens,
                     stop_token_ids, seed (draws keyed by (seed, position):
-                    batch-composition independent).          (params.py)
+                    batch-composition independent), logprobs (<=
+                    ``MAX_LOGPROBS`` top alternatives per token, computed
+                    from the RAW distribution inside the single jitted
+                    decode step — tokens are bit-identical with it on or
+                    off, and mixed logprobs-on/off batches still trace
+                    once).                                   (params.py)
 ``RequestOutput``   rid, new_token_ids (delta), token_ids (cumulative),
                     finished, finish_reason
-                    ("stop" | "length" | "abort" | "reject"), reason.
+                    ("stop" | "length" | "abort" | "reject"), reason;
+                    when logprobs were requested: new_logprobs /
+                    logprobs (chosen-token lps) and new_top_logprobs
+                    ({token_id: lp} per position).
 ``Request``         scheduler-level record (prompt, arrival step, stop
-                    ids); raises ``InvalidRequestError``.  (scheduler.py)
+                    ids, tenant); raises ``InvalidRequestError``.
+                    (scheduler.py)
 ``ServeReport``     aggregate throughput / queueing / paging metrics.
 
 Observability
@@ -103,7 +125,13 @@ Observability
 
 Infrastructure
 --------------
-``Scheduler``       FCFS admission, eviction, preemption requeue.
+``Scheduler``       admission via per-tenant deficit round-robin
+                    (``tenant_weights=`` / ``quantum=``; a flooding
+                    tenant cannot starve a light one — bounded wait of
+                    ceil(1/(quantum*weight)) rotor cycles), FCFS within
+                    a tenant; a single tenant degrades exactly to the
+                    historical strict-FCFS order.  Plus eviction and
+                    preemption requeue.
 ``KVPool`` / ``PagedKVPool``  fixed-shape slot pool; paged variant adds
                     page tables, allocate-on-decode growth, sink-page
                     masking, O(log n) free lists, per-page refcounts with
@@ -128,10 +156,12 @@ from repro.serving.params import (InvalidRequestError, RequestOutput,
 from repro.serving.scheduler import (Request, Scheduler, SlotRun,
                                      poisson_requests)
 from repro.serving import sampling
+from repro.serving.server import AsyncEngine, HTTPServer, build_server
 
 __all__ = ["Engine", "EngineCore", "EngineStats", "ServeReport",
            "build_engine", "make_serving_jits", "KVPool", "PagedKVPool",
            "PrefixCache", "LLM", "InvalidRequestError", "RequestOutput",
            "SamplingParams", "Request", "Scheduler", "SlotRun",
            "poisson_requests", "sampling", "MetricsRegistry",
-           "TraceRecorder", "validate_prometheus_text"]
+           "TraceRecorder", "validate_prometheus_text",
+           "AsyncEngine", "HTTPServer", "build_server"]

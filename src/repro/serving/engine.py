@@ -56,13 +56,14 @@ from repro.serving.tracing import TraceRecorder
 from repro.serving.params import (FINISH_ABORT, FINISH_REJECT, FINISH_STOP,
                                   InvalidRequestError, RequestOutput,
                                   SamplingParams)
-from repro.serving.scheduler import (PHASE_DECODE, PHASE_PREFILL, Request,
-                                     Scheduler, SlotRun)
+from repro.serving.scheduler import (DEFAULT_TENANT, PHASE_DECODE,
+                                     Request, Scheduler,
+                                     SlotRun)
 
 # the prefill-completion (first-token) sampler, jitted once per process:
 # running it eagerly costs hundreds of ms per admission on CPU, which
 # swamps every wall-clock latency metric the report carries
-_SAMPLE_ONE = jax.jit(sampling.sample)
+_SAMPLE_ONE = jax.jit(sampling.sample_lp)
 
 
 @dataclass
@@ -187,8 +188,12 @@ def make_serving_jits(cfg, policy: Optional[PolarPolicy],
     so heterogeneous per-request sampling configs are data, not code — one
     trace covers them all.
 
-    The decode jit always returns ``(tokens, cache, telemetry_aux)``; with
-    ``telemetry=False`` (the default) the aux is an empty dict — no extra
+    The decode jit always returns ``(tokens, logprobs_aux, cache,
+    telemetry_aux)``; the logprobs aux (chosen-token logprob + top-K
+    alternatives per slot) is computed under a runtime ``lax.cond`` only
+    when some active slot requested logprobs — still one trace, and
+    bit-identical tokens either way.  With ``telemetry=False`` (the
+    default) the telemetry aux is an empty dict — no extra
     outputs, no host transfers, bit-identical tokens.  With
     ``telemetry=True`` the aux carries the per-layer realized-sparsity
     scalars of ``decode_step(telemetry=True)`` (the engine reads them only
@@ -215,8 +220,12 @@ def make_serving_jits(cfg, policy: Optional[PolarPolicy],
                                         cache=cache, routers=routers,
                                         policy=policy)
             telem = {}
-        toks = sampling.sample(logits, **samp)
-        return toks, cache, telem
+        # sample_lp piggybacks the per-slot logprob outputs on the one
+        # decode executable: a runtime lax.cond skips the log-softmax +
+        # top-k entirely when no active slot asked for logprobs, and the
+        # token draw itself is bit-identical to sampling.sample
+        toks, lp = sampling.sample_lp(logits, **samp)
+        return toks, lp, cache, telem
 
     def _chunk(params, tokens, cache, slot, offset, n_valid, kw):
         return prefill_chunk(params, cfg, tokens=tokens, cache=cache,
@@ -251,6 +260,9 @@ class _EngineMetrics:
                          "requests aborted by the caller")
         self.admissions = c("engine_admissions_total",
                             "slot admissions by prefill kind", ("kind",))
+        self.tenant_admissions = c("engine_tenant_admissions_total",
+                                   "slot admissions by DRR tenant",
+                                   ("tenant",))
         self.preemptions = c("engine_preemptions_total",
                              "recompute preemptions by cause", ("cause",))
         self.queue_depth = g("engine_queue_depth",
@@ -360,6 +372,7 @@ class EngineCore:
                  max_step_tokens: Optional[int] = None,
                  prefix_cache: bool = False,
                  watermark: int = 0,
+                 tenant_weights: Optional[Dict[str, float]] = None,
                  stats: Optional[EngineStats] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[TraceRecorder] = None,
@@ -433,7 +446,8 @@ class EngineCore:
                 f"watermark {watermark} >= num_pages {self.pool.num_pages}: "
                 "the pool could never hold a cached prefix")
         self._cow_seen = 0               # pool.cow_copies already accounted
-        self.sched = Scheduler(max_batch, max_length=cache_width - 1)
+        self.sched = Scheduler(max_batch, max_length=cache_width - 1,
+                               tenant_weights=tenant_weights)
         self.clock = 0
         self.report = ServeReport(tokens={}, admitted_step={},
                                   finished_step={}, arrival={})
@@ -474,18 +488,26 @@ class EngineCore:
         self._top_p = np.ones((self.max_batch,), np.float32)
         self._seed = np.zeros((self.max_batch,), np.uint32)
         self._pos = np.zeros((self.max_batch,), np.int32)
+        self._want_lp = np.zeros((self.max_batch,), bool)
         self._emitted: Dict[int, int] = {}       # rid -> tokens emitted
         self._tokens: Dict[int, List[int]] = {}  # rid -> emitted stream
+        # rids that asked for logprobs: emitted chosen-token logprobs and
+        # top-alternative dicts, in lockstep with _tokens
+        self._lps: Dict[int, List[float]] = {}
+        self._tops: Dict[int, List[Dict[int, float]]] = {}
         self._pending: List[RequestOutput] = []  # rejects/aborts to deliver
 
     # --------------------------------------------------------- frontend ---
     def add_request(self, rid: int, prompt: Sequence[int],
                     params: Optional[SamplingParams] = None, *,
                     arrival: Optional[int] = None,
-                    eos_id: Optional[int] = None) -> bool:
+                    eos_id: Optional[int] = None,
+                    tenant: str = DEFAULT_TENANT) -> bool:
         """Enqueue one request.  Returns False (and queues a
         ``finish_reason="reject"`` output for the next ``step()``) when the
-        request can never be served; the engine loop keeps running."""
+        request can never be served; the engine loop keeps running.
+        ``tenant`` is the DRR fairness key — requests of one tenant admit
+        FIFO among themselves, tenants share admission slots by weight."""
         params = params if params is not None else SamplingParams()
         if params.seed is None:
             params = dataclasses.replace(params, seed=rid & 0x7FFFFFFF)
@@ -501,7 +523,7 @@ class EngineCore:
                           arrival=self.clock if arrival is None else arrival,
                           eos_id=eos_id,
                           stop_token_ids=params.stop_token_ids,
-                          sampling=params)
+                          sampling=params, tenant=tenant)
             if len(req.prompt) >= self.cache_width:
                 cause = "too_long"
                 raise InvalidRequestError(
@@ -521,6 +543,9 @@ class EngineCore:
         self.report.arrival[rid] = req.arrival
         self._emitted.setdefault(rid, 0)
         self._tokens.setdefault(rid, [])
+        if params.logprobs is not None:
+            self._lps.setdefault(rid, [])
+            self._tops.setdefault(rid, [])
         if self._m is not None:
             self._m.submitted.inc()
         return True
@@ -535,6 +560,7 @@ class EngineCore:
         if slot is not None:
             self.sched.drop(slot)
             self.pool.release(slot)
+            self._want_lp[slot] = False
             if slot == self._prefilling:     # aborted mid-chunked-prefill
                 self._prefilling = None
             hit = True
@@ -547,7 +573,9 @@ class EngineCore:
             self._pending.append(RequestOutput(
                 rid=rid, token_ids=list(self._tokens.get(rid, [])),
                 finished=True, finish_reason=FINISH_ABORT,
-                reason="aborted by caller"))
+                reason="aborted by caller",
+                logprobs=(list(self._lps[rid]) if rid in self._lps
+                          else None)))
             self._history.append(rid)
             self._trim_history()
         return hit
@@ -569,10 +597,18 @@ class EngineCore:
         ``RequestOutput`` downstream.  Returns False while the request is
         still waiting/running (or the rid is unknown)."""
         if (self.sched.find_running(rid) is not None
-                or any(r.rid == rid for r in self.sched.waiting)
-                or rid not in self.report.arrival):
+                or any(r.rid == rid for r in self.sched.waiting)):
             return False
-        for d in (self._tokens, self._emitted, self.report.tokens,
+        if rid not in self.report.arrival:
+            # rejected rids never reach `arrival`, but a persistent server
+            # still must not accrete their reject records forever
+            if rid in self.report.rejected:
+                self.report.rejected = [r for r in self.report.rejected
+                                        if r != rid]
+                return True
+            return False
+        for d in (self._tokens, self._emitted, self._lps, self._tops,
+                  self.report.tokens,
                   self.report.arrival, self.report.admitted_step,
                   self.report.finished_step, self.report.first_token_step,
                   self.report.arrival_wall, self.report.token_steps,
@@ -683,7 +719,7 @@ class EngineCore:
             plan = self._admission_plan(req) if req is not None else None
             if plan is not None:
                 cursor, pages = plan
-                sched.pop_head()
+                sched.pop_head(self.clock)
                 slot = pool.claim()
                 if pages or chunk_budget is not None:
                     # chunked prefill — with a hit, the cached prefix maps
@@ -712,7 +748,7 @@ class EngineCore:
                         short = pool.pages_needed(len(req.prompt)) - pool.free_pages
                         if short > 0:
                             self._evict_prefix(short)
-                    tok, layers, L = self._prefill_request(req)
+                    tok, lp1, layers, L = self._prefill_request(req)
                     pool.insert(layers, slot, L)
                     self._insert_prefix(slot, req)
                     self._lower_sampling(slot, req.sampling)
@@ -726,6 +762,7 @@ class EngineCore:
                         # track flips straight to its decode span
                         self.tracer.first_token(req.rid, slot, self.clock)
                     run = sched.bind(slot, req, self.clock, tok)
+                    self._note_lp(run, lp1)
                     self.report.first_token_step.setdefault(req.rid,
                                                             self.clock)
                     if run.done:                  # e.g. max_tokens == 1
@@ -734,6 +771,8 @@ class EngineCore:
                 # residency time of a later-preempted request
                 self.report.admitted_step.setdefault(req.rid, self.clock)
                 self.report.slots_served += 1
+                if self._m is not None:
+                    self._m.tenant_admissions.labels(tenant=req.tenant).inc()
         if self._prefilling is not None and (chunk_budget is None
                                              or chunk_budget > 0):
             run = sched.running[self._prefilling]
@@ -751,10 +790,17 @@ class EngineCore:
             for slot in decoding:
                 cur[slot] = sched.running[slot].pending
             td = time.perf_counter()
-            toks, pool.cache, telem = self._decode(
+            toks, lp, pool.cache, telem = self._decode(
                 self.params, self.routers, jnp.asarray(cur), pool.cache,
                 self._samp_arrays())
             toks = np.asarray(toks)
+            # one host transfer for the whole batch, only when some
+            # decoding slot asked for logprobs this step
+            lp_host = None
+            if any(self._want_lp[s] for s in decoding):
+                lp_host = (np.asarray(lp["chosen"]),
+                           np.asarray(lp["top_vals"]),
+                           np.asarray(lp["top_ids"]))
             t_after = time.perf_counter()
             self.stats.decode_s += t_after - td
             n_active = len(decoding)
@@ -802,6 +848,12 @@ class EngineCore:
             for slot in decoding:
                 self._pos[slot] += 1
                 run = sched.record(slot, int(toks[slot]), self.clock)
+                if lp_host is not None and self._want_lp[slot]:
+                    k = (run.request.sampling.logprobs or 0
+                         if run.request.sampling is not None else 0)
+                    self._note_lp(run, (float(lp_host[0][slot]),
+                                        self._top_dict(lp_host[2][slot],
+                                                       lp_host[1][slot], k)))
                 if run.done:
                     outs.append(self._finish(run))
                 else:
@@ -967,13 +1019,14 @@ class EngineCore:
             return []
         # ---- prompt complete: first token, decode phase, this step -------
         p = req.sampling if req.sampling is not None else SamplingParams()
-        tok = self._sample_one(logits[0, n - 1], p, pos=0)
+        tok, lp1 = self._sample_one(logits[0, n - 1], p, pos=0)
         pool.activate(slot, L)
         self._insert_prefix(slot, req)
         self._lower_sampling(slot, req.sampling)
         if self.tracer is not None:
             self.tracer.first_token(req.rid, slot, self.clock)
         run = sched.begin_decode(slot, tok, self.clock)
+        self._note_lp(run, lp1)
         self.report.first_token_step.setdefault(req.rid, self.clock)
         self._prefilling = None
         if run.done:                              # e.g. max_tokens == 1
@@ -1080,29 +1133,55 @@ class EngineCore:
         self._top_p[slot] = p.top_p
         self._seed[slot] = np.uint32((p.seed or 0) & 0xFFFFFFFF)
         self._pos[slot] = 1          # position 0 was the prefill sample
+        self._want_lp[slot] = p.logprobs is not None
 
     def _samp_arrays(self):
         return dict(temp=jnp.asarray(self._temp),
                     top_k=jnp.asarray(self._top_k),
                     top_p=jnp.asarray(self._top_p),
                     seed=jnp.asarray(self._seed),
-                    pos=jnp.asarray(self._pos))
+                    pos=jnp.asarray(self._pos),
+                    want_lp=jnp.asarray(self._want_lp))
 
-    def _sample_one(self, logits, p: SamplingParams, pos: int) -> int:
+    def _sample_one(self, logits, p: SamplingParams, pos: int):
         """Sample one token from one row with the request's params (used at
-        prefill; same math as the in-decode batched sampler at ``pos``)."""
-        return int(_SAMPLE_ONE(
+        prefill; same math as the in-decode batched sampler at ``pos``).
+        Returns ``(token, lp_entry)`` — ``lp_entry`` is ``None`` unless the
+        request asked for logprobs, else ``(chosen_logprob, top_dict)``."""
+        want = p.logprobs is not None
+        tok, lp = _SAMPLE_ONE(
             logits[None],
             temp=jnp.asarray([p.temperature], jnp.float32),
             top_k=jnp.asarray([p.top_k], jnp.int32),
             top_p=jnp.asarray([p.top_p], jnp.float32),
             seed=jnp.asarray([(p.seed or 0) & 0xFFFFFFFF], jnp.uint32),
-            pos=jnp.asarray([pos], jnp.int32))[0])
+            pos=jnp.asarray([pos], jnp.int32),
+            want_lp=jnp.asarray([want]))
+        tok = int(tok[0])
+        if not want:
+            return tok, None
+        return tok, (float(np.asarray(lp["chosen"])[0]),
+                     self._top_dict(np.asarray(lp["top_ids"])[0],
+                                    np.asarray(lp["top_vals"])[0],
+                                    p.logprobs))
+
+    @staticmethod
+    def _top_dict(ids, vals, k: int) -> Dict[int, float]:
+        """The request-facing top-alternatives dict: the K-wide in-jit
+        top-k trimmed to the k the request actually asked for."""
+        return {int(i): float(v) for i, v in zip(ids[:k], vals[:k])}
+
+    def _note_lp(self, run: SlotRun, lp_entry) -> None:
+        if lp_entry is None:
+            return
+        chosen, top = lp_entry
+        run.logprobs.append(chosen)
+        run.top_logprobs.append(top)
 
     def _prefill_request(self, req: Request):
         """Prefill one prompt at a power-of-two bucket length (one jit trace
-        per bucket).  Returns (first sampled token, layer caches, prompt
-        length)."""
+        per bucket).  Returns (first sampled token, its logprob entry or
+        None, layer caches, prompt length)."""
         L = len(req.prompt)
         P = 8
         while P < L:
@@ -1117,8 +1196,8 @@ class EngineCore:
         logits.block_until_ready()
         self.stats.prefill_s += time.perf_counter() - t0
         p = req.sampling if req.sampling is not None else SamplingParams()
-        tok = self._sample_one(logits, p, pos=0)
-        return tok, out["cache"]["layers"], L
+        tok, lp1 = self._sample_one(logits, p, pos=0)
+        return tok, lp1, out["cache"]["layers"], L
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
         """Youngest running slot (latest admission, then highest rid) other
@@ -1131,6 +1210,7 @@ class EngineCore:
         rid = self.sched.running[slot].request.rid
         self.sched.requeue(slot, self.clock)
         self.pool.release(slot)
+        self._want_lp[slot] = False
         if slot == self._prefilling:   # pool pressure hit a half-prefilled
             self._prefilling = None    # slot: its chunks recompute later
         self.report.preemptions += 1
@@ -1144,12 +1224,23 @@ class EngineCore:
         request re-derives its earlier tokens deterministically; only the
         genuinely new suffix is emitted."""
         rid = run.request.rid
+        want_lp = rid in self._lps
         gen = run.generated
         if finished and run.finish_reason == FINISH_STOP:
             gen = gen[:-1]           # the stop token itself is not emitted
-        new = [int(t) for t in gen[self._emitted[rid]:]]
+        start = self._emitted[rid]
+        new = [int(t) for t in gen[start:]]
         self._tokens[rid].extend(new)
-        self._emitted[rid] = max(self._emitted[rid], len(gen))
+        self._emitted[rid] = max(start, len(gen))
+        new_lps = new_tops = None
+        if want_lp:
+            # run.logprobs rides in lockstep with run.generated, so the
+            # same stop-trim + emitted-window slicing applies (a preempted
+            # request re-derives its prefix deterministically, like tokens)
+            new_lps = [float(v) for v in run.logprobs[:len(gen)][start:]]
+            new_tops = list(run.top_logprobs[:len(gen)][start:])
+            self._lps[rid].extend(new_lps)
+            self._tops[rid].extend(new_tops)
         if new:                        # per-token latency series (TTFT/ITL)
             now = time.perf_counter()
             if self._m is not None:
@@ -1173,11 +1264,16 @@ class EngineCore:
                              token_ids=list(self._tokens[rid]),
                              finished=finished,
                              finish_reason=run.finish_reason if finished
-                             else None)
+                             else None,
+                             new_logprobs=new_lps,
+                             logprobs=(list(self._lps[rid]) if want_lp
+                                       else None),
+                             new_top_logprobs=new_tops)
 
     def _finish(self, run: SlotRun) -> RequestOutput:
         self.sched.evict(run.slot)
         self.pool.release(run.slot)
+        self._want_lp[run.slot] = False
         out = self._emit(run, finished=True)
         rid = run.request.rid
         self.report.tokens[rid] = list(self._tokens[rid])

@@ -56,6 +56,7 @@ class LLM:
                  prefill_chunk: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
                  prefix_cache: bool = False, watermark: int = 0,
+                 tenant_weights=None,
                  metrics=None, tracer=None,
                  max_history: Optional[int] = None,
                  _jits=None):
@@ -69,6 +70,7 @@ class LLM:
                                max_step_tokens=max_step_tokens,
                                prefix_cache=prefix_cache,
                                watermark=watermark,
+                               tenant_weights=tenant_weights,
                                metrics=metrics, tracer=tracer,
                                max_history=max_history,
                                _jits=_jits)
@@ -85,18 +87,22 @@ class LLM:
 
     def add_request(self, prompt: Prompt,
                     params: Optional[SamplingParams] = None, *,
-                    arrival: Optional[int] = None) -> int:
-        """Submit one prompt; returns its request id (valid for ``abort``)."""
+                    arrival: Optional[int] = None,
+                    tenant: str = "default") -> int:
+        """Submit one prompt; returns its request id (valid for ``abort``).
+        ``tenant`` keys deficit-round-robin admission fairness."""
         rid = self._next_rid
         self._next_rid += 1
-        self.core.add_request(rid, prompt, params, arrival=arrival)
+        self.core.add_request(rid, prompt, params, arrival=arrival,
+                              tenant=tenant)
         return rid
 
     def abort(self, rid: int) -> bool:
         return self.core.abort(rid)
 
     def _submit(self, prompts: Sequence[Prompt], params: ParamsLike,
-                arrivals: Optional[Sequence[int]]) -> List[int]:
+                arrivals: Optional[Sequence[int]],
+                tenants: Optional[Sequence[str]] = None) -> List[int]:
         if params is None or isinstance(params, SamplingParams):
             params = [params] * len(prompts)
         if len(params) != len(prompts):
@@ -104,8 +110,10 @@ class LLM:
                              "SamplingParams")
         if arrivals is None:
             arrivals = [None] * len(prompts)
-        return [self.add_request(p, sp, arrival=a)
-                for p, sp, a in zip(prompts, params, arrivals)]
+        if tenants is None:
+            tenants = ["default"] * len(prompts)
+        return [self.add_request(p, sp, arrival=a, tenant=t)
+                for p, sp, a, t in zip(prompts, params, arrivals, tenants)]
 
     def _pump(self, rids: Sequence[int],
               max_steps: Optional[int]) -> Iterator[RequestOutput]:
@@ -127,24 +135,28 @@ class LLM:
     # --------------------------------------------------------- frontend ---
     def generate(self, prompts: Sequence[Prompt], params: ParamsLike = None,
                  *, arrivals: Optional[Sequence[int]] = None,
+                 tenants: Optional[Sequence[str]] = None,
                  max_steps: Optional[int] = None) -> List[Optional[RequestOutput]]:
         """Blocking generation: one final output per prompt, in order.
 
         ``arrivals`` (decode-step timestamps) replays an async trace
-        through the live API; ``None`` entries arrive immediately.  An
-        entry in the result is ``None`` only if ``max_steps`` cut the run
-        before that request finished.
+        through the live API; ``None`` entries arrive immediately.
+        ``tenants`` keys per-prompt DRR fairness (default one shared
+        tenant == FCFS).  An entry in the result is ``None`` only if
+        ``max_steps`` cut the run before that request finished.
         """
-        rids = self._submit(prompts, params, arrivals)
+        rids = self._submit(prompts, params, arrivals, tenants)
         final = {o.rid: o for o in self._pump(rids, max_steps) if o.finished}
         return [final.get(r) for r in rids]
 
     def stream(self, prompts: Sequence[Prompt], params: ParamsLike = None,
                *, arrivals: Optional[Sequence[int]] = None,
+               tenants: Optional[Sequence[str]] = None,
                max_steps: Optional[int] = None) -> Iterator[RequestOutput]:
         """Incremental generation: yields outputs as the engine emits them.
 
         Call ``abort(rid)`` between yields to cancel a request; its
         terminal output arrives through the same iterator.
         """
-        return self._pump(self._submit(prompts, params, arrivals), max_steps)
+        return self._pump(self._submit(prompts, params, arrivals, tenants),
+                          max_steps)

@@ -16,12 +16,17 @@ than picking a different code path.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 FINISH_STOP = "stop"      # hit a stop token (eos_id or stop_token_ids)
 FINISH_LENGTH = "length"  # hit max_tokens or the cache-width bound
 FINISH_ABORT = "abort"    # caller aborted the request mid-flight
 FINISH_REJECT = "reject"  # never admitted: invalid or un-servable request
+
+# most alternatives `logprobs` may request per position (OpenAI caps the
+# completions API at 5 too); the in-jit top-k is computed at this static
+# width so requested k stays runtime data, never a new trace
+MAX_LOGPROBS = 5
 
 
 class InvalidRequestError(ValueError):
@@ -47,6 +52,15 @@ class SamplingParams:
                  ``(seed, token_position)`` only, so a request's tokens do
                  not depend on batch composition or admission timing.
                  ``None`` => derived from the request id.
+    logprobs     ``None`` (default) = off.  An int ``0..MAX_LOGPROBS``
+                 returns, per generated token, the log-probability of the
+                 chosen token plus the ``logprobs`` highest-probability
+                 alternatives.  Logprobs are taken over the *raw* model
+                 distribution (log-softmax of the unscaled, unfiltered
+                 logits), so they are deterministic and independent of
+                 temperature/top-k/top-p — and of batch composition.
+                 Computed inside the single jitted decode step (a runtime
+                 ``lax.cond`` skip when no active request wants them).
     """
     temperature: float = 0.0
     top_k: int = 0
@@ -54,6 +68,7 @@ class SamplingParams:
     max_tokens: int = 16
     stop_token_ids: Tuple[int, ...] = ()
     seed: Optional[int] = None
+    logprobs: Optional[int] = None
 
     def __post_init__(self):
         object.__setattr__(self, "stop_token_ids",
@@ -71,6 +86,12 @@ class SamplingParams:
         if self.max_tokens < 1:
             raise InvalidRequestError(
                 f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.logprobs is not None and not (
+                isinstance(self.logprobs, int)
+                and 0 <= self.logprobs <= MAX_LOGPROBS):
+            raise InvalidRequestError(
+                f"logprobs must be an int in [0, {MAX_LOGPROBS}] or None, "
+                f"got {self.logprobs!r}")
 
     @property
     def is_greedy(self) -> bool:
@@ -85,6 +106,13 @@ class RequestOutput:
     request (empty for pure state transitions such as abort/reject);
     ``token_ids`` is the cumulative stream.  ``finish_reason`` is ``None``
     while the request is still running.
+
+    When the request asked for ``SamplingParams(logprobs=k)`` the logprob
+    fields mirror the token fields (``None`` otherwise): ``new_logprobs``
+    aligns 1:1 with ``new_token_ids``, ``logprobs`` with ``token_ids``,
+    and ``new_top_logprobs`` carries, per new token, a ``{token_id:
+    logprob}`` dict of the ``k`` highest-probability alternatives (empty
+    dicts when ``k == 0``).
     """
     rid: int
     new_token_ids: List[int] = field(default_factory=list)
@@ -92,3 +120,6 @@ class RequestOutput:
     finished: bool = False
     finish_reason: Optional[str] = None
     reason: Optional[str] = None     # human-readable detail (reject/abort)
+    new_logprobs: Optional[List[float]] = None
+    logprobs: Optional[List[float]] = None
+    new_top_logprobs: Optional[List[Dict[int, float]]] = None

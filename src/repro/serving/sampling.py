@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.serving.params import MAX_LOGPROBS
+
 _NEG = -1e30    # mask value for filtered logits
 
 
@@ -86,3 +88,40 @@ def sample(logits, *, temp, top_k, top_p, seed, pos):
     sampled = jax.lax.cond(jnp.any(is_sampled), _sampled,
                            lambda _: greedy_tok, None)
     return jnp.where(is_sampled, sampled, greedy_tok).astype(jnp.int32)
+
+
+def sample_lp(logits, *, temp, top_k, top_p, seed, pos, want_lp):
+    """``sample`` plus per-row logprobs: returns ``(tokens, lp)`` where
+    ``lp`` is ``{"chosen": (B,) f32, "top_vals": (B, K) f32,
+    "top_ids": (B, K) i32}`` with ``K = MAX_LOGPROBS``.
+
+    Logprobs are over the *raw* model distribution — ``log_softmax`` of
+    the unscaled, unfiltered logits — so they are deterministic in the
+    model state alone, independent of the sampling knobs and of batch
+    composition.  ``want_lp`` is a (B,) bool array; when no row wants
+    logprobs a ``lax.cond`` skips the whole computation at runtime (both
+    branches live in the one compiled executable: no second trace, zero
+    cost for the logprobs-off common case).  Token draws are bit-identical
+    to ``sample`` — the logprob outputs ride alongside, they never touch
+    the PRNG or the filtering path.
+    """
+    toks = sample(logits, temp=temp, top_k=top_k, top_p=top_p,
+                  seed=seed, pos=pos)
+    B, V = logits.shape
+    K = min(MAX_LOGPROBS, V)
+
+    def _compute(_):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        chosen = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
+        top_vals, top_ids = jax.lax.top_k(logp, K)
+        return chosen, top_vals, top_ids.astype(jnp.int32)
+
+    def _skip(_):
+        return (jnp.zeros((B,), jnp.float32),
+                jnp.zeros((B, K), jnp.float32),
+                jnp.zeros((B, K), jnp.int32))
+
+    chosen, top_vals, top_ids = jax.lax.cond(jnp.any(want_lp),
+                                             _compute, _skip, None)
+    return toks, {"chosen": chosen, "top_vals": top_vals,
+                  "top_ids": top_ids}

@@ -1,11 +1,23 @@
 """Request-level scheduler for continuous batching.
 
-Pure-Python bookkeeping (no jax): FCFS admission of waiting requests into
-free slots, per-request generation state, and finished-sequence eviction so
+Pure-Python bookkeeping (no jax): admission of waiting requests into free
+slots, per-request generation state, and finished-sequence eviction so
 freed slots backfill from the queue.  Time is measured in engine decode
 steps — ``Request.arrival`` says at which decode step the request becomes
 visible, which makes async-arrival simulations (Poisson traces, bursts)
 exactly reproducible.
+
+Admission order is **per-tenant deficit round-robin** (DRR).  Every
+request carries a ``tenant`` key (``"default"`` when unset); the waiting
+queue is FIFO *within* a tenant, and a deficit counter per tenant decides
+whose head request admits next.  Each time the rotor visits a tenant it
+earns ``quantum * weight`` credit; serving one request costs 1.0.  The
+scheme is starvation-free (every full rotor cycle grants every
+tenant-with-work positive credit, so any head request is served within
+``ceil(1 / (quantum * weight))`` cycles no matter how hard rivals flood)
+and degrades *exactly* to the historical strict-FCFS order when only one
+tenant exists — the rotor then has a single stop and every visit earns
+enough credit to serve the head immediately.
 
 Request validation raises :class:`InvalidRequestError` (a typed error, not
 a bare assert) so the engine can surface bad requests as
@@ -15,12 +27,14 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.serving.params import (FINISH_LENGTH, FINISH_STOP,
                                   InvalidRequestError, SamplingParams)
+
+DEFAULT_TENANT = "default"
 
 
 @dataclass
@@ -33,6 +47,7 @@ class Request:
     eos_id: Optional[int] = None
     stop_token_ids: Tuple[int, ...] = ()
     sampling: Optional[SamplingParams] = None
+    tenant: str = DEFAULT_TENANT     # fairness key for DRR admission
 
     def __post_init__(self):
         try:
@@ -46,6 +61,9 @@ class Request:
         if self.max_new_tokens < 1:
             raise InvalidRequestError(
                 f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if not isinstance(self.tenant, str) or not self.tenant:
+            raise InvalidRequestError(
+                f"tenant must be a non-empty string, got {self.tenant!r}")
         self.stop_token_ids = tuple(int(t) for t in self.stop_token_ids)
         if self.sampling is not None:
             self.sampling.validate()
@@ -78,37 +96,165 @@ class SlotRun:
     phase: str = PHASE_DECODE
     prefilled: int = 0               # prompt tokens already in the cache
     first_token_step: Optional[int] = None   # None until sampled (TTFT)
+    # appended in lockstep with `generated` when the request asked for
+    # logprobs (empty otherwise); discarded with the run on preemption and
+    # re-derived deterministically on recompute, like the tokens
+    logprobs: List[float] = field(default_factory=list)
+    top_logprobs: List[Dict[int, float]] = field(default_factory=list)
 
     @property
     def done(self) -> bool:
         return self.finished_step is not None
 
 
-class Scheduler:
-    """Admission + eviction over ``max_batch`` slots and a FCFS queue."""
+_DRR_COST = 1.0     # credit one admission costs (requests, not tokens)
 
-    def __init__(self, max_batch: int, max_length: int):
+
+class _Selection(NamedTuple):
+    """Result of one DRR scan: the chosen request plus the rotor/deficit
+    state the scan would commit.  ``peek`` discards it; ``pop`` applies it —
+    so repeated peeks while an admission is blocked never inflate credit."""
+    request: Request
+    rotor_pos: int
+    deficits: Dict[str, float]
+
+
+class Scheduler:
+    """Admission + eviction over ``max_batch`` slots and a per-tenant
+    deficit-round-robin waiting queue (single tenant == strict FCFS).
+
+    ``tenant_weights`` maps tenant name -> relative weight (default 1.0 for
+    unlisted tenants); under saturation tenants admit requests proportionally
+    to their weights.  ``quantum`` scales the credit earned per rotor visit —
+    with the request-count cost model it is the number of back-to-back
+    admissions a weight-1.0 tenant gets per turn (1.0 keeps interleavings
+    maximally fine-grained)."""
+
+    def __init__(self, max_batch: int, max_length: int, *,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 quantum: float = 1.0):
         self.max_batch = int(max_batch)
         self.max_length = int(max_length)     # hard cache-width bound
         self.waiting: List[Request] = []
         self.running: Dict[int, SlotRun] = {}  # slot -> SlotRun
         self.finished: List[SlotRun] = []
+        self.tenant_weights: Dict[str, float] = dict(tenant_weights or {})
+        for t, w in self.tenant_weights.items():
+            if not (float(w) > 0.0):           # also rejects NaN
+                raise ValueError(
+                    f"tenant weight must be > 0, got {t!r}: {w}")
+        if not (float(quantum) > 0.0):
+            raise ValueError(f"quantum must be > 0, got {quantum}")
+        self.quantum = float(quantum)
+        # DRR state: rotor of tenants in first-seen order, the position
+        # whose turn is in progress, whether that turn already earned its
+        # quantum, and per-tenant deficit credit
+        self._rotor: List[str] = []
+        self._rotor_pos: int = 0
+        self._turn_open: bool = False
+        self._deficit: Dict[str, float] = {}
 
     # -------------------------------------------------------- admission ---
     def submit(self, requests: Sequence[Request]) -> None:
         self.waiting.extend(requests)
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
 
-    def peek_arrived(self, step: int) -> Optional[Request]:
-        """Head-of-queue request if it has arrived by ``step`` (not popped).
-        Admission is strictly FCFS: when the head does not fit (no slot / not
-        enough KV pages), later arrivals must not jump it."""
-        if self.waiting and self.waiting[0].arrival <= step:
-            return self.waiting[0]
-        return None
+    def weight(self, tenant: str) -> float:
+        return self.tenant_weights.get(tenant, 1.0)
 
-    def pop_head(self) -> Request:
-        return self.waiting.pop(0)
+    def _arrived_heads(self, step: Optional[int]) -> Dict[str, Request]:
+        """Per-tenant head request among those arrived by ``step`` (the
+        waiting list is (arrival, rid)-sorted, so the first hit per tenant
+        is its FIFO head).  ``step=None`` ignores arrival gating."""
+        heads: Dict[str, Request] = {}
+        for r in self.waiting:
+            if step is not None and r.arrival > step:
+                break                          # waiting is arrival-sorted
+            if r.tenant not in heads:
+                heads[r.tenant] = r
+        return heads
+
+    def _select(self, step: Optional[int]) -> Optional[_Selection]:
+        """One DRR scan (pure: commits nothing).  Walk the rotor from the
+        in-progress turn; each newly visited tenant earns
+        ``quantum * weight`` credit, an empty-queue tenant forfeits its
+        credit (classic DRR — idle tenants cannot bank a burst), and the
+        first head with credit >= cost wins."""
+        heads = self._arrived_heads(step)
+        if not heads:
+            return None
+        # rotor admits tenants in deterministic first-head-arrival order
+        known = set(self._rotor)
+        for t in sorted(heads, key=lambda t: (heads[t].arrival,
+                                              heads[t].rid)):
+            if t not in known:
+                self._rotor.append(t)
+                known.add(t)
+        rotor = self._rotor
+        pos, turn_open = self._rotor_pos, self._turn_open
+        deficits: Dict[str, float] = {}
+
+        def d(t: str) -> float:
+            return deficits.get(t, self._deficit.get(t, 0.0))
+
+        # bound: each full cycle grants every head tenant quantum*weight,
+        # so some head reaches the cost within ceil(cost / min-grant) cycles
+        min_grant = self.quantum * min(self.weight(t) for t in heads)
+        max_iters = (len(rotor) + 1) * (2 + int(np.ceil(_DRR_COST
+                                                        / min_grant)))
+        for _ in range(max_iters):
+            t = rotor[pos]
+            if not turn_open:
+                deficits[t] = d(t) + self.quantum * self.weight(t)
+                turn_open = True
+            if t in heads and d(t) >= _DRR_COST:
+                deficits[t] = d(t) - _DRR_COST
+                return _Selection(heads[t], pos, deficits)
+            # turn over: no arrived work (forfeit credit) or not enough yet
+            if t not in heads:
+                deficits[t] = 0.0
+            pos = (pos + 1) % len(rotor)
+            turn_open = False
+        raise AssertionError("DRR scan failed to converge")   # unreachable
+
+    def peek_arrived(self, step: int) -> Optional[Request]:
+        """The request DRR would admit next among those arrived by ``step``
+        (not popped).  Within a tenant this is its FIFO head: when it does
+        not fit (no slot / not enough KV pages), that tenant's later
+        arrivals must not jump it.  Peeking commits no DRR state."""
+        sel = self._select(step)
+        return sel.request if sel is not None else None
+
+    def pop_head(self, step: Optional[int] = None) -> Request:
+        """Pop (and commit) the DRR choice among requests arrived by
+        ``step`` (``None`` = ignore arrivals, used by drain paths).  The
+        engine calls this only after an identical ``peek_arrived`` said
+        the request fits, so both scans choose the same request."""
+        sel = self._select(step)
+        assert sel is not None, "pop_head on an empty/not-arrived queue"
+        self._rotor_pos = sel.rotor_pos
+        self._turn_open = True
+        self._deficit.update(sel.deficits)
+        self.waiting.remove(sel.request)
+        self._compact_rotor()
+        return sel.request
+
+    def _compact_rotor(self) -> None:
+        """Bound rotor growth for long-lived servers with per-user tenants:
+        drop tenants with no waiting work and no banked credit (they rejoin
+        at first-seen position on their next submit, which is exactly the
+        treatment a brand-new tenant gets)."""
+        if len(self._rotor) <= 64:
+            return
+        live = {r.tenant for r in self.waiting}
+        cur = self._rotor[self._rotor_pos]
+        keep = [t for t in self._rotor
+                if t == cur or t in live or self._deficit.get(t, 0.0) > 0.0]
+        self._rotor = keep
+        self._rotor_pos = keep.index(cur)
+        for t in list(self._deficit):
+            if t not in keep:
+                del self._deficit[t]
 
     def remove_waiting(self, rid: int) -> Optional[Request]:
         """Drop ``rid`` from the waiting queue (abort before admission)."""

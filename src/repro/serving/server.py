@@ -1,0 +1,937 @@
+"""Async OpenAI-compatible HTTP front end over :class:`EngineCore`.
+
+Dependency-free: stdlib ``asyncio`` streams speak HTTP/1.1 directly — no
+FastAPI/uvicorn/aiohttp.  One event loop owns the engine; the blocking
+``EngineCore.step()`` runs in a dedicated single-thread executor (never
+the default pool, which blocking clients may saturate) so handler
+coroutines (new submissions, aborts, scrapes) stay responsive mid-step.
+
+Layers, each testable without the one below:
+
+``AsyncEngine``
+    asyncio <-> EngineCore bridge.  Handlers submit through a command
+    queue; a single ``run()`` task applies commands between steps and
+    routes every ``RequestOutput`` to its per-request ``asyncio.Queue``.
+    When the engine drains, the task parks on the command queue — an idle
+    server burns zero CPU.  Terminal outputs trigger ``core.forget(rid)``
+    so a long-lived server retains no per-request state.
+
+``HTTPServer.respond(req, disconnected)``
+    socket-free request dispatch: takes an :class:`HTTPRequest`, returns
+    an :class:`HTTPResponse` or :class:`SSEResponse` (an async generator
+    of pre-framed ``data:`` events).  Tests drive the full HTTP semantics
+    — SSE framing, typed 400s, disconnect-triggered aborts — through this
+    method with no sockets involved.
+
+``HTTPServer.handle_connection``
+    the thin socket shim: parse bytes -> ``respond`` -> write bytes.  A
+    monitor task reads the (otherwise idle) connection; client EOF sets a
+    ``disconnected`` event that unwinds the handler, aborts the request
+    engine-side, and reclaims its KV pages immediately.
+
+Routes
+------
+``POST /v1/completions``   OpenAI completions shape over token ids:
+    ``{"prompt": [ids], "max_tokens", "temperature", "top_p", "top_k",
+    "seed", "stop": [ids], "logprobs": k, "stream": bool, "user": tenant,
+    "model"}``.  Non-stream returns one ``text_completion`` object;
+    ``stream=true`` returns ``text/event-stream`` chunks then
+    ``data: [DONE]``.  Malformed bodies and invalid params come back as
+    OpenAI-shaped ``{"error": {...}}`` 400s (engine-level rejects too).
+    ``user`` keys the scheduler's deficit-round-robin fairness.
+``GET /metrics``           Prometheus text exposition of the live
+    engine registry plus the server's own ``http_*`` families.
+``GET /health``            liveness + live queue/KV headroom JSON.
+
+Run ``python -m repro.serving.server`` to serve, or ``--smoke`` for the
+self-contained live-server gate CI runs (boots a real server on a real
+socket, exercises blocking + streaming + mid-stream disconnect, then
+asserts tokens match the offline ``LLM`` frontend byte-for-byte and the
+engine is quiescent with ``decode_jit_traces() == 1``).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import concurrent.futures
+import itertools
+import json
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import AsyncIterator, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.serving.engine import EngineCore, make_serving_jits
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.params import (FINISH_REJECT, InvalidRequestError,
+                                  MAX_LOGPROBS, RequestOutput, SamplingParams)
+from repro.serving.scheduler import DEFAULT_TENANT
+
+SERVER_NAME = "repro-serving"
+_MAX_BODY_BYTES = 8 * 1024 * 1024
+_MAX_HEADER_LINES = 100
+
+# ------------------------------------------------------------------------
+# AsyncEngine: asyncio <-> EngineCore bridge
+# ------------------------------------------------------------------------
+
+
+class AsyncEngine:
+    """Drive one ``EngineCore`` from an asyncio event loop.
+
+    All methods must be called on the owning loop.  ``submit`` registers a
+    per-request output queue *before* enqueueing the add command, so no
+    output (not even an immediate reject) can be produced un-routable.
+    ``release`` unsubscribes a client that went away: the request is
+    aborted engine-side (slot + KV pages freed now) and any in-flight
+    outputs are dropped on the floor.
+    """
+
+    def __init__(self, core: EngineCore):
+        self.core = core
+        self._cmds: asyncio.Queue = asyncio.Queue()
+        self._subs: Dict[int, asyncio.Queue] = {}
+        self._rids = itertools.count()
+        self._task: Optional[asyncio.Task] = None
+        self._stopping = False
+        self.in_flight = 0      # submitted, terminal output not yet routed
+        # a dedicated single thread for the blocking step(): sharing the
+        # default executor with other users (e.g. blocking test clients)
+        # can starve the engine of a thread and deadlock the server
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="engine-step")
+
+    # ------------------------------------------------------- frontend ---
+    def submit(self, prompt: Sequence[int], params: SamplingParams,
+               tenant: str = DEFAULT_TENANT) -> Tuple[int, asyncio.Queue]:
+        """Queue one request; returns ``(rid, outputs)`` where ``outputs``
+        yields every ``RequestOutput`` for the request, terminal last."""
+        rid = next(self._rids)
+        q: asyncio.Queue = asyncio.Queue()
+        self._subs[rid] = q
+        self.in_flight += 1
+        self._cmds.put_nowait(("add", rid, list(prompt), params, tenant))
+        return rid, q
+
+    def release(self, rid: int) -> bool:
+        """Unsubscribe ``rid`` (client disconnected): abort it engine-side
+        and stop routing its outputs.  Idempotent; True on first call."""
+        if self._subs.pop(rid, None) is None:
+            return False
+        self.in_flight -= 1
+        self._cmds.put_nowait(("abort", rid))
+        return True
+
+    def start(self) -> asyncio.Task:
+        self._task = asyncio.get_running_loop().create_task(
+            self.run(), name="async-engine")
+        return self._task
+
+    async def stop(self) -> None:
+        """Drain remaining work, then stop the run task."""
+        self._stopping = True
+        self._cmds.put_nowait(("noop",))
+        if self._task is not None:
+            await self._task
+        self._executor.shutdown(wait=False)
+
+    # ------------------------------------------------------- run loop ---
+    def _apply(self, cmd: tuple) -> None:
+        if cmd[0] == "add":
+            _, rid, prompt, params, tenant = cmd
+            self.core.add_request(rid, prompt, params, tenant=tenant)
+        elif cmd[0] == "abort":
+            self.core.abort(cmd[1])
+
+    def _route(self, outs: List[RequestOutput]) -> None:
+        for out in outs:
+            q = self._subs.get(out.rid)
+            if out.finished:
+                # forget keeps the long-lived server leak-free: token
+                # history, report entries and trace spans go now
+                self.core.forget(out.rid)
+                if q is not None:
+                    del self._subs[out.rid]
+                    self.in_flight -= 1
+            if q is not None:
+                q.put_nowait(out)
+
+    async def run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            if self.core.done and self._cmds.empty():
+                if self._stopping:
+                    return
+                self._apply(await self._cmds.get())    # idle: park here
+            while not self._cmds.empty():
+                self._apply(self._cmds.get_nowait())
+            if self.core.done:
+                if self._stopping:
+                    return
+                continue
+            # the blocking jitted step runs off-loop; handlers keep serving
+            self._route(await loop.run_in_executor(self._executor,
+                                                   self.core.step))
+
+
+# ------------------------------------------------------------------------
+# HTTP plumbing (socket-free where it matters)
+# ------------------------------------------------------------------------
+
+
+@dataclass
+class HTTPRequest:
+    method: str
+    path: str
+    headers: Dict[str, str] = field(default_factory=dict)
+    body: bytes = b""
+
+
+@dataclass
+class HTTPResponse:
+    status: int
+    body: bytes
+    content_type: str = "application/json"
+
+
+class SSEResponse:
+    """A streaming response: ``events`` yields pre-framed SSE byte chunks
+    (``b"data: ...\\n\\n"``), ending with ``data: [DONE]`` on success."""
+
+    def __init__(self, events: AsyncIterator[bytes]):
+        self.events = events
+
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 500: "Internal Server Error"}
+_ERROR_TYPES = {400: "invalid_request_error", 404: "not_found_error",
+                405: "method_not_allowed", 500: "internal_error"}
+
+
+def json_response(status: int, obj: object) -> HTTPResponse:
+    return HTTPResponse(status, json.dumps(obj).encode("utf-8"))
+
+
+def error_response(status: int, message: str) -> HTTPResponse:
+    """OpenAI-shaped error body."""
+    return json_response(status, {"error": {
+        "message": message, "type": _ERROR_TYPES.get(status, "error"),
+        "code": status}})
+
+
+async def read_http_request(reader) -> Optional[HTTPRequest]:
+    """Parse one HTTP/1.1 request off an asyncio stream.  ``None`` on a
+    clean EOF before any bytes; :class:`InvalidRequestError` on garbage."""
+    line = await reader.readline()
+    if not line:
+        return None
+    parts = line.decode("latin-1").strip().split()
+    if len(parts) != 3 or not parts[2].startswith("HTTP/"):
+        raise InvalidRequestError("malformed HTTP request line")
+    method, target, _ = parts
+    headers: Dict[str, str] = {}
+    for _ in range(_MAX_HEADER_LINES):
+        raw = await reader.readline()
+        if raw in (b"\r\n", b"\n", b""):
+            break
+        name, sep, value = raw.decode("latin-1").partition(":")
+        if not sep:
+            raise InvalidRequestError(f"malformed header line {raw!r}")
+        headers[name.strip().lower()] = value.strip()
+    else:
+        raise InvalidRequestError("too many header lines")
+    try:
+        length = int(headers.get("content-length", "0") or "0")
+    except ValueError:
+        raise InvalidRequestError("bad Content-Length")
+    if not 0 <= length <= _MAX_BODY_BYTES:
+        raise InvalidRequestError(f"Content-Length {length} out of range")
+    body = await reader.readexactly(length) if length else b""
+    return HTTPRequest(method=method, path=target.split("?", 1)[0],
+                       headers=headers, body=body)
+
+
+# ------------------------------------------------------------------------
+# OpenAI completions request/response shapes
+# ------------------------------------------------------------------------
+
+_COMPLETION_FIELDS = {"model", "prompt", "max_tokens", "temperature",
+                      "top_p", "top_k", "seed", "stop", "logprobs",
+                      "stream", "user"}
+
+
+def _int_or_none(obj: dict, key: str) -> Optional[int]:
+    v = obj.get(key)
+    if v is None:
+        return None
+    if not isinstance(v, int) or isinstance(v, bool):
+        raise InvalidRequestError(f"{key} must be an integer, got {v!r}")
+    return v
+
+
+def parse_completion_request(body: bytes):
+    """Validate a ``/v1/completions`` body.
+
+    Returns ``(prompt, SamplingParams, tenant, stream, model)``.  Raises
+    :class:`InvalidRequestError` (-> typed 400) on anything malformed —
+    the engine's own validation still backstops it, but catching here
+    keeps bad requests from ever entering the scheduler.
+    """
+    try:
+        obj = json.loads(body.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise InvalidRequestError(f"request body is not valid JSON: {e}")
+    if not isinstance(obj, dict):
+        raise InvalidRequestError("request body must be a JSON object")
+    unknown = sorted(set(obj) - _COMPLETION_FIELDS)
+    if unknown:
+        raise InvalidRequestError(f"unknown fields: {unknown}")
+    prompt = obj.get("prompt")
+    if (not isinstance(prompt, list) or not prompt
+            or not all(isinstance(t, int) and not isinstance(t, bool)
+                       for t in prompt)):
+        raise InvalidRequestError(
+            "prompt must be a non-empty JSON array of token ids (ints); "
+            "this server is tokenizer-free")
+    stop = obj.get("stop", [])
+    if (not isinstance(stop, list)
+            or not all(isinstance(t, int) and not isinstance(t, bool)
+                       for t in stop)):
+        raise InvalidRequestError("stop must be an array of token ids")
+    for key, typ in (("temperature", (int, float)), ("top_p", (int, float)),
+                     ("stream", bool), ("model", str), ("user", str)):
+        if key in obj and not isinstance(obj[key], typ):
+            raise InvalidRequestError(
+                f"{key} must be {typ[0].__name__ if isinstance(typ, tuple) else typ.__name__}, "
+                f"got {obj[key]!r}")
+    params = SamplingParams(
+        temperature=float(obj.get("temperature", 0.0)),
+        top_k=_int_or_none(obj, "top_k") or 0,
+        top_p=float(obj.get("top_p", 1.0)),
+        max_tokens=(_int_or_none(obj, "max_tokens")
+                    if obj.get("max_tokens") is not None else 16),
+        stop_token_ids=tuple(stop),
+        seed=_int_or_none(obj, "seed"),
+        logprobs=_int_or_none(obj, "logprobs"))
+    params.validate()                       # raises InvalidRequestError
+    tenant = obj.get("user", DEFAULT_TENANT)
+    if not tenant:
+        raise InvalidRequestError("user (tenant key) must be non-empty")
+    return (prompt, params, tenant, bool(obj.get("stream", False)),
+            obj.get("model", SERVER_NAME))
+
+
+def _text(token_ids: Sequence[int]) -> str:
+    # tokenizer-free "text": space-joined ids, so off-the-shelf OpenAI
+    # clients that only look at .text still see the stream move
+    return " ".join(str(t) for t in token_ids)
+
+
+def _logprobs_block(token_ids, lps, tops) -> dict:
+    return {"tokens": [str(t) for t in token_ids],
+            "token_logprobs": list(lps or []),
+            "top_logprobs": [{str(k): v for k, v in d.items()}
+                             for d in (tops or [])]}
+
+
+# ------------------------------------------------------------------------
+# The server
+# ------------------------------------------------------------------------
+
+
+class HTTPServer:
+    """Routes + per-route handlers over one :class:`AsyncEngine`.
+
+    ``respond`` is the socket-free core; ``handle_connection`` adapts it
+    to asyncio streams.  ``http_*`` metric families land in the engine's
+    registry when it has one (so one ``/metrics`` scrape covers both), or
+    a private registry otherwise.
+    """
+
+    ROUTES = ("/v1/completions", "/metrics", "/health")
+
+    def __init__(self, engine: AsyncEngine, *, model_name: str = SERVER_NAME,
+                 registry: Optional[MetricsRegistry] = None):
+        self.engine = engine
+        self.model_name = model_name
+        reg = registry or engine.core.metrics or MetricsRegistry()
+        self.registry = reg
+        self._requests = reg.counter(
+            "http_requests_total", "HTTP requests by route and status",
+            ("method", "path", "code"))
+        self._latency = reg.histogram(
+            "http_request_latency_seconds",
+            "wall time to the full (non-stream) response or stream setup",
+            ("path",))
+        self._disconnects = reg.counter(
+            "http_disconnects_total",
+            "client disconnects that aborted an in-flight request",
+            ("path",))
+        self._streams = reg.gauge("http_streams_active",
+                                  "SSE streams currently open")
+        self._sockets: set = set()
+        self._server: Optional[asyncio.base_events.Server] = None
+
+    # ------------------------------------------------------- dispatch ---
+    async def respond(self, req: HTTPRequest,
+                      disconnected: Optional[asyncio.Event] = None,
+                      ) -> Optional[Union[HTTPResponse, SSEResponse]]:
+        """Dispatch one request.  Returns ``None`` when the client
+        disconnected before the response was ready (request aborted;
+        nothing to write)."""
+        t0 = time.perf_counter()
+        path = req.path if req.path in self.ROUTES else "other"
+        try:
+            resp = await self._dispatch(req, disconnected)
+        except InvalidRequestError as e:
+            resp = error_response(400, str(e))
+        except Exception as e:                      # never kill the loop
+            resp = error_response(500, f"{type(e).__name__}: {e}")
+        self._latency.labels(path=path).observe(time.perf_counter() - t0)
+        if resp is None:
+            self._disconnects.labels(path=path).inc()
+        else:
+            code = resp.status if isinstance(resp, HTTPResponse) else 200
+            self._requests.labels(method=req.method, path=path,
+                                  code=code).inc()
+        return resp
+
+    async def _dispatch(self, req, disconnected):
+        if req.path == "/health":
+            if req.method != "GET":
+                return error_response(405, "use GET")
+            return json_response(200, self.health())
+        if req.path == "/metrics":
+            if req.method != "GET":
+                return error_response(405, "use GET")
+            return HTTPResponse(200,
+                                self.registry.to_prometheus_text().encode(),
+                                content_type="text/plain; version=0.0.4")
+        if req.path == "/v1/completions":
+            if req.method != "POST":
+                return error_response(405, "use POST")
+            return await self._completions(req, disconnected)
+        return error_response(404, f"no route for {req.path}")
+
+    def health(self) -> dict:
+        core = self.engine.core
+        pool = core.pool
+        kv = {"slots_free": int(pool.num_free), "slots": core.max_batch}
+        if core.paged:
+            kv.update(free_pages=int(pool.free_pages),
+                      pages_in_use=int(pool.pages_in_use),
+                      num_pages=int(pool.num_pages), page_w=int(pool.page_w))
+        return {"status": "ok", "model": self.model_name,
+                "steps": int(core.clock),
+                "waiting": len(core.sched.waiting),
+                "running": len(core.sched.running),
+                "in_flight": self.engine.in_flight,
+                "decode_jit_traces": core.decode_jit_traces(),
+                "prefill_jit_traces": core.prefill_jit_traces(),
+                "quiescent": bool(core.is_quiescent()), "kv": kv}
+
+    # ---------------------------------------------------- completions ---
+    async def _next_output(self, rid: int, q: asyncio.Queue,
+                           disconnected: Optional[asyncio.Event],
+                           ) -> Optional[RequestOutput]:
+        """Await the next output for ``rid``, racing client disconnect.
+        On disconnect: abort + unsubscribe, return ``None``."""
+        if disconnected is None:
+            return await q.get()
+        get = asyncio.ensure_future(q.get())
+        gone = asyncio.ensure_future(disconnected.wait())
+        await asyncio.wait({get, gone},
+                           return_when=asyncio.FIRST_COMPLETED)
+        gone.cancel()
+        if get.done():
+            return get.result()
+        get.cancel()
+        self.engine.release(rid)
+        return None
+
+    async def _completions(self, req, disconnected):
+        prompt, params, tenant, stream, model = parse_completion_request(
+            req.body)
+        rid, q = self.engine.submit(prompt, params, tenant)
+        created = int(time.time())
+        cid = f"cmpl-{rid}"
+        first = await self._next_output(rid, q, disconnected)
+        if first is None:
+            return None                       # client gone while queued
+        if first.finished and first.finish_reason == FINISH_REJECT:
+            return error_response(400, first.reason or "rejected")
+        if stream:
+            return SSEResponse(self._sse_events(
+                rid, q, first, cid, model, created, disconnected))
+        # blocking: pump to the terminal output, accumulating the
+        # top-alternatives deltas (the terminal output carries cumulative
+        # token ids and chosen-token logprobs already)
+        out, tops = first, list(first.new_top_logprobs or [])
+        while not out.finished:
+            out = await self._next_output(rid, q, disconnected)
+            if out is None:
+                return None
+            tops.extend(out.new_top_logprobs or [])
+        choice = {"index": 0, "text": _text(out.token_ids),
+                  "token_ids": list(out.token_ids),
+                  "finish_reason": out.finish_reason,
+                  "logprobs": (_logprobs_block(out.token_ids, out.logprobs,
+                                               tops)
+                               if params.logprobs is not None else None)}
+        return json_response(200, {
+            "id": cid, "object": "text_completion", "created": created,
+            "model": model, "choices": [choice],
+            "usage": {"prompt_tokens": len(prompt),
+                      "completion_tokens": len(out.token_ids),
+                      "total_tokens": len(prompt) + len(out.token_ids)}})
+
+    async def _sse_events(self, rid, q, first, cid, model, created,
+                          disconnected):
+        """SSE chunk generator.  Any early exit — client EOF observed via
+        ``disconnected``, a write error closing the generator
+        (``GeneratorExit``), server shutdown — lands in ``finally`` and
+        aborts the request so its slot and KV pages free immediately."""
+        finished = False
+        self._streams.inc()
+        try:
+            out: Optional[RequestOutput] = first
+            while out is not None:
+                choice = {"index": 0, "text": _text(out.new_token_ids),
+                          "token_ids": list(out.new_token_ids),
+                          "finish_reason": out.finish_reason}
+                if out.new_logprobs is not None:
+                    choice["logprobs"] = _logprobs_block(
+                        out.new_token_ids, out.new_logprobs,
+                        out.new_top_logprobs)
+                payload = {"id": cid, "object": "text_completion.chunk",
+                           "created": created, "model": model,
+                           "choices": [choice]}
+                yield b"data: " + json.dumps(payload).encode() + b"\n\n"
+                if out.finished:
+                    finished = True
+                    yield b"data: [DONE]\n\n"
+                    return
+                out = await self._next_output(rid, q, disconnected)
+        finally:
+            self._streams.inc(-1.0)
+            if not finished and self.engine.release(rid):
+                self._disconnects.labels(path="/v1/completions").inc()
+
+    # ------------------------------------------------------- sockets ----
+    async def handle_connection(self, reader, writer):
+        self._sockets.add(writer)
+        try:
+            try:
+                req = await read_http_request(reader)
+            except (InvalidRequestError, asyncio.IncompleteReadError) as e:
+                await _write_response(writer, error_response(400, str(e)))
+                return
+            if req is None:
+                return
+            disconnected = asyncio.Event()
+            monitor = asyncio.get_running_loop().create_task(
+                _watch_disconnect(reader, disconnected))
+            try:
+                resp = await self.respond(req, disconnected)
+                if resp is None:
+                    return
+                if isinstance(resp, SSEResponse):
+                    await _write_sse(writer, resp, disconnected)
+                else:
+                    await _write_response(writer, resp)
+            finally:
+                monitor.cancel()
+        except (ConnectionError, asyncio.CancelledError):
+            pass
+        finally:
+            self._sockets.discard(writer)
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def start(self, host: str = "127.0.0.1", port: int = 0) -> int:
+        """Start the engine task and the listening socket; returns the
+        bound port (useful with ``port=0``)."""
+        self.engine.start()
+        self._server = await asyncio.start_server(self.handle_connection,
+                                                  host, port)
+        return self._server.sockets[0].getsockname()[1]
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        for w in list(self._sockets):
+            w.close()
+        await self.engine.stop()
+
+
+async def _watch_disconnect(reader, event: asyncio.Event) -> None:
+    """Read the (request-complete, Connection: close) stream until EOF:
+    the client hanging up is the only thing left to observe."""
+    try:
+        while True:
+            chunk = await reader.read(1024)
+            if not chunk:
+                break
+    except (ConnectionError, OSError):
+        pass
+    event.set()
+
+
+async def _write_response(writer, resp: HTTPResponse) -> None:
+    head = (f"HTTP/1.1 {resp.status} {_REASONS.get(resp.status, '')}\r\n"
+            f"Content-Type: {resp.content_type}\r\n"
+            f"Content-Length: {len(resp.body)}\r\n"
+            "Connection: close\r\n\r\n")
+    writer.write(head.encode("latin-1") + resp.body)
+    await writer.drain()
+
+
+async def _write_sse(writer, resp: SSEResponse,
+                     disconnected: asyncio.Event) -> None:
+    writer.write(b"HTTP/1.1 200 OK\r\n"
+                 b"Content-Type: text/event-stream\r\n"
+                 b"Cache-Control: no-cache\r\n"
+                 b"Connection: close\r\n\r\n")
+    agen = resp.events
+    try:
+        async for chunk in agen:
+            if disconnected.is_set():
+                break
+            writer.write(chunk)
+            await writer.drain()
+    except (ConnectionError, OSError):
+        pass
+    finally:
+        await agen.aclose()     # GeneratorExit -> finally -> abort
+
+
+# ------------------------------------------------------------------------
+# Construction + CLI
+# ------------------------------------------------------------------------
+
+
+def build_server(*, model: str = "opt-125m", max_batch: int = 4,
+                 cache_width: int = 128, page_w: int = 8,
+                 prefill_chunk: Optional[int] = None,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 seed: int = 0, _built=None) -> HTTPServer:
+    """Build a server over a randomly initialized smoke-scale model.
+
+    ``_built`` optionally supplies ``(cfg, params, jits)`` so callers (the
+    smoke gate, tests) can share one set of compiled steps with an offline
+    ``LLM`` reference."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    if _built is not None:
+        cfg, params, jits = _built
+    else:
+        cfg = get_smoke_config(model).replace(dtype="float32",
+                                              param_dtype="float32")
+        params = init_params(jax.random.PRNGKey(seed), cfg,
+                             max_seq_len=cache_width + 8)
+        jits = make_serving_jits(cfg, None, telemetry=True)
+    reg = MetricsRegistry()
+    core = EngineCore(cfg, params, max_batch=max_batch,
+                      cache_width=cache_width, page_w=page_w or None,
+                      prefill_chunk=prefill_chunk,
+                      tenant_weights=tenant_weights, metrics=reg,
+                      _jits=jits)
+    return HTTPServer(AsyncEngine(core), model_name=model)
+
+
+def _parse_weights(items: List[str]) -> Optional[Dict[str, float]]:
+    if not items:
+        return None
+    out = {}
+    for item in items:
+        name, sep, w = item.partition("=")
+        if not sep:
+            raise SystemExit(f"--tenant-weight wants NAME=WEIGHT, got {item}")
+        out[name] = float(w)
+    return out
+
+
+async def _serve_forever(server: HTTPServer, host: str, port: int) -> None:
+    bound = await server.start(host, port)
+    print(f"{SERVER_NAME} listening on http://{host}:{bound}  "
+          "(POST /v1/completions, GET /metrics, GET /health)", flush=True)
+    try:
+        await asyncio.Event().wait()        # until KeyboardInterrupt
+    finally:
+        await server.stop()
+
+
+# ------------------------------------------------------------------------
+# --smoke: the live-server CI gate
+# ------------------------------------------------------------------------
+
+
+def _http_json(port: int, method: str, path: str, body: Optional[dict] = None,
+               timeout: float = 120.0) -> Tuple[int, dict]:
+    """Blocking stdlib client (runs in an executor thread)."""
+    import http.client
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    try:
+        payload = json.dumps(body).encode() if body is not None else None
+        conn.request(method, path, body=payload,
+                     headers={"Content-Type": "application/json"})
+        r = conn.getresponse()
+        raw = r.read()
+        try:
+            return r.status, json.loads(raw)
+        except json.JSONDecodeError:
+            return r.status, {"_raw": raw.decode("utf-8", "replace")}
+    finally:
+        conn.close()
+
+
+def _sse_request_bytes(body: dict) -> bytes:
+    payload = json.dumps(body).encode()
+    return (b"POST /v1/completions HTTP/1.1\r\n"
+            b"Host: 127.0.0.1\r\nContent-Type: application/json\r\n"
+            b"Content-Length: " + str(len(payload)).encode() +
+            b"\r\nConnection: close\r\n\r\n" + payload)
+
+
+def _sse_stream(port: int, body: dict, *, kill_after: Optional[int] = None,
+                timeout: float = 120.0) -> List[dict]:
+    """Raw-socket SSE client: returns decoded event payloads.  With
+    ``kill_after=N`` the socket is closed abruptly after N data events —
+    the mid-stream disconnect the smoke gate asserts on."""
+    import socket
+    events: List[dict] = []
+    with socket.create_connection(("127.0.0.1", port),
+                                  timeout=timeout) as sock:
+        sock.sendall(_sse_request_bytes(body))
+        buf = b""
+        while True:
+            try:
+                chunk = sock.recv(4096)
+            except socket.timeout:
+                raise AssertionError(f"SSE stream stalled; got {events}")
+            if not chunk:
+                return events
+            buf += chunk
+            while b"\n\n" in buf:
+                frame, buf = buf.split(b"\n\n", 1)
+                for line in frame.splitlines():
+                    if not line.startswith(b"data: "):
+                        continue
+                    data = line[len(b"data: "):]
+                    if data == b"[DONE]":
+                        return events
+                    events.append(json.loads(data))
+                    if kill_after is not None and len(events) >= kill_after:
+                        # abrupt close mid-stream: RST/EOF at the server
+                        sock.close()
+                        return events
+
+
+async def _poll_health(port: int, pred, *, timeout: float = 60.0,
+                       what: str = "condition") -> dict:
+    loop = asyncio.get_running_loop()
+    deadline = loop.time() + timeout
+    while True:
+        _, h = await loop.run_in_executor(None, _http_json, port, "GET",
+                                          "/health")
+        if pred(h):
+            return h
+        if loop.time() > deadline:
+            raise AssertionError(f"timed out waiting for {what}: {h}")
+        await asyncio.sleep(0.2)
+
+
+async def _run_smoke(args) -> int:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serving.llm import LLM
+
+    cache_width = 96
+    cfg = get_smoke_config(args.model).replace(dtype="float32",
+                                               param_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg,
+                         max_seq_len=cache_width + 8)
+    jits = make_serving_jits(cfg, None, telemetry=True)
+
+    # ---- offline reference: the byte-parity oracle.  Seeds are explicit
+    # because the default seed derives from the rid, and server rids
+    # differ from these offline ones.
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [8, 9], [10, 11, 12, 13, 14]]
+    sps = [SamplingParams(max_tokens=8, logprobs=3),
+           SamplingParams(max_tokens=8),
+           SamplingParams(max_tokens=8, temperature=0.8, top_k=20, seed=7),
+           SamplingParams(max_tokens=8, temperature=0.7, top_p=0.9, seed=11)]
+    ref = LLM(cfg, params, max_batch=args.max_batch, cache_width=cache_width,
+              page_w=args.page_w, _jits=jits)
+    expected = ref.generate(prompts, sps)
+    assert all(o is not None and o.finished for o in expected)
+
+    server = build_server(model=args.model, max_batch=args.max_batch,
+                          cache_width=cache_width, page_w=args.page_w,
+                          tenant_weights={"paid": 2.0},
+                          _built=(cfg, params, jits))
+    reg = server.registry
+    core = server.engine.core
+    port = await server.start("127.0.0.1", 0)
+    loop = asyncio.get_running_loop()
+    print(f"# smoke server on 127.0.0.1:{port}")
+    failures: List[str] = []
+
+    def check(cond, msg):
+        if cond:
+            print(f"ok   {msg}")
+        else:
+            failures.append(msg)
+            print(f"FAIL {msg}")
+
+    # ---- 1. concurrent blocking completions, mixed tenants/sampling,
+    # tokens byte-identical to the offline LLM frontend
+    bodies = []
+    for prompt, sp, tenant in zip(prompts, sps,
+                                  ["default", "paid", "default", "paid"]):
+        b = {"prompt": prompt, "max_tokens": sp.max_tokens, "user": tenant}
+        if sp.temperature:
+            b.update(temperature=sp.temperature, seed=sp.seed)
+        if sp.top_k:
+            b["top_k"] = sp.top_k
+        if sp.top_p != 1.0:
+            b["top_p"] = sp.top_p
+        if sp.logprobs is not None:
+            b["logprobs"] = sp.logprobs
+        bodies.append(b)
+    results = await asyncio.gather(*[
+        loop.run_in_executor(None, _http_json, port, "POST",
+                             "/v1/completions", b) for b in bodies])
+    for i, (status, resp) in enumerate(results):
+        check(status == 200, f"blocking[{i}] status 200 (got {status})")
+        if status != 200:
+            continue
+        got = resp["choices"][0]["token_ids"]
+        want = expected[i].token_ids
+        check(got == want, f"blocking[{i}] tokens == offline LLM.generate "
+                           f"({got} vs {want})")
+        check(resp["usage"]["completion_tokens"] == len(want),
+              f"blocking[{i}] usage.completion_tokens")
+    lp = results[0][1]["choices"][0].get("logprobs") or {}
+    tl, tops = lp.get("token_logprobs", []), lp.get("top_logprobs", [])
+    check(len(tl) == len(expected[0].token_ids) and len(tops) == len(tl),
+          "logprobs present and aligned with tokens")
+    check(all(len(d) == 3 for d in tops), "top_logprobs width == requested k")
+    check(all(abs(max(d.values()) - l) < 1e-5
+              for d, l in zip(tops, tl)),
+          "greedy chosen logprob == max alternative")
+
+    # ---- 2. malformed requests -> typed 400s
+    for bad in ({"prompt": "text"}, {"prompt": []},
+                {"prompt": [1], "temperature": -1},
+                {"prompt": [1], "logprobs": MAX_LOGPROBS + 1},
+                {"prompt": [1], "bogus": 1},
+                {"prompt": list(range(cache_width + 1))}):
+        status, resp = await loop.run_in_executor(
+            None, _http_json, port, "POST", "/v1/completions", bad)
+        check(status == 400
+              and resp.get("error", {}).get("type") == "invalid_request_error",
+              f"400 invalid_request_error for {str(bad)[:60]}")
+
+    # ---- 3. full SSE stream: frames well-formed, tokens byte-identical
+    events = await loop.run_in_executor(
+        None, lambda: _sse_stream(port, dict(bodies[2], stream=True)))
+    streamed = [t for e in events for t in e["choices"][0]["token_ids"]]
+    check(streamed == expected[2].token_ids,
+          f"SSE tokens == offline LLM.generate ({streamed})")
+    check(events[-1]["choices"][0]["finish_reason"] == "length",
+          "SSE terminal chunk carries finish_reason")
+
+    # ---- 4. kill the client mid-stream: the server must notice, abort,
+    # and reclaim every page (quiescent engine)
+    aborted_before = reg.value("engine_requests_aborted_total")
+    kill_body = {"prompt": [3, 1, 4], "max_tokens": 64, "stream": True}
+    events = await loop.run_in_executor(
+        None, lambda: _sse_stream(port, kill_body, kill_after=2))
+    check(len(events) == 2, "client killed after 2 SSE events")
+    h = await _poll_health(
+        port, lambda h: h["in_flight"] == 0 and h["quiescent"],
+        what="abort + quiescence after mid-stream disconnect")
+    check(reg.value("engine_requests_aborted_total") > aborted_before,
+          "disconnect aborted the request engine-side")
+    check(h["kv"]["slots_free"] == args.max_batch, "all KV slots free")
+    check(h["kv"]["pages_in_use"] == 0, "zero leaked KV pages")
+    check(h["decode_jit_traces"] == 1,
+          "decode_jit_traces == 1 across mixed tenants/sampling/logprobs")
+    check(core.is_quiescent(), "engine quiescent after the full smoke")
+
+    # ---- 5. scrape /metrics, validate strictly, persist for CI
+    _, scraped = await loop.run_in_executor(None, _http_json, port, "GET",
+                                            "/metrics")
+    text = scraped["_raw"]
+    from repro.serving.metrics import validate_prometheus_text
+    families = validate_prometheus_text(text)
+    for fam in ("http_requests_total", "http_request_latency_seconds",
+                "http_disconnects_total", "engine_queue_depth",
+                "kv_page_occupancy", "engine_requests_aborted_total",
+                "engine_tenant_admissions_total"):
+        check(fam in families, f"/metrics exposes {fam}")
+    check(reg.value("http_requests_total", method="POST",
+                    path="/v1/completions", code=200) >= 5,
+          "http_requests_total counted the 200s")
+    check(reg.value("http_requests_total", method="POST",
+                    path="/v1/completions", code=400) >= 6,
+          "http_requests_total counted the 400s")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(text)
+        print(f"# wrote {args.metrics_out}")
+
+    await server.stop()
+    if failures:
+        print(f"# SMOKE FAILED: {len(failures)} assertion(s)")
+        return 1
+    print("# smoke OK: live server, byte-identical tokens, clean aborts")
+    return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serving.server",
+        description="OpenAI-compatible HTTP server over EngineCore")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--model", default="opt-125m",
+                    help="smoke-config name (randomly initialized weights)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-width", type=int, default=128)
+    ap.add_argument("--page-w", type=int, default=8,
+                    help="KV page size (0 = contiguous slot pool)")
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--tenant-weight", action="append", default=[],
+                    metavar="NAME=W",
+                    help="DRR weight for a tenant (repeatable)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the self-contained live-server CI gate "
+                         "instead of serving forever")
+    ap.add_argument("--metrics-out", default=None,
+                    help="(--smoke) write the final /metrics scrape here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return asyncio.run(_run_smoke(args))
+    server = build_server(model=args.model, max_batch=args.max_batch,
+                          cache_width=args.cache_width, page_w=args.page_w,
+                          prefill_chunk=args.prefill_chunk,
+                          tenant_weights=_parse_weights(args.tenant_weight),
+                          seed=args.seed)
+    try:
+        asyncio.run(_serve_forever(server, args.host, args.port))
+    except KeyboardInterrupt:
+        print("bye")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

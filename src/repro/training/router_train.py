@@ -12,8 +12,7 @@
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +20,7 @@ import numpy as np
 
 from repro.core.calibration import greedy_topk_for_recall, recall_at_k
 from repro.core.policy import PolarPolicy
-from repro.core.routers import (apply_head_router, apply_mlp_router,
-                                init_head_router, init_mlp_router)
+from repro.core.routers import apply_head_router, apply_mlp_router
 from repro.models import forward, init_routers
 from repro.models.model import _num_groups  # noqa: internal reuse
 from repro.training.losses import bce_with_logits

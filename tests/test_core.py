@@ -1,7 +1,5 @@
 """Unit + property tests for the Polar Sparsity core (routers, selection,
 calibration) — hypothesis drives the system invariants."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

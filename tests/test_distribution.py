@@ -5,7 +5,6 @@ import os
 import subprocess
 import sys
 
-import jax
 import pytest
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))

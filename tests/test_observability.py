@@ -43,8 +43,7 @@ from repro.core import default_policy
 from repro.models import (decode_telemetry_meta, init_params, init_routers,
                           prepare_model_config)
 from repro.serving import (LLM, Engine, MetricsRegistry, SamplingParams,
-                           TraceRecorder, make_serving_jits,
-                           validate_prometheus_text)
+                           TraceRecorder, validate_prometheus_text)
 from repro.serving.metrics import DEFAULT_LATENCY_BUCKETS
 from repro.serving.metrics import main as metrics_main
 
